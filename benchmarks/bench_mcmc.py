@@ -1,0 +1,49 @@
+"""Paper Table 1: MCMC ideal-point estimation — task-farm scaling.
+
+The paper reports wall time vs CPUs at ~90% parallel efficiency for 5
+legislatures.  On one CPU device we measure the framework analogue: chains
+run (a) serially (the paper's 1-CPU column), (b) through the vmapped
+task farm (the single-device parallel path), and report the layer's speedup
+plus per-legislature problem scaling (members x votes, like Table 1 rows).
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+from repro.apps import mcmc
+
+
+# legislature sizes scaled down from the paper's Table 1 (members, votes)
+LEGISLATURES = [
+    ("EP1-like", 55, 80),
+    ("EP2-like", 64, 120),
+    ("EP3-like", 60, 160),
+]
+
+
+def run(csv_rows: list):
+    for name, n_leg, n_votes in LEGISLATURES:
+        y, truth = mcmc.make_synthetic_votes(
+            jax.random.PRNGKey(1), n_leg=n_leg, n_votes=n_votes)
+        prob = mcmc.IdealPointProblem(y, n_chains=4, n_iter=100, burn=50)
+
+        # serial (paper's 1-CPU baseline)
+        t0 = time.perf_counter()
+        mcmc.solve_serial(prob)
+        t_serial = time.perf_counter() - t0
+
+        # vmapped task farm (single-device parallel path), incl. compile
+        prob2 = mcmc.IdealPointProblem(y, n_chains=4, n_iter=100, burn=50)
+        mcmc.solve_vmap(prob2)          # warmup/compile
+        t0 = time.perf_counter()
+        res = mcmc.solve_vmap(prob2)
+        t_par = time.perf_counter() - t0
+
+        corr = abs(np.corrcoef(np.asarray(res["x_mean"]),
+                               np.asarray(truth["x"]))[0, 1])
+        csv_rows.append(
+            f"mcmc_{name},{t_par*1e6:.0f},serial_s={t_serial:.3f};"
+            f"farm_s={t_par:.3f};speedup={t_serial/t_par:.2f};corr={corr:.3f}")

@@ -1,0 +1,48 @@
+"""Serving throughput: continuous batching vs sequential request handling.
+
+The engine's win (the population-dynamics analogy from DESIGN.md §3) is slot
+reuse: decode ticks amortize across live requests.  Reported: tokens/s with
+max_slots=1 (sequential) vs max_slots=4 (continuous batching) on the smoke
+dense model — the ratio is the batching speedup the slot machinery delivers.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import smoke_config
+from repro.models.api import build_model
+from repro.serve import ServeEngine
+
+
+def _throughput(model, params, slots: int, n_req: int = 8,
+                max_new: int = 16):
+    eng = ServeEngine(model, params, max_slots=slots, max_len=128)
+    rng = np.random.default_rng(0)
+    for _ in range(n_req):
+        eng.submit(rng.integers(0, model.cfg.vocab, 8), max_new_tokens=max_new)
+    t0 = time.perf_counter()
+    done = eng.run_until_drained()
+    dt = time.perf_counter() - t0
+    toks = sum(len(r.output) for r in done)
+    return toks / dt, eng.stats["ticks"], toks
+
+
+def run(csv_rows: list):
+    cfg = smoke_config("qwen2-7b").replace(remat="none")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    _throughput(model, params, 2, n_req=2, max_new=4)   # warm compiles
+
+    seq, seq_ticks, toks = _throughput(model, params, slots=1)
+    cb, cb_ticks, _ = _throughput(model, params, slots=4)
+    csv_rows.append(f"serve_sequential,{1e6/seq:.0f},tok_per_s={seq:.1f};"
+                    f"decode_ticks={seq_ticks}")
+    # On memory-bound accelerators a decode tick's cost is ~flat in batch, so
+    # the tick ratio is the real continuous-batching speedup; CPU tok/s is
+    # compute-bound and does not show it.
+    csv_rows.append(f"serve_continuous4,{1e6/cb:.0f},tok_per_s={cb:.1f};"
+                    f"decode_ticks={cb_ticks};"
+                    f"ticks_saved={seq_ticks/cb_ticks:.2f}x")

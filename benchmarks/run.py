@@ -1,0 +1,41 @@
+"""Benchmark harness — one module per paper table/figure + framework benches.
+
+Prints ``name,us_per_call,derived`` CSV rows (and tees to results/bench.csv).
+
+  bench_mcmc     paper Table 1 (task-farm MCMC)
+  bench_dmc      paper Table 2 (DMC + dynamic load balancing, scaled-size)
+  bench_schwarz  paper Table 3 (Boussinesq additive Schwarz speedup)
+  bench_overhead paper §1/§5 (function-centric layer overhead)
+  bench_kernels  Pallas kernel suite (traffic-saving ratios)
+  bench_serve    continuous-batching engine throughput
+"""
+import os
+import sys
+import traceback
+
+
+def main() -> None:
+    only = sys.argv[1] if len(sys.argv) > 1 else None
+    from benchmarks import (bench_dmc, bench_kernels, bench_mcmc,
+                            bench_overhead, bench_schwarz, bench_serve)
+    mods = {"mcmc": bench_mcmc, "dmc": bench_dmc, "schwarz": bench_schwarz,
+            "overhead": bench_overhead, "kernels": bench_kernels,
+            "serve": bench_serve}
+    rows = ["name,us_per_call,derived"]
+    for name, mod in mods.items():
+        if only and name != only:
+            continue
+        try:
+            mod.run(rows)
+        except Exception as e:
+            traceback.print_exc()
+            rows.append(f"{name},FAILED,{type(e).__name__}: {e}")
+    out = "\n".join(rows)
+    print(out)
+    os.makedirs("results", exist_ok=True)
+    with open("results/bench.csv", "w") as f:
+        f.write(out + "\n")
+
+
+if __name__ == '__main__':
+    main()

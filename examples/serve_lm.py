@@ -1,0 +1,40 @@
+"""Continuous-batching serving demo: requests of different lengths stream
+through fixed decode slots (the paper's dynamic-population pattern).
+
+    PYTHONPATH=src python examples/serve_lm.py
+"""
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import smoke_config
+from repro.models.api import build_model
+from repro.serve import ServeEngine
+
+cfg = smoke_config("qwen2-7b").replace(remat="none")
+model = build_model(cfg)
+params = model.init(jax.random.PRNGKey(0))
+
+eng = ServeEngine(model, params, max_slots=4, max_len=128)
+rng = np.random.default_rng(0)
+
+print("submitting 12 requests with prompt lengths 4..40...")
+for i in range(12):
+    plen = int(rng.integers(4, 40))
+    eng.submit(rng.integers(0, cfg.vocab, plen),
+               max_new_tokens=int(rng.integers(8, 24)))
+
+t0 = time.perf_counter()
+done = eng.run_until_drained()
+dt = time.perf_counter() - t0
+
+toks = sum(len(r.output) for r in done)
+ttft = [r.first_token_at - r.submitted_at for r in done]
+print(f"{len(done)} requests, {toks} tokens in {dt:.2f}s "
+      f"({toks/dt:.1f} tok/s on CPU)")
+print(f"decode ticks: {eng.stats['ticks']} "
+      f"(vs {toks} for one-at-a-time decoding)")
+print(f"slots reused across {eng.stats['prefills']} prefills; "
+      f"mean TTFT {1e3*np.mean(ttft):.0f}ms")
+print("sample output:", done[0].output)

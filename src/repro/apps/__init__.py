@@ -1,0 +1,8 @@
+"""The paper's §4 applications, implemented end-to-end in JAX:
+
+* :mod:`repro.apps.mcmc`       — §4.1 ideal-point MCMC (task farm, Table 1)
+* :mod:`repro.apps.dmc`        — §4.2 diffusion Monte Carlo with dynamic load
+                                 balancing (Table 2)
+* :mod:`repro.apps.boussinesq` — §4.3 Boussinesq waves via additive Schwarz
+                                 (Table 3)
+"""

@@ -1,0 +1,143 @@
+"""Ideal-point MCMC (paper §4.1 / Appendix A) — the task-farm application.
+
+The Clinton–Jackman–Rivers hierarchical probit model:
+
+    P(y_ij = 1) = Phi(beta_j x_i - alpha_j)
+
+estimated by Gibbs sampling with truncated-normal data augmentation:
+
+  (i)   y*_ij | params  ~ N(beta_j x_i - alpha_j, 1) truncated by the vote
+  (ii)  (beta_j, alpha_j) | x, y*  ~ 2x2 Bayesian regression per vote
+  (iii) x_i | beta, alpha, y*      ~ 1D Bayesian regression per legislator
+
+The paper farms *chains* out as independent ``func`` evaluations (its R
+``ideal`` calls); here each chain is one task in
+:func:`repro.core.functional.parallel_solve_problem` (or ``vmap`` on one
+device) — the replacement of the paper's rpy-wrapped engine by a JAX-native
+one, with the same initialize/func/finalize decomposition.
+
+Class :class:`IdealPointProblem` mirrors the paper's ``PIPE`` class: the
+constructor holds the data, and ``initialize`` / ``func`` / ``finalize`` have
+exactly the generic signatures ``solve_problem`` demands.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.functional import solve_problem, vmap_solve_problem
+
+
+def make_synthetic_votes(key, n_leg: int, n_votes: int):
+    """Roll-call data from known ideal points (ground truth returned)."""
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    x = jax.random.normal(k1, (n_leg,))
+    beta = jax.random.normal(k2, (n_votes,)) * 1.5
+    alpha = jax.random.normal(k3, (n_votes,)) * 0.5
+    p = jax.scipy.stats.norm.cdf(beta[None, :] * x[:, None] - alpha[None, :])
+    y = (jax.random.uniform(k4, p.shape) < p).astype(jnp.float32)
+    return y, {"x": x, "beta": beta, "alpha": alpha}
+
+
+def _trunc_normal(key, mu, positive):
+    """Sample N(mu,1) truncated to >0 (positive=True) or <0, via inverse CDF."""
+    u = jax.random.uniform(key, mu.shape, minval=1e-6, maxval=1 - 1e-6)
+    lo = jax.scipy.stats.norm.cdf(-mu)            # P(z < -mu) i.e. y* < 0
+    u_pos = lo + u * (1 - lo)                     # map into (lo, 1)
+    u_neg = u * lo                                # map into (0, lo)
+    uu = jnp.where(positive, u_pos, u_neg)
+    return mu + jax.scipy.special.ndtri(jnp.clip(uu, 1e-7, 1 - 1e-7))
+
+
+@partial(jax.jit, static_argnames=("n_iter", "burn", "thin"))
+def run_chain(key, y, *, n_iter: int = 200, burn: int = 100, thin: int = 2,
+              tau2: float = 25.0):
+    """One Gibbs chain.  y: (n, m) in {0,1}.  Returns posterior-mean summary
+    and kept draws of x."""
+    n, m = y.shape
+    pos = y > 0.5
+
+    def gibbs(carry, key):
+        x, beta, alpha = carry
+        k1, k2, k3 = jax.random.split(key, 3)
+        mu = beta[None, :] * x[:, None] - alpha[None, :]
+        ystar = _trunc_normal(k1, mu, pos)                        # (n, m)
+
+        # (beta_j, alpha_j): design X = [x, -1] (n x 2), ridge prior tau2
+        X = jnp.stack([x, -jnp.ones_like(x)], axis=1)             # (n, 2)
+        XtX = X.T @ X + jnp.eye(2) / tau2                         # (2, 2)
+        Xty = X.T @ ystar                                         # (2, m)
+        chol = jnp.linalg.cholesky(XtX)
+        mean = jax.scipy.linalg.cho_solve((chol, True), Xty)      # (2, m)
+        eps = jax.random.normal(k2, (2, m))
+        draw = mean + jax.scipy.linalg.solve_triangular(
+            chol.T, eps, lower=False)
+        beta, alpha = draw[0], draw[1]
+
+        # x_i: regression of (y*_i + alpha) on beta
+        prec = beta @ beta + 1.0 / tau2
+        mean_x = (ystar + alpha[None, :]) @ beta / prec
+        x = mean_x + jax.random.normal(k3, (n,)) / jnp.sqrt(prec)
+        # identification: anchor location/scale
+        x = (x - x.mean()) / jnp.maximum(x.std(), 1e-6)
+        return (x, beta, alpha), x
+
+    k0, kscan = jax.random.split(key)
+    x0 = jax.random.normal(k0, (n,)) * 0.1
+    init = (x0, jnp.zeros((m,)), jnp.zeros((m,)))
+    _, draws = jax.lax.scan(gibbs, init, jax.random.split(kscan, n_iter))
+    kept = draws[burn::thin]                                      # (K, n)
+    return {"x_mean": kept.mean(0), "x_draws": kept}
+
+
+@dataclasses.dataclass
+class IdealPointProblem:
+    """The paper's ``PIPE`` class, JAX edition (initialize/func/finalize)."""
+    y: jnp.ndarray
+    n_chains: int = 4
+    n_iter: int = 200
+    burn: int = 100
+    seed: int = 0
+
+    def initialize(self):
+        keys = jax.random.split(jax.random.PRNGKey(self.seed), self.n_chains)
+        # stacked task pytree (leading axis = tasks), vmap/shard-ready
+        return {"key": keys}
+
+    def func(self, task):
+        return run_chain(task["key"], self.y, n_iter=self.n_iter,
+                         burn=self.burn)
+
+    def finalize(self, output):
+        """Combine chains: posterior mean + split-R-hat convergence check."""
+        draws = output["x_draws"]                 # (chains, K, n)
+        x_mean = draws.mean(axis=(0, 1))
+        # align chain signs (reflection invariance) before R-hat
+        ref = draws[0].mean(0)
+        sign = jnp.sign(jnp.einsum("ckn,n->c", draws, ref))
+        draws = draws * sign[:, None, None]
+        W = draws.var(axis=1).mean(0)             # within-chain
+        B = draws.mean(axis=1).var(0)             # between-chain
+        K = draws.shape[1]
+        rhat = jnp.sqrt((W * (K - 1) / K + B) / jnp.maximum(W, 1e-12))
+        self.result = {"x_mean": x_mean, "rhat": rhat}
+        return self.result
+
+
+def solve_serial(problem: IdealPointProblem):
+    """Paper's serial ``solve_problem`` driving the same three functions."""
+    tasks = problem.initialize()
+    keys = tasks["key"]
+    outs = [problem.func({"key": k}) for k in keys]
+    stacked = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *outs)
+    return problem.finalize(stacked)
+
+
+def solve_vmap(problem: IdealPointProblem):
+    """Single-device data-parallel chains (VPU/MXU inner parallelism)."""
+    return vmap_solve_problem(problem.initialize, problem.func,
+                              problem.finalize)

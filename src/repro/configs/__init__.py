@@ -1,0 +1,2 @@
+from repro.configs.base import ModelConfig, ShapeConfig, SHAPES
+from repro.configs.registry import get_config, list_archs, smoke_config

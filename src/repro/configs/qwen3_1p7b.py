@@ -1,0 +1,13 @@
+"""qwen3-1.7b — dense, GQA, qk_norm [hf:Qwen/Qwen3-8B family]."""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen3-1.7b", family="dense",
+    n_layers=28, d_model=2048, n_heads=16, n_kv_heads=8, head_dim=128,
+    d_ff=6144, vocab=151936,
+    qkv_bias=False, qk_norm=True, rope_theta=1e6,
+)
+
+SMOKE = CONFIG.replace(
+    n_layers=2, d_model=64, n_heads=4, n_kv_heads=2, head_dim=16,
+    d_ff=128, vocab=512, tp=1, dtype="float32", kv_chunk=32)

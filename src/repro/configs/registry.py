@@ -1,0 +1,33 @@
+"""Architecture registry: ``--arch <id>`` resolution."""
+from __future__ import annotations
+
+import importlib
+
+_MODULES = {
+    "qwen2-7b": "repro.configs.qwen2_7b",
+    "qwen3-1.7b": "repro.configs.qwen3_1p7b",
+    "gemma3-4b": "repro.configs.gemma3_4b",
+    "qwen2.5-14b": "repro.configs.qwen2p5_14b",
+    "arctic-480b": "repro.configs.arctic_480b",
+    "qwen3-moe-235b-a22b": "repro.configs.qwen3_moe_235b",
+    "zamba2-7b": "repro.configs.zamba2_7b",
+    "llava-next-mistral-7b": "repro.configs.llava_next_mistral_7b",
+    "rwkv6-3b": "repro.configs.rwkv6_3b",
+    "whisper-tiny": "repro.configs.whisper_tiny",
+}
+
+
+def list_archs() -> list[str]:
+    return list(_MODULES)
+
+
+def get_config(arch: str):
+    if arch not in _MODULES:
+        raise KeyError(f"unknown arch {arch!r}; known: {sorted(_MODULES)}")
+    return importlib.import_module(_MODULES[arch]).CONFIG
+
+
+def smoke_config(arch: str):
+    if arch not in _MODULES:
+        raise KeyError(f"unknown arch {arch!r}; known: {sorted(_MODULES)}")
+    return importlib.import_module(_MODULES[arch]).SMOKE

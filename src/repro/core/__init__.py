@@ -1,0 +1,39 @@
+"""Core function-centric parallelization layer (the paper's contribution).
+
+The generic machinery mirrors the paper's functions one-to-one:
+
+=======================================  =========================================
+Paper (Python + MPI)                     This package (JAX SPMD)
+=======================================  =========================================
+``solve_problem``                        :func:`repro.core.functional.solve_problem`
+``parallel_solve_problem``               :func:`repro.core.functional.parallel_solve_problem`
+``simple_partitioning``                  :func:`repro.core.partition.simple_partitioning`
+``get_subproblem_input_args``            :func:`repro.core.partition.get_subproblem_input_args`
+``collect_subproblem_output_args``       :func:`repro.core.collect.collect_subproblem_output_args`
+``time_integration``                     :func:`repro.core.time_integration.time_integration`
+``parallel_time_integration``            :func:`repro.core.time_integration.parallel_time_integration`
+``dynamic_load_balancing``               :func:`repro.core.load_balance.dynamic_load_balancing`
+``find_optimal_workload``                :func:`repro.core.load_balance.find_optimal_workload`
+``redistribute_work``                    :func:`repro.core.load_balance.redistribute_work`
+``additive_Schwarz_iterations``          :func:`repro.core.schwarz.additive_schwarz_iterations`
+``simple_convergence_test``              :func:`repro.core.schwarz.simple_convergence_test`
+send/recv/all_gather function arguments  :class:`repro.core.comm.Comm`
+=======================================  =========================================
+"""
+from repro.core.comm import Comm
+from repro.core.functional import solve_problem, parallel_solve_problem, vmap_solve_problem
+from repro.core.partition import simple_partitioning, get_subproblem_input_args, pad_to_multiple
+from repro.core.collect import collect_subproblem_output_args
+from repro.core.time_integration import time_integration, parallel_time_integration
+from repro.core.load_balance import (
+    find_optimal_workload, redistribute_work, dynamic_load_balancing, balanced_counts)
+from repro.core.schwarz import additive_schwarz_iterations, simple_convergence_test, halo_exchange
+
+__all__ = [
+    "Comm", "solve_problem", "parallel_solve_problem", "vmap_solve_problem",
+    "simple_partitioning", "get_subproblem_input_args", "pad_to_multiple",
+    "collect_subproblem_output_args", "time_integration", "parallel_time_integration",
+    "find_optimal_workload", "redistribute_work", "dynamic_load_balancing",
+    "balanced_counts", "additive_schwarz_iterations", "simple_convergence_test",
+    "halo_exchange",
+]

@@ -1,0 +1,161 @@
+"""Dynamic load balancing — the paper's §3.2 machinery, TPU-adapted.
+
+Two regimes:
+
+* **Host level (paper-faithful)**: :func:`find_optimal_workload` implements the
+  paper's timing-proportional redistribution (workers that measured slower get
+  fewer items), and :func:`redistribute_plan` computes the paper's iterative
+  max→min transfer schedule.  Used by the heterogeneous task farm and the
+  serving batcher.
+
+* **SPMD level (TPU-native)**: populations live in fixed-capacity, compacted
+  arrays (`data[:count]` are live).  :func:`redistribute_work` equalizes counts
+  across a mesh axis with a deterministic all-gather + global re-slice — the
+  static-shape replacement for the paper's pickled ``cut_slice``/``paste_slice``
+  messages.  :func:`dynamic_load_balancing` wraps it with the paper's
+  threshold test.
+
+The same capacity/target math drives the MoE router (experts = processors,
+tokens = walkers): see :mod:`repro.models.moe`.
+"""
+from __future__ import annotations
+
+from typing import Callable
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core.comm import Comm
+
+
+# ---------------------------------------------------------------------------
+# Paper-faithful host-side functions
+# ---------------------------------------------------------------------------
+
+def find_optimal_workload(timing_list, current_work_per_proc):
+    """Verbatim port of the paper's implementation (numpy).
+
+    ``C = total_work / sum(1/t_i)``; rank i gets ``C / t_i`` items, remainders
+    distributed greedily by largest fractional part.
+    """
+    timing_list = np.asarray(timing_list, dtype=np.float64)
+    current_work_per_proc = np.asarray(current_work_per_proc, dtype=np.int64)
+    total_work = int(current_work_per_proc.sum())
+    C = total_work / np.sum(1.0 / timing_list)
+    tmp = C / timing_list
+    rebalanced = tmp.astype(np.int64)
+    remainders = tmp - rebalanced
+    while rebalanced.sum() < total_work:
+        k = int(np.argmax(remainders))
+        rebalanced[k] += 1
+        remainders[k] = 0
+    return rebalanced
+
+
+def redistribute_plan(work_per_proc, rebalanced_work):
+    """Paper's transfer schedule: repeatedly move surplus from the most
+    overloaded rank to the most underloaded.  Returns [(src, dst, n), ...]."""
+    diff = np.asarray(work_per_proc, np.int64) - np.asarray(rebalanced_work, np.int64)
+    plan: list[tuple[int, int, int]] = []
+    while diff.any():
+        src = int(np.argmax(diff))
+        dst = int(np.argmin(diff))
+        n = int(min(diff[src], -diff[dst]))
+        if n <= 0:
+            break
+        plan.append((src, dst, n))
+        diff[src] -= n
+        diff[dst] += n
+    return plan
+
+
+# ---------------------------------------------------------------------------
+# SPMD count-based rebalancing
+# ---------------------------------------------------------------------------
+
+def balanced_counts(total, n):
+    """Target per-shard counts (±1 rule), as a jnp array of shape (n,)."""
+    base = total // n
+    extra = total - base * n
+    return base + (jnp.arange(n) < extra).astype(base.dtype)
+
+
+def redistribute_work(local_data, local_count, comm: Comm,
+                      target_counts=None):
+    """Equalize a compacted fixed-capacity population across ``comm.axis``.
+
+    Args:
+      local_data: pytree; every leaf has shape (capacity, ...) and live items
+        occupy slots [0, local_count).
+      local_count: int32 scalar of live items on this shard.
+      comm: :class:`Comm` bound to the population axis.
+      target_counts: optional (n,) target; defaults to balanced ±1 split.
+
+    Returns (new_local_data, new_local_count).  Deterministic: the global
+    rank-major order of live items is preserved (matches the paper's
+    rank-ordered cut/paste semantics).
+    """
+    n = comm.size()
+    rank = comm.rank()
+    count_shape = jnp.shape(local_count)
+    local_count = jnp.asarray(local_count, jnp.int32).reshape(())
+    counts = comm.all_gather(local_count)  # (n,)
+    counts = counts.reshape(n)
+    total = counts.sum()
+    if target_counts is None:
+        target_counts = balanced_counts(total, n).astype(jnp.int32)
+    src_offsets = jnp.concatenate([jnp.zeros(1, jnp.int32), jnp.cumsum(counts)[:-1]])
+    dst_offsets = jnp.concatenate([jnp.zeros(1, jnp.int32),
+                                   jnp.cumsum(target_counts)[:-1]])
+
+    my_target = target_counts[rank]
+    my_dst_off = dst_offsets[rank]
+
+    def reslice(leaf):
+        cap = leaf.shape[0]
+        gathered = comm.all_gather(leaf)           # (n, cap, ...)
+        # global index of my new slot s is my_dst_off + s; its source shard r
+        # satisfies src_offsets[r] <= g < src_offsets[r] + counts[r].
+        s = jnp.arange(cap, dtype=jnp.int32)
+        g = my_dst_off + s
+        r = jnp.clip(jnp.searchsorted(src_offsets, g, side="right") - 1, 0, n - 1)
+        j = g - src_offsets[r]
+        valid = s < my_target
+        j = jnp.where(valid, jnp.clip(j, 0, cap - 1), 0)
+        out = gathered[r, j]
+        # zero out dead slots so padding stays inert
+        mask_shape = (cap,) + (1,) * (out.ndim - 1)
+        return jnp.where(valid.reshape(mask_shape), out, jnp.zeros_like(out))
+
+    new_data = jax.tree_util.tree_map(reslice, local_data)
+    return new_data, my_target.astype(jnp.int32).reshape(count_shape)
+
+
+def dynamic_load_balancing(local_data, local_count, comm: Comm,
+                           threshold_factor: float = 1.1):
+    """Paper's ``dynamic_load_balancing``: rebalance only when
+    ``max_count > threshold_factor * min_count`` (count-driven on TPU; see
+    DESIGN.md §2 for why wall-clock balancing stays at the host level).
+
+    Returns (data, count, counts_per_shard, did_rebalance).
+    """
+    n = comm.size()
+    count_shape = jnp.shape(local_count)
+    counts = comm.all_gather(
+        jnp.asarray(local_count, jnp.int32).reshape(())).reshape(n)
+    cmax = counts.max()
+    cmin = counts.min()
+    need = cmax.astype(jnp.float32) > threshold_factor * jnp.maximum(
+        cmin.astype(jnp.float32), 1.0)
+
+    def _do(_):
+        return redistribute_work(local_data, local_count, comm)
+
+    def _skip(_):
+        return local_data, jnp.asarray(local_count, jnp.int32).reshape(count_shape)
+
+    data, count = jax.lax.cond(need, _do, _skip, operand=None)
+    new_counts = comm.all_gather(
+        jnp.asarray(count).reshape(())).reshape(n)
+    return data, count, new_counts, need

@@ -1,0 +1,67 @@
+"""Work partitioning — the paper's ``simple_partitioning`` and
+``get_subproblem_input_args`` adapted to static SPMD sharding.
+
+The ±1 balancing rule is kept verbatim from the paper: ``length`` items over
+``num_procs`` parts gives ``length // num_procs`` each, with the first
+``length % num_procs`` parts getting one extra.
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+
+def simple_partitioning(length: int, num_procs: int) -> np.ndarray:
+    """Paper-faithful: balanced part sizes (numpy int array of len num_procs)."""
+    sublengths = np.full(num_procs, length // num_procs, dtype=np.int64)
+    sublengths[: length % num_procs] += 1
+    return sublengths
+
+
+def partition_offsets(length: int, num_procs: int) -> np.ndarray:
+    """Start offset of each part (len num_procs + 1)."""
+    sizes = simple_partitioning(length, num_procs)
+    return np.concatenate([[0], np.cumsum(sizes)])
+
+
+def get_subproblem_input_args(input_args: list, my_rank: int, num_procs: int) -> list:
+    """Paper-faithful host-side task-list split (works on any Python list)."""
+    offs = partition_offsets(len(input_args), num_procs)
+    return input_args[offs[my_rank]: offs[my_rank + 1]]
+
+
+def pad_to_multiple(n: int, m: int) -> int:
+    """Smallest multiple of ``m`` that is >= ``n``."""
+    return ((n + m - 1) // m) * m
+
+
+def pad_leading(tree, target: int, fill=0):
+    """Pad every leaf's leading axis to ``target`` rows; returns (tree, valid mask)."""
+    n = jax.tree_util.tree_leaves(tree)[0].shape[0]
+    pad = target - n
+    if pad < 0:
+        raise ValueError(f"cannot pad {n} down to {target}")
+
+    def _pad(x):
+        widths = [(0, pad)] + [(0, 0)] * (x.ndim - 1)
+        return jnp.pad(x, widths, constant_values=fill)
+
+    mask = jnp.arange(target) < n
+    return jax.tree_util.tree_map(_pad, tree), mask
+
+
+def batch_sharding(mesh, *, batch_axes=("data",), rest_ndim: int = 1) -> NamedSharding:
+    """NamedSharding for a [batch, ...] array: batch over ``batch_axes``."""
+    spec = P(batch_axes, *([None] * rest_ndim))
+    return NamedSharding(mesh, spec)
+
+
+def shard_tasks(tree, mesh, axis="data"):
+    """Shard a stacked task pytree's leading axis over ``axis`` (device_put)."""
+    def _shard(x):
+        spec = P(axis, *([None] * (x.ndim - 1)))
+        return jax.device_put(x, NamedSharding(mesh, spec))
+
+    return jax.tree_util.tree_map(_shard, tree)

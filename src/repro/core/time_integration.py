@@ -1,0 +1,77 @@
+"""Generic time-integration loops — the paper's §3.2.
+
+:func:`time_integration` is the paper's serial loop, verbatim.
+
+:func:`parallel_time_integration` is the SPMD adaptation: the per-step body
+(``do_timestep``) is a jitted SPMD program over a device mesh; the host loop
+plays the role of the paper's rank-0 orchestration (timing, load-balance
+trigger, ``finalize_timestep`` bookkeeping, and fault hooks).  The production
+trainer (:mod:`repro.train.trainer`) is this function with
+``do_timestep = train_step`` — the paper's pattern used as the spine of the
+training loop.
+"""
+from __future__ import annotations
+
+import time
+from typing import Any, Callable, Optional
+
+import jax
+
+
+def time_integration(initialize: Callable, do_timestep: Callable,
+                     finalize: Callable):
+    """Paper-faithful serial loop (walkers = any object with __len__ and
+    finalize_timestep)."""
+    walkers, timesteps = initialize()
+    output = []
+    for _ in range(timesteps):
+        old_len = len(walkers)
+        output.append(do_timestep(walkers))
+        walkers.finalize_timestep(old_len, len(walkers))
+    return finalize(output)
+
+
+def parallel_time_integration(
+    initialize: Callable[[], tuple[Any, int]],
+    do_timestep: Callable[[Any], tuple[Any, Any]],
+    finalize: Callable[[list], Any],
+    *,
+    finalize_timestep: Optional[Callable[[Any, int, Any], Any]] = None,
+    on_step_end: Optional[Callable[[int, Any, dict], None]] = None,
+    should_stop: Optional[Callable[[int, Any], bool]] = None,
+):
+    """Generic host loop driving a jitted SPMD step.
+
+    Args:
+      initialize: () -> (state, timesteps).  ``state`` is a device-resident
+        pytree (already sharded over the mesh).
+      do_timestep: (state) -> (new_state, observables).  Typically a
+        ``jax.jit`` with donated state.
+      finalize: (list of host observables) -> result, run once at the end
+        (paper's rank-0 finalize).
+      finalize_timestep: optional (state, step, observables) -> state hook
+        (paper's ``walkers.finalize_timestep``; e.g. LR/ckpt bookkeeping).
+      on_step_end: optional host callback (step, observables, stats) — used by
+        the trainer for checkpoints/metrics/fault handling.
+      should_stop: optional early-exit predicate.
+
+    Returns (finalize result, stats dict with per-step host timings).
+    """
+    state, timesteps = initialize()
+    output = []
+    timings = []
+    for step in range(timesteps):
+        t0 = time.perf_counter()
+        state, obs = do_timestep(state)
+        obs = jax.device_get(obs)
+        dt = time.perf_counter() - t0
+        timings.append(dt)
+        output.append(obs)
+        if finalize_timestep is not None:
+            state = finalize_timestep(state, step, obs)
+        if on_step_end is not None:
+            on_step_end(step, obs, {"step_time": dt})
+        if should_stop is not None and should_stop(step, obs):
+            break
+    result = finalize(output)
+    return result, {"timings": timings, "state": state}

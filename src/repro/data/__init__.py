@@ -1,0 +1,2 @@
+from repro.data.pipeline import (SyntheticTask, make_batch_fn, make_data_iter,
+                                 host_shard_batch)

@@ -1,0 +1,120 @@
+"""Deterministic synthetic data pipeline, sharded at birth.
+
+Design goals (the same ones a real cluster loader has):
+
+* **Deterministic + restartable**: batch ``i`` is a pure function of
+  ``(seed, i)`` — restoring a checkpoint at step ``i`` reproduces the exact
+  stream with no loader state to checkpoint.
+* **Sharded at birth**: batches are *generated inside jit* with
+  ``out_shardings`` matching the train step's expected input sharding, so no
+  host->device broadcast of the global batch ever happens (on a real pod each
+  host generates only its addressable shard — same code path via GSPMD).
+* **Learnable**: tokens follow a noisy affine bigram chain
+  (``next = (31 * prev + 7) mod V`` with prob. 0.9, uniform otherwise), so a
+  real model trained on it shows a decreasing loss (used by the end-to-end
+  example and the trainer integration test).
+
+Modality stubs per the assignment brief: VLM batches carry precomputed patch
+embeddings, audio batches precomputed frame embeddings (deterministic
+projections of a class id, so they are informative features, not noise).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterator, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.mesh.axes import AxisRules, logical_to_sharding
+
+
+@dataclasses.dataclass(frozen=True)
+class SyntheticTask:
+    """A deterministic synthetic "dataset" for one (arch, shape) cell."""
+    cfg: ModelConfig
+    batch: int
+    seq_len: int
+    seed: int = 0
+    noise: float = 0.1
+
+    def _chain(self, key, B, S, vocab):
+        """Noisy affine bigram chain — learnable structure."""
+        k0, k1, k2 = jax.random.split(key, 3)
+        start = jax.random.randint(k0, (B,), 0, vocab)
+        flip = jax.random.uniform(k1, (B, S)) < self.noise
+        rand = jax.random.randint(k2, (B, S), 0, vocab)
+
+        def step(prev, xs):
+            f, r = xs
+            nxt = jnp.where(f, r, (31 * prev + 7) % vocab)
+            return nxt, nxt
+
+        _, toks = jax.lax.scan(step, start, (flip.T, rand.T))
+        return toks.T                                       # (B, S)
+
+    def batch_at(self, step: int) -> dict:
+        """Pure function (seed, step) -> batch pytree (host/jit agnostic)."""
+        cfg = self.cfg
+        key = jax.random.fold_in(jax.random.PRNGKey(self.seed), step)
+        B = self.batch
+
+        if cfg.family == "vlm":
+            I = cfg.n_image_tokens
+            S_txt = self.seq_len - I
+            toks = self._chain(key, B, S_txt + 1, cfg.vocab)
+            k_img = jax.random.fold_in(key, 1)
+            cls = jax.random.randint(k_img, (B, 1, 1), 0, 64)
+            d = cfg.d_model
+            img = jnp.sin(cls * 0.1 + jnp.arange(I)[None, :, None] * 0.01
+                          + jnp.arange(d)[None, None, :] * 0.05)
+            labels = jnp.concatenate(
+                [jnp.full((B, I), -1, jnp.int32), toks[:, 1:]], axis=1)
+            return {"tokens": toks[:, :-1],
+                    "image_embeds": img.astype(jnp.dtype(cfg.dtype)),
+                    "labels": labels}
+
+        if cfg.family == "audio":
+            toks = self._chain(key, B, self.seq_len + 1, cfg.vocab)
+            k_f = jax.random.fold_in(key, 1)
+            cls = jax.random.randint(k_f, (B, 1, 1), 0, 64)
+            F, d = cfg.n_audio_frames, cfg.d_model
+            frames = jnp.sin(cls * 0.1 + jnp.arange(F)[None, :, None] * 0.01
+                             + jnp.arange(d)[None, None, :] * 0.05)
+            return {"frames": frames.astype(jnp.dtype(cfg.dtype)),
+                    "tokens": toks[:, :-1], "labels": toks[:, 1:]}
+
+        toks = self._chain(key, B, self.seq_len + 1, cfg.vocab)
+        return {"tokens": toks[:, :-1], "labels": toks[:, 1:]}
+
+
+def make_batch_fn(task: SyntheticTask, mesh=None, rules: AxisRules | None = None,
+                  batch_specs: Optional[dict] = None):
+    """Jit the generator; with a mesh, outputs are sharded at birth."""
+    if mesh is None:
+        return jax.jit(task.batch_at)
+    shardings = {name: logical_to_sharding(sp.spec, mesh, rules)
+                 for name, sp in batch_specs.items()}
+    return jax.jit(task.batch_at, out_shardings=shardings)
+
+
+def make_data_iter(task: SyntheticTask, mesh=None, rules=None,
+                   batch_specs=None, start_step: int = 0) -> Iterator[dict]:
+    fn = make_batch_fn(task, mesh, rules, batch_specs)
+    step = start_step
+    while True:
+        yield fn(step)
+        step += 1
+
+
+def host_shard_batch(batch: dict, my_rank: int, num_procs: int) -> dict:
+    """Paper-faithful host-side split (``get_subproblem_input_args`` on the
+    batch axis) — used when data arrives as host numpy, e.g. file loaders."""
+    def split(x):
+        n = x.shape[0]
+        per = n // num_procs
+        return x[my_rank * per:(my_rank + 1) * per]
+
+    return jax.tree_util.tree_map(split, batch)

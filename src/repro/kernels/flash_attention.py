@@ -1,0 +1,130 @@
+"""Blocked online-softmax (flash) attention for TPU.
+
+TPU adaptation of the GPU flash-attention idea (DESIGN.md §4): instead of a
+warp-cooperative SRAM tile, blocks are VMEM tiles driven by the sequential
+Pallas grid.  Grid = (B*Hq, Sq/q_blk, Sk/kv_blk) with the KV dimension
+innermost, so the (acc, m, l) running state for one q tile lives in VMEM
+scratch across the KV sweep — the online-softmax recurrence never touches
+HBM.  Q/K/V tiles stream HBM->VMEM via BlockSpec; MXU sees (q_blk x D) @
+(D x kv_blk) contractions with D = head_dim (128/256: hardware-aligned).
+
+Causal/sliding-window masking is applied per tile; fully-masked KV tiles are
+skipped with ``pl.when`` (this is what makes the causal kernel ~2x the naive
+cost model and the gemma3 local layers O(S*window)).
+
+GQA is handled by an index map: query head h reads KV head h // group.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+import jax.experimental.pallas.tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
+                  scale: float, causal: bool, window, q_blk: int,
+                  kv_blk: int, n_kv: int):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q_pos = qi * q_blk + jax.lax.broadcasted_iota(jnp.int32, (q_blk, kv_blk), 0)
+    k_pos = ki * kv_blk + jax.lax.broadcasted_iota(jnp.int32, (q_blk, kv_blk), 1)
+
+    # tile-level skip: any (q,k) pair in this tile live?
+    live = True
+    if causal:
+        live = jnp.logical_and(live, qi * q_blk + q_blk - 1 >= ki * kv_blk)
+    if window is not None:
+        # fully dead only when even the smallest q - largest k >= window
+        live = jnp.logical_and(live,
+                               qi * q_blk - (ki * kv_blk + kv_blk - 1) < window)
+
+    @pl.when(live)
+    def _compute():
+        q = q_ref[0].astype(jnp.float32) * scale            # (q_blk, D)
+        k = k_ref[0].astype(jnp.float32)                    # (kv_blk, D)
+        v = v_ref[0].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+        ok = jnp.ones((q_blk, kv_blk), jnp.bool_)
+        if causal:
+            ok = jnp.logical_and(ok, q_pos >= k_pos)
+        if window is not None:
+            ok = jnp.logical_and(ok, q_pos - k_pos < window)
+        s = jnp.where(ok, s, NEG_INF)
+
+        m_prev = m_ref[...]                                  # (q_blk,)
+        m_new = jnp.maximum(m_prev, s.max(axis=-1))
+        p = jnp.exp(s - m_new[:, None])
+        corr = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * corr + p.sum(axis=-1)
+        pv = jax.lax.dot_general(p, v, (((1,), (0,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+        acc_ref[...] = acc_ref[...] * corr[:, None] + pv
+        m_ref[...] = m_new
+
+    @pl.when(ki == n_kv - 1)
+    def _finish():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0] = (acc_ref[...] / l[:, None]).astype(o_ref.dtype)
+
+
+def flash_attention(q, k, v, *, causal: bool = True, window=None,
+                    q_blk: int = 256, kv_blk: int = 256,
+                    interpret: bool = False):
+    """q: (B,Sq,Hq,D); k,v: (B,Sk,Hkv,D) -> (B,Sq,Hq,D)."""
+    B, Sq, Hq, D = q.shape
+    Sk, Hkv = k.shape[1], k.shape[2]
+    G = Hq // Hkv
+    q_blk = min(q_blk, Sq)
+    kv_blk = min(kv_blk, Sk)
+    assert Sq % q_blk == 0 and Sk % kv_blk == 0, (Sq, q_blk, Sk, kv_blk)
+    n_q, n_kv = Sq // q_blk, Sk // kv_blk
+    scale = D ** -0.5
+
+    # (B,S,H,D) -> (B*H, S, D) head-major streams
+    qh = q.transpose(0, 2, 1, 3).reshape(B * Hq, Sq, D)
+    kh = k.transpose(0, 2, 1, 3).reshape(B * Hkv, Sk, D)
+    vh = v.transpose(0, 2, 1, 3).reshape(B * Hkv, Sk, D)
+
+    def q_index(bh, qi, ki):
+        return (bh, qi, 0)
+
+    def kv_index(bh, qi, ki):
+        b, h = bh // Hq, bh % Hq
+        return (b * Hkv + h // G, ki, 0)
+
+    kernel = functools.partial(
+        _flash_kernel, scale=scale, causal=causal, window=window,
+        q_blk=q_blk, kv_blk=kv_blk, n_kv=n_kv)
+
+    out = pl.pallas_call(
+        kernel,
+        grid=(B * Hq, n_q, n_kv),
+        in_specs=[
+            pl.BlockSpec((1, q_blk, D), q_index),
+            pl.BlockSpec((1, kv_blk, D), kv_index),
+            pl.BlockSpec((1, kv_blk, D), kv_index),
+        ],
+        out_specs=pl.BlockSpec((1, q_blk, D), q_index),
+        out_shape=jax.ShapeDtypeStruct((B * Hq, Sq, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((q_blk, D), jnp.float32),
+            pltpu.VMEM((q_blk,), jnp.float32),
+            pltpu.VMEM((q_blk,), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qh, kh, vh)
+    return out.reshape(B, Hq, Sq, D).transpose(0, 2, 1, 3)

@@ -1,0 +1,48 @@
+"""Jitted public wrappers around the Pallas kernels.
+
+On TPU runtimes the kernels run compiled; everywhere else (this CPU container,
+unit tests) they execute with ``interpret=True`` — same kernel body, Python
+evaluation, bit-compatible blocking — which is how the per-kernel allclose
+tests validate them against :mod:`repro.kernels.ref`.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels import flash_attention as _fa
+from repro.kernels import rmsnorm as _rn
+from repro.kernels import rwkv6_scan as _rw
+from repro.kernels import ssd_scan as _ssd
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "q_blk",
+                                             "kv_blk"))
+def flash_attention(q, k, v, *, causal: bool = True, window=None,
+                    q_blk: int = 256, kv_blk: int = 256):
+    return _fa.flash_attention(q, k, v, causal=causal, window=window,
+                               q_blk=q_blk, kv_blk=kv_blk,
+                               interpret=_interpret())
+
+
+@functools.partial(jax.jit, static_argnames=("eps", "rows_blk"))
+def rmsnorm(x, scale, *, eps: float = 1e-6, rows_blk: int = 256):
+    return _rn.rmsnorm(x, scale, eps=eps, rows_blk=rows_blk,
+                       interpret=_interpret())
+
+
+@functools.partial(jax.jit, static_argnames=("t_blk",))
+def rwkv6_scan(r, k, v, w, u, state0=None, *, t_blk: int = 64):
+    return _rw.rwkv6_scan(r, k, v, w, u, state0, t_blk=t_blk,
+                          interpret=_interpret())
+
+
+@functools.partial(jax.jit, static_argnames=("q_blk",))
+def ssd_scan(xdt, la, Bm, Cm, state0=None, *, q_blk: int = 128):
+    return _ssd.ssd_scan(xdt, la, Bm, Cm, state0, q_blk=q_blk,
+                         interpret=_interpret())

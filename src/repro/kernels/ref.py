@@ -1,0 +1,94 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness ground truth).
+
+Each function is the direct mathematical definition with no blocking tricks —
+tests sweep shapes/dtypes and ``assert_allclose`` kernel vs oracle.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def rmsnorm(x, scale, *, eps: float = 1e-6):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps)
+            * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+def flash_attention(q, k, v, *, causal: bool = True, window=None):
+    """Plain masked softmax attention.  q (B,Sq,Hq,D); k,v (B,Sk,Hkv,D)."""
+    B, Sq, Hq, D = q.shape
+    Sk, Hkv = k.shape[1], k.shape[2]
+    G = Hq // Hkv
+    qg = q.reshape(B, Sq, Hkv, G, D).astype(jnp.float32) * D ** -0.5
+    s = jnp.einsum("bqhgd,bkhd->bhgqk", qg, k.astype(jnp.float32))
+    q_pos = jnp.arange(Sq)
+    k_pos = jnp.arange(Sk)
+    ok = jnp.ones((Sq, Sk), bool)
+    if causal:
+        ok &= q_pos[:, None] >= k_pos[None, :]
+    if window is not None:
+        ok &= (q_pos[:, None] - k_pos[None, :]) < window
+    s = jnp.where(ok, s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgqk,bkhd->bqhgd", p, v.astype(jnp.float32))
+    return o.reshape(B, Sq, Hq, D).astype(q.dtype)
+
+
+def rwkv6_scan(r, k, v, w, u, state0=None):
+    """RWKV-6 time mixing recurrence.
+
+    r,k,w: (B,S,H,K); v: (B,S,H,V); u: (H,K); state0: (B,H,K,V) f32.
+    y_t = r_t . (S_{t-1} + u * k_t v_t^T);  S_t = diag(w_t) S_{t-1} + k_t v_t^T
+    Returns (y (B,S,H,V) f32, final_state).
+    """
+    B, S, H, K = r.shape
+    V = v.shape[-1]
+    if state0 is None:
+        state0 = jnp.zeros((B, H, K, V), jnp.float32)
+    rf, kf, vf, wf = (t.astype(jnp.float32) for t in (r, k, v, w))
+    uf = u.astype(jnp.float32)
+
+    def step(S_, xs):
+        r_t, k_t, v_t, w_t = xs
+        kv = k_t[..., :, None] * v_t[..., None, :]
+        y = jnp.einsum("bhk,bhkv->bhv", r_t, S_ + uf[..., None] * kv)
+        S_ = w_t[..., None] * S_ + kv
+        return S_, y
+
+    xs = (rf.swapaxes(0, 1), kf.swapaxes(0, 1), vf.swapaxes(0, 1),
+          wf.swapaxes(0, 1))
+    state, ys = jax.lax.scan(step, state0, xs)
+    return ys.swapaxes(0, 1), state
+
+
+def ssd_scan(xdt, la, Bm, Cm, state0=None):
+    """Mamba-2 SSD recurrence (per-step, unchunked — the oracle).
+
+    xdt: (B,S,H,P) x*dt;  la: (B,S,H) log-decay;  Bm,Cm: (B,S,N).
+    state_t = exp(la_t) state_{t-1} + B_t (outer) xdt_t
+    y_t = C_t . state_t
+    Returns (y (B,S,H,P) f32, final state (B,H,N,P) f32).
+    """
+    B, S, H, Pd = xdt.shape
+    N = Bm.shape[-1]
+    if state0 is None:
+        state0 = jnp.zeros((B, H, N, Pd), jnp.float32)
+    xf = xdt.astype(jnp.float32)
+    lf = la.astype(jnp.float32)
+    Bf, Cf = Bm.astype(jnp.float32), Cm.astype(jnp.float32)
+
+    def step(state, xs):
+        x_t, l_t, B_t, C_t = xs           # (B,H,P),(B,H),(B,N),(B,N)
+        decay = jnp.exp(l_t)[:, :, None, None]
+        state = state * decay + jnp.einsum("bn,bhp->bhnp", B_t, x_t)
+        y = jnp.einsum("bn,bhnp->bhp", C_t, state)
+        return state, y
+
+    xs = (xf.swapaxes(0, 1), lf.swapaxes(0, 1), Bf.swapaxes(0, 1),
+          Cf.swapaxes(0, 1))
+    state, ys = jax.lax.scan(step, state0, xs)
+    return ys.swapaxes(0, 1), state

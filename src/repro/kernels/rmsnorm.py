@@ -1,0 +1,51 @@
+"""Fused RMSNorm kernel: one pass, row-tiled.
+
+The fusion saves one full HBM round-trip versus the naive
+``mean-square -> rsqrt -> scale`` chain (3 reads + 1 write becomes 1+1):
+at (B*S, d) activations this layer is pure memory-bound, so the kernel's
+value is bandwidth, not FLOPs.  Rows are tiled (rows_blk x d) into VMEM;
+the reduction runs in f32 regardless of the storage dtype.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _rmsnorm_kernel(x_ref, s_ref, o_ref, *, eps: float):
+    x = x_ref[...].astype(jnp.float32)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    y = x * jax.lax.rsqrt(var + eps)
+    o_ref[...] = (y * s_ref[...].astype(jnp.float32)).astype(o_ref.dtype)
+
+
+def rmsnorm(x, scale, *, eps: float = 1e-6, rows_blk: int = 256,
+            interpret: bool = False):
+    """x: (..., d); scale: (d,)."""
+    shape = x.shape
+    d = shape[-1]
+    x2 = x.reshape(-1, d)
+    rows = x2.shape[0]
+    rows_blk = min(rows_blk, rows)
+    pad = (-rows) % rows_blk
+    if pad:
+        x2 = jnp.pad(x2, ((0, pad), (0, 0)))
+    n = x2.shape[0] // rows_blk
+
+    out = pl.pallas_call(
+        functools.partial(_rmsnorm_kernel, eps=eps),
+        grid=(n,),
+        in_specs=[
+            pl.BlockSpec((rows_blk, d), lambda i: (i, 0)),
+            pl.BlockSpec((d,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((rows_blk, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct(x2.shape, x.dtype),
+        interpret=interpret,
+    )(x2, scale)
+    if pad:
+        out = out[:rows]
+    return out.reshape(shape)

@@ -1,0 +1,105 @@
+"""RWKV-6 recurrence kernel: the (K x V) per-head wkv state stays resident in
+VMEM scratch across the whole sequence.
+
+TPU adaptation of the CUDA wkv kernel (which holds the state in registers per
+thread): the Pallas grid is (B*H, S/t_blk) with time innermost, so grid steps
+execute sequentially and the f32 state scratch carries over — the state never
+round-trips to HBM between timesteps (the jnp ``lax.scan`` fallback writes it
+back every step).  Inside a tile the t_blk timesteps run as a ``fori_loop``
+over rows already resident in VMEM.
+
+Layout: r/k/w (BH, S, K), v (BH, S, V), u (H, K); state (K, V) f32 scratch;
+outputs y (BH, S, V) and the final state (BH, K, V).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+import jax.experimental.pallas.tpu as pltpu
+
+
+def _rwkv_kernel(r_ref, k_ref, v_ref, w_ref, u_ref, s0_ref,
+                 y_ref, sT_ref, state_ref, *, t_blk: int, n_t: int):
+    ti = pl.program_id(1)
+
+    @pl.when(ti == 0)
+    def _init():
+        state_ref[...] = s0_ref[0].astype(jnp.float32)
+
+    u = u_ref[0].astype(jnp.float32)                       # (K,)
+
+    def step(t, _):
+        r_t = r_ref[0, t].astype(jnp.float32)              # (K,)
+        k_t = k_ref[0, t].astype(jnp.float32)              # (K,)
+        v_t = v_ref[0, t].astype(jnp.float32)              # (V,)
+        w_t = w_ref[0, t].astype(jnp.float32)              # (K,)
+        kv = k_t[:, None] * v_t[None, :]                   # (K, V)
+        S_ = state_ref[...]
+        y = ((S_ + u[:, None] * kv) * r_t[:, None]).sum(axis=0)   # (V,)
+        y_ref[0, t] = y.astype(y_ref.dtype)
+        state_ref[...] = w_t[:, None] * S_ + kv
+        return 0
+
+    jax.lax.fori_loop(0, t_blk, step, 0)
+
+    @pl.when(ti == n_t - 1)
+    def _finish():
+        sT_ref[0] = state_ref[...]
+
+
+def rwkv6_scan(r, k, v, w, u, state0=None, *, t_blk: int = 64,
+               interpret: bool = False):
+    """r,k,w: (B,S,H,K); v: (B,S,H,V); u: (H,K); state0: (B,H,K,V) f32.
+
+    Returns (y (B,S,H,V) f32, final_state (B,H,K,V) f32).
+    """
+    B, S, H, K = r.shape
+    V = v.shape[-1]
+    if state0 is None:
+        state0 = jnp.zeros((B, H, K, V), jnp.float32)
+    t_blk = min(t_blk, S)
+    assert S % t_blk == 0, (S, t_blk)
+    n_t = S // t_blk
+
+    def bh(x):                                             # (B,S,H,C)->(BH,S,C)
+        return x.transpose(0, 2, 1, 3).reshape(B * H, S, x.shape[-1])
+
+    rh, kh, vh, wh = bh(r), bh(k), bh(v), bh(w)
+    s0 = state0.reshape(B * H, K, V)
+
+    def x_index(b, t):
+        return (b, t, 0)
+
+    def u_index(b, t):
+        return (b % H, 0)
+
+    def s_index(b, t):
+        return (b, 0, 0)
+
+    y, sT = pl.pallas_call(
+        functools.partial(_rwkv_kernel, t_blk=t_blk, n_t=n_t),
+        grid=(B * H, n_t),
+        in_specs=[
+            pl.BlockSpec((1, t_blk, K), x_index),
+            pl.BlockSpec((1, t_blk, K), x_index),
+            pl.BlockSpec((1, t_blk, V), x_index),
+            pl.BlockSpec((1, t_blk, K), x_index),
+            pl.BlockSpec((1, K), u_index),
+            pl.BlockSpec((1, K, V), s_index),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, t_blk, V), x_index),
+            pl.BlockSpec((1, K, V), s_index),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B * H, S, V), jnp.float32),
+            jax.ShapeDtypeStruct((B * H, K, V), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((K, V), jnp.float32)],
+        interpret=interpret,
+    )(rh, kh, vh, wh, u, s0)
+    y = y.reshape(B, H, S, V).transpose(0, 2, 1, 3)
+    return y, sT.reshape(B, H, K, V)

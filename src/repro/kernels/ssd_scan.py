@@ -1,0 +1,121 @@
+"""Mamba-2 SSD kernel: chunked state-space dual form with the inter-chunk
+state carried in VMEM scratch.
+
+TPU adaptation (DESIGN.md §4): the CUDA SSD kernel splits work across warps
+with the state in shared memory; here each (batch, head) runs a sequential
+chunk sweep — grid (B*H, S/Q) with chunks innermost — holding the (N x P)
+state in f32 VMEM scratch.  The *intra*-chunk part is the quadratic
+``(C B^T ∘ decay-mask) @ x`` form: three (Q x N)/(Q x Q)/(Q x P) GEMMs that
+feed the MXU, which is the whole point of the SSD reformulation — the
+recurrence only crosses chunk boundaries.
+
+Layout: xdt (BH, S, P), la (BH, S), Bm/Cm (B, S, N) (single B/C group shared
+across heads, as in Mamba-2).  Outputs y (BH, S, P) f32 + final state.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+import jax.experimental.pallas.tpu as pltpu
+
+
+def _ssd_kernel(x_ref, la_ref, b_ref, c_ref, s0_ref, y_ref, sT_ref,
+                state_ref, *, q_blk: int, n_c: int):
+    ci = pl.program_id(1)
+
+    @pl.when(ci == 0)
+    def _init():
+        state_ref[...] = s0_ref[0].astype(jnp.float32)
+
+    x = x_ref[0].astype(jnp.float32)                       # (Q, P)
+    la = la_ref[0].astype(jnp.float32)                     # (Q,)
+    Bk = b_ref[0].astype(jnp.float32)                      # (Q, N)
+    Ck = c_ref[0].astype(jnp.float32)                      # (Q, N)
+
+    cs = jnp.cumsum(la)                                    # inclusive
+    total = cs[-1]
+
+    # intra-chunk: y_i = sum_{j<=i} (C_i . B_j) exp(cs_i - cs_j) x_j
+    G = jax.lax.dot_general(Ck, Bk, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)   # (Q, Q)
+    ii = jax.lax.broadcasted_iota(jnp.int32, (q_blk, q_blk), 0)
+    jj = jax.lax.broadcasted_iota(jnp.int32, (q_blk, q_blk), 1)
+    dec = jnp.exp(cs[:, None] - cs[None, :])
+    M = jnp.where(ii >= jj, G * dec, 0.0)
+    y = jax.lax.dot_general(M, x, (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32)   # (Q, P)
+
+    # inter-chunk: y_i += (C_i @ state) * exp(cs_i)
+    state = state_ref[...]                                 # (N, P)
+    y = y + jax.lax.dot_general(Ck, state, (((1,), (0,)), ((), ())),
+                                preferred_element_type=jnp.float32) \
+        * jnp.exp(cs)[:, None]
+    y_ref[0] = y.astype(y_ref.dtype)
+
+    # state update: state = exp(total) state + B^T @ (exp(total - cs) * x)
+    wx = x * jnp.exp(total - cs)[:, None]                  # (Q, P)
+    state_ref[...] = state * jnp.exp(total) + jax.lax.dot_general(
+        Bk, wx, (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+    @pl.when(ci == n_c - 1)
+    def _finish():
+        sT_ref[0] = state_ref[...]
+
+
+def ssd_scan(xdt, la, Bm, Cm, state0=None, *, q_blk: int = 128,
+             interpret: bool = False):
+    """xdt: (B,S,H,P); la: (B,S,H); Bm,Cm: (B,S,N); state0 (B,H,N,P) f32.
+
+    Returns (y (B,S,H,P) f32, final_state (B,H,N,P) f32).
+    """
+    B, S, H, Pd = xdt.shape
+    N = Bm.shape[-1]
+    if state0 is None:
+        state0 = jnp.zeros((B, H, N, Pd), jnp.float32)
+    q_blk = min(q_blk, S)
+    assert S % q_blk == 0, (S, q_blk)
+    n_c = S // q_blk
+
+    xh = xdt.transpose(0, 2, 1, 3).reshape(B * H, S, Pd)
+    lah = la.transpose(0, 2, 1).reshape(B * H, S)
+    s0 = state0.reshape(B * H, N, Pd)
+
+    def x_index(bh, ci):
+        return (bh, ci, 0)
+
+    def la_index(bh, ci):
+        return (bh, ci)
+
+    def bc_index(bh, ci):
+        return (bh // H, ci, 0)
+
+    def s_index(bh, ci):
+        return (bh, 0, 0)
+
+    y, sT = pl.pallas_call(
+        functools.partial(_ssd_kernel, q_blk=q_blk, n_c=n_c),
+        grid=(B * H, n_c),
+        in_specs=[
+            pl.BlockSpec((1, q_blk, Pd), x_index),
+            pl.BlockSpec((1, q_blk), la_index),
+            pl.BlockSpec((1, q_blk, N), bc_index),
+            pl.BlockSpec((1, q_blk, N), bc_index),
+            pl.BlockSpec((1, N, Pd), s_index),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, q_blk, Pd), x_index),
+            pl.BlockSpec((1, N, Pd), s_index),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B * H, S, Pd), jnp.float32),
+            jax.ShapeDtypeStruct((B * H, N, Pd), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((N, Pd), jnp.float32)],
+        interpret=interpret,
+    )(xh, lah, Bm, Cm, s0)
+    return (y.reshape(B, H, S, Pd).transpose(0, 2, 1, 3),
+            sT.reshape(B, H, N, Pd))

@@ -1,0 +1,439 @@
+"""Static analyzer for compiled (SPMD-partitioned) HLO text.
+
+Why this exists: XLA's ``compiled.cost_analysis()`` counts a ``while`` body
+ONCE — a 94-layer scanned transformer reports ~1/94th of its FLOPs (verified
+empirically; see EXPERIMENTS.md §Roofline).  The roofline needs loop-aware
+totals, so this module parses the HLO text and
+
+1. splits it into computations and builds the call graph
+   (``calls=`` / ``to_apply=`` / ``condition=`` / ``body=`` / branches),
+2. recovers each ``while`` trip count from the constant in its condition
+   (scan lowers to ``i < constant``),
+3. propagates execution **multiplicity** through the graph,
+4. accumulates, weighted by multiplicity:
+   * FLOPs: ``2 * prod(result_dims) * prod(contracting_dims)`` per dot,
+   * HBM bytes: operand + result bytes of every *scheduled* op line (fusion
+     bodies excluded — a fusion is one HBM pass; slicing ops count their
+     slice, not the sliced operand),
+   * collective wire bytes per device with ring adjustment:
+     AG: (g-1)/g x result;  RS: (g-1) x result;  AR: 2(g-1)/g x size;
+     A2A: (g-1)/g x size;   permute: size.
+
+All numbers are PER DEVICE because the compiled SPMD module is the
+per-partition program.
+
+Known approximations (documented for §Roofline): non-dot FLOPs ignored
+(matmuls dominate every assigned cell), conditional branches both counted
+(upper bound), dynamic trip counts default to 1, fusion-internal reuse
+assumed perfect.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import defaultdict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 0.5, "u4": 0.5, "s8": 1, "u8": 1, "f8e4m3fn": 1,
+    "f8e5m2": 1, "f8e4m3b11fnuz": 1, "f8e4m3fnuz": 1, "f8e5m2fnuz": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+    "token": 0, "opaque": 0,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_OP_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%(?P<name>[^\s=]+)\s*=\s*(?P<type>.*?)\s"
+    r"(?P<op>[a-z][\w\-]*)\((?P<rest>.*)$")
+_COMP_RE = re.compile(r"^(?:ENTRY\s+)?%?(?P<name>[\w\.\-]+)\s+\(.*\)\s+->")
+_CALL_RE = re.compile(r"(calls|to_apply|condition|body)=%?([\w\.\-]+)")
+_BRANCH_RE = re.compile(r"branch_computations=\{([^}]*)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_LIST_RE = re.compile(r"replica_groups=\{\{([\d,]+)\}")
+_CONST_RE = re.compile(r"constant\((\d+)\)")
+
+COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+
+def _shape_bytes(type_str: str) -> float:
+    total = 0.0
+    for dtype, dims in _SHAPE_RE.findall(type_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def _result_dims(type_str: str) -> list[int]:
+    m = _SHAPE_RE.search(type_str)
+    if not m:
+        return []
+    return [int(d) for d in m.group(2).split(",")] if m.group(2) else []
+
+
+@dataclasses.dataclass
+class Op:
+    name: str
+    op: str
+    type_str: str
+    line: str
+    operands: list
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    ops: list
+    symbols: dict                    # value name -> type_str
+    is_fusion_body: bool = False
+
+
+def _parse_operands(rest: str) -> list[str]:
+    """Names of %value operands in the top-level argument list."""
+    depth = 0
+    args = []
+    for i, ch in enumerate(rest):
+        if ch == "(":
+            depth += 1
+        elif ch == ")":
+            if depth == 0:
+                args.append(rest[:i])
+                break
+            depth -= 1
+    text = args[0] if args else rest
+    return re.findall(r"%([\w\.\-]+)", text)
+
+
+def parse_hlo(text: str) -> dict[str, Computation]:
+    comps: dict[str, Computation] = {}
+    cur: Computation | None = None
+    for raw in text.splitlines():
+        line = raw.rstrip()
+        s = line.strip()
+        if not s or s.startswith("//"):
+            continue
+        if " = " not in s and _COMP_RE.match(s) and s.endswith("{"):
+            m = _COMP_RE.match(s)
+            cur = Computation(m.group("name"), [], {})
+            comps[cur.name] = cur
+            # header parameters carry shapes: "(p: f32[2]{0}, q: s32[])"
+            hdr = s[s.index("("):s.rindex("->")]
+            for pm in re.finditer(r"([\w\.\-]+):\s*([^,()]+(?:\([^)]*\))?)",
+                                  hdr):
+                cur.symbols[pm.group(1)] = pm.group(2)
+            continue
+        if cur is None:
+            continue
+        if s == "}" or s.startswith("}"):
+            cur = None
+            continue
+        m = _OP_RE.match(s)
+        if not m:
+            continue
+        op = Op(m.group("name"), m.group("op"), m.group("type"), s,
+                _parse_operands(m.group("rest")))
+        cur.ops.append(op)
+        cur.symbols[op.name] = op.type_str
+    return comps
+
+
+def _find_entry(comps: dict[str, Computation], text: str) -> str:
+    m = re.search(r"^ENTRY\s+%?([\w\.\-]+)", text, re.M)
+    if m:
+        return m.group(1)
+    return next(iter(comps))
+
+
+def _trip_count(comps, cond_name: str) -> int:
+    """Trip count of a scan-lowered while: the constant operand of the
+    condition's ROOT compare (``i < N``).  Falls back to the max constant in
+    the condition if the root pattern is absent."""
+    cond = comps.get(cond_name)
+    if cond is None or not cond.ops:
+        return 1
+    root = cond.ops[-1]
+    # precise: a constant defined in the condition and fed to the root
+    vals = []
+    for name in root.operands:
+        for op in cond.ops:
+            if op.name == name and op.op == "constant":
+                m = _CONST_RE.search(op.line)
+                if m:
+                    vals.append(int(m.group(1)))
+    if vals:
+        return max(vals)
+    # fallback: max constant in the condition (+1 level of callees)
+    best = 0
+    seen = [cond_name] + [c for op in cond.ops
+                          for _, c in _CALL_RE.findall(op.line)]
+    for cname in seen:
+        c = comps.get(cname)
+        if c is None:
+            continue
+        for op in c.ops:
+            for v in _CONST_RE.findall(op.line):
+                best = max(best, int(v))
+    return best if best > 0 else 1
+
+
+def _multiplicities(comps, entry: str) -> dict[str, float]:
+    """Execution count of each computation, propagated from ENTRY."""
+    edges: dict[str, list[tuple[str, float, str]]] = defaultdict(list)
+    for comp in comps.values():
+        for op in comp.ops:
+            if op.op == "while":
+                kinds = dict((k, v) for k, v in _CALL_RE.findall(op.line))
+                body = kinds.get("body")
+                cond = kinds.get("condition")
+                tc = _trip_count(comps, cond) if cond else 1
+                if body:
+                    edges[comp.name].append((body, float(tc), "body"))
+                if cond:
+                    edges[comp.name].append((cond, float(tc + 1), "cond"))
+            else:
+                fused = op.op == "fusion"
+                for kind, callee in _CALL_RE.findall(op.line):
+                    edges[comp.name].append(
+                        (callee, 1.0, "fusion" if fused else "call"))
+                bm = _BRANCH_RE.search(op.line)
+                if bm:
+                    for callee in re.findall(r"%?([\w\.\-]+)", bm.group(1)):
+                        edges[comp.name].append((callee, 1.0, "branch"))
+
+    in_edges: dict[str, list[tuple[str, float, str]]] = defaultdict(list)
+    for src, outs in edges.items():
+        for dst, w, kind in outs:
+            in_edges[dst].append((src, w, kind))
+
+    mult: dict[str, float] = defaultdict(float)
+    fused_body: dict[str, bool] = defaultdict(bool)
+    mult[entry] = 1.0
+    # fixpoint over the DAG (depth-many passes suffice)
+    for _ in range(len(comps) + 2):
+        changed = False
+        for dst, ins in in_edges.items():
+            nv = 1.0 if dst == entry else 0.0
+            fb = False
+            for src, w, kind in ins:
+                if mult[src] > 0:
+                    nv += mult[src] * w
+                    fb = fb or kind == "fusion" or fused_body[src]
+            if abs(nv - mult[dst]) > 1e-9 or fb != fused_body[dst]:
+                mult[dst], fused_body[dst] = nv, fb
+                changed = True
+        if not changed:
+            break
+    return dict(mult), dict(fused_body)
+
+
+def _group_size(line: str, default: int) -> int:
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:
+        return int(m.group(2))
+    m = _GROUPS_LIST_RE.search(line)
+    if m:
+        return len(m.group(1).split(","))
+    return default
+
+
+def _dot_flops(op: Op, symbols: dict) -> float:
+    res = _result_dims(op.type_str)
+    out = 1.0
+    for d in res:
+        out *= d
+    cdims = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", op.line)
+    contract = 1.0
+    if cdims and op.operands:
+        lhs = symbols.get(op.operands[0])
+        if lhs is not None:
+            ldims = _result_dims(lhs)
+            for ci in cdims.group(1).split(","):
+                if ci and int(ci) < len(ldims):
+                    contract *= ldims[int(ci)]
+    return 2.0 * out * contract
+
+
+def op_bytes(op: Op, comp: Computation, comps: dict) -> float:
+    """Estimated HBM traffic of one scheduled op line."""
+    base = op.op.replace("-start", "")
+    rbytes = _shape_bytes(op.type_str)
+    if base in ("dynamic-slice", "gather"):
+        return 2 * rbytes
+    if base == "dynamic-update-slice":
+        upd = (comp.symbols.get(op.operands[1])
+               if len(op.operands) > 1 else None)
+        return 3 * _shape_bytes(upd) if upd else rbytes
+    if op.op == "fusion":
+        return _fusion_bytes(op, comp, comps, rbytes)
+    b = rbytes
+    for o in op.operands:
+        t = comp.symbols.get(o)
+        if t is not None:
+            b += _shape_bytes(t)
+    return b
+
+
+def _fusion_bytes(op: Op, comp: Computation, comps: dict,
+                  rbytes: float) -> float:
+    """HBM traffic of one fusion op line.
+
+    Default: operands + result (one pass).  Scan-ACCUMULATOR fusions — root
+    is a dynamic-update-slice (or a tuple of them) writing one slice into a
+    stacked buffer that is aliased in place — touch only the slice per
+    iteration, not the whole buffer; counting the buffer would overstate a
+    94-layer scan's traffic by ~L x (this was a 500x error on the rwkv cell,
+    see EXPERIMENTS.md §Perf).
+    """
+    callee = dict(_CALL_RE.findall(op.line)).get("calls")
+    fc = comps.get(callee) if callee else None
+    aliased_shapes: list[str] = []
+    sliced_param_bytes: dict[int, float] = {}
+    slice_bytes = 0.0
+    is_accum = False
+    if fc and fc.ops:
+        # map the fusion computation's parameter names to operand indices
+        param_idx = {}
+        for r in fc.ops:
+            if r.op == "parameter":
+                m = re.search(r"parameter\((\d+)\)", r.line)
+                if m:
+                    param_idx[r.name] = int(m.group(1))
+        for r in fc.ops:
+            # dynamic-update-slice: writes only the update region; the big
+            # buffer is aliased in place (scan accumulators, cache updates)
+            if r.op == "dynamic-update-slice" and len(r.operands) > 1:
+                upd = fc.symbols.get(r.operands[1])
+                buf = fc.symbols.get(r.operands[0])
+                if upd is None or buf is None:
+                    continue
+                is_accum = True
+                slice_bytes += 2 * _shape_bytes(upd)
+                aliased_shapes.append(buf)
+            # dynamic-slice of a fusion parameter: reads only the slice (the
+            # scan-xs pattern: the stacked (L, ...) input sliced per step)
+            elif r.op == "dynamic-slice" and r.operands:
+                k = param_idx.get(r.operands[0])
+                if k is not None:
+                    sliced_param_bytes[k] = (sliced_param_bytes.get(k, 0.0)
+                                             + _shape_bytes(r.type_str))
+
+    alias_bytes = sum(_shape_bytes(a) for a in aliased_shapes)
+    b = slice_bytes + max(0.0, rbytes - alias_bytes) if is_accum else rbytes
+    remaining_alias = list(aliased_shapes)
+    for idx, o in enumerate(op.operands):
+        t = comp.symbols.get(o)
+        if t is None:
+            continue
+        if idx in sliced_param_bytes:
+            b += sliced_param_bytes[idx]      # only the slices are read
+            continue
+        tb = _shape_bytes(t)
+        if is_accum:
+            matched = next((a for a in remaining_alias
+                            if _shape_bytes(a) == tb), None)
+            if matched is not None:
+                remaining_alias.remove(matched)  # in-place buffer
+                continue
+        b += tb
+    return b
+
+
+_SKIP_BYTES = {"parameter", "constant", "get-tuple-element", "tuple",
+               "bitcast", "iota", "after-all", "partition-id", "replica-id",
+               # control-flow wrappers: their bodies' ops are counted with
+               # multiplicity; counting the wrapper would double the carry
+               "while", "conditional", "call", "optimization-barrier"}
+
+
+@dataclasses.dataclass
+class HloStats:
+    flops: float = 0.0                      # per device, loop-corrected
+    bytes_accessed: float = 0.0             # per device HBM traffic estimate
+    collective_bytes: float = 0.0           # per device ring-adjusted wire
+    attn_score_bytes: float = 0.0           # subset of bytes_accessed that a
+                                            # flash-attention kernel keeps in
+                                            # VMEM (S_q x S_k score tensors)
+    collective_by_type: dict = dataclasses.field(default_factory=dict)
+    collective_count: int = 0
+    dot_count: int = 0
+    while_trips: dict = dataclasses.field(default_factory=dict)
+
+    def to_dict(self):
+        return dataclasses.asdict(self)
+
+
+def _is_score_shape(type_str: str, score_dims, floor: float) -> bool:
+    dims = _result_dims(type_str)
+    if len(dims) < 4 or not score_dims:
+        return False
+    if dims[-1] not in score_dims:
+        return False
+    return _shape_bytes(type_str) >= floor
+
+
+def analyze(text: str, *, n_devices: int, score_dims=(),
+            score_floor: float = 32e6) -> HloStats:
+    """``score_dims``: candidate S_k tile sizes — ops whose results look like
+    attention score tensors (>=4-D, last dim in score_dims, >= score_floor
+    bytes) are tallied into ``attn_score_bytes`` so the roofline can report a
+    flash-kernel-adjusted memory term alongside the raw one."""
+    comps = parse_hlo(text)
+    entry = _find_entry(comps, text)
+    mult, fused_body = _multiplicities(comps, entry)
+    stats = HloStats()
+
+    for comp in comps.values():
+        m = mult.get(comp.name, 0.0)
+        if m <= 0:
+            continue
+        in_fusion = fused_body.get(comp.name, False)
+        for op in comp.ops:
+            base = op.op.replace("-start", "")
+            if op.op.endswith("-done"):
+                continue
+            # ---- FLOPs (count dots everywhere, incl. fusion bodies) -------
+            if base == "dot":
+                stats.flops += m * _dot_flops(op, comp.symbols)
+                stats.dot_count += 1
+            # ---- collectives ---------------------------------------------
+            if base in COLLECTIVES:
+                g = _group_size(op.line, n_devices)
+                rbytes = _shape_bytes(op.type_str)
+                if base == "all-gather":
+                    wire = (g - 1) / g * rbytes
+                elif base == "reduce-scatter":
+                    wire = (g - 1) * rbytes
+                elif base == "all-reduce":
+                    wire = 2 * (g - 1) / g * rbytes
+                elif base == "all-to-all":
+                    wire = (g - 1) / g * rbytes
+                else:                               # collective-permute
+                    wire = rbytes
+                stats.collective_bytes += m * wire
+                t = stats.collective_by_type.setdefault(
+                    base, {"count": 0, "wire_bytes": 0.0})
+                t["count"] += int(m)
+                t["wire_bytes"] += m * wire
+                stats.collective_count += int(m)
+            # ---- HBM bytes (scheduled ops only; fusion body = in-register)
+            if in_fusion or op.op in _SKIP_BYTES:
+                continue
+            b = m * op_bytes(op, comp, comps)
+            stats.bytes_accessed += b
+            if _is_score_shape(op.type_str, score_dims, score_floor):
+                stats.attn_score_bytes += b
+
+    for comp in comps.values():
+        for op in comp.ops:
+            if op.op == "while":
+                kinds = dict(_CALL_RE.findall(op.line))
+                cond = kinds.get("condition")
+                if cond:
+                    stats.while_trips[op.name] = _trip_count(comps, cond)
+    return stats

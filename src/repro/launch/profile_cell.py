@@ -1,0 +1,74 @@
+"""Per-cell HLO profiler: top HBM ops and collectives for one
+(arch x shape) cell — the working tool behind every EXPERIMENTS.md §Perf
+iteration.
+
+    PYTHONPATH=src python -m repro.launch.profile_cell <arch> <shape> [multi]
+"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+import sys
+import jax, jax.numpy as jnp, re
+from collections import Counter
+from repro.launch import dryrun as D, hlo_analysis as H
+from repro.launch.mesh import make_production_mesh
+from repro.configs import get_config, SHAPES
+from repro.models.api import build_model
+from repro.train.state import abstract_train_state
+from repro.train.step import make_train_step
+
+arch = sys.argv[1] if len(sys.argv) > 1 else "qwen2-7b"
+shape_name = sys.argv[2] if len(sys.argv) > 2 else "train_4k"
+multi = len(sys.argv) > 3 and sys.argv[3] == "multi"
+
+mesh = make_production_mesh(multi_pod=multi)
+cfg = get_config(arch)
+shape = SHAPES[shape_name]
+rules = D.rules_for_cell(mesh, cfg, shape)
+model = build_model(cfg)
+
+if shape.kind == "train":
+    step = make_train_step(model, D.opt_config(cfg), mesh, rules)
+    state = abstract_train_state(model, D.opt_config(cfg), mesh, rules,
+                                 param_dtype=jnp.dtype(cfg.param_dtype))
+    batch = D.input_specs(arch, shape_name, mesh, rules)
+    compiled = step.lower(state, batch).compile()
+elif shape.kind == "prefill":
+    params = model.abstract_params(mesh, rules, dtype=jnp.dtype(cfg.param_dtype))
+    batch = D.input_specs(arch, shape_name, mesh, rules)
+    compiled = jax.jit(lambda p, b: model.prefill(p, b, rules, shape.seq_len)).lower(params, batch).compile()
+else:
+    params = model.abstract_params(mesh, rules, dtype=jnp.dtype(cfg.param_dtype))
+    ins = D.input_specs(arch, shape_name, mesh, rules)
+    compiled = jax.jit(lambda p, s, t, pos: model.decode_step(p, s, t, pos, rules),
+                       donate_argnums=(1,)).lower(params, ins["state"], ins["tokens"], ins["pos"]).compile()
+
+txt = compiled.as_text()
+comps = H.parse_hlo(txt)
+entry = H._find_entry(comps, txt)
+mult, fused = H._multiplicities(comps, entry)
+agg = Counter()
+coll = Counter()
+for comp in comps.values():
+    m = mult.get(comp.name, 0)
+    if m <= 0 or fused.get(comp.name, False):
+        continue
+    for op in comp.ops:
+        base = op.op.replace("-start", "")
+        if base in H.COLLECTIVES:
+            g = H._group_size(op.line, mesh.size)
+            rb = H._shape_bytes(op.type_str)
+            wire = {"all-gather": (g-1)/g*rb, "reduce-scatter": (g-1)*rb,
+                    "all-reduce": 2*(g-1)/g*rb, "all-to-all": (g-1)/g*rb,
+                    "collective-permute": rb}[base]
+            coll[(base, op.type_str[:48], g, comp.name[:30])] += m*wire
+        if op.op in H._SKIP_BYTES:
+            continue
+        b = H.op_bytes(op, comp, comps)
+        agg[(op.op, op.type_str[:56], f"{comp.name[:26]} m={m:.0f}")] += m*b
+
+print("== top HBM ops (total %.3e) ==" % sum(agg.values()))
+for (opn, t, cn), b in agg.most_common(14):
+    print(f"{b:.3e}  {opn:20s} {t[:54]} in {cn}")
+print("== top collectives (total wire %.3e) ==" % sum(coll.values()))
+for (base, t, g, cn), b in coll.most_common(12):
+    print(f"{b:.3e}  {base:18s} g={g:4d} {t[:46]} in {cn}")

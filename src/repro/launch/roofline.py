@@ -1,0 +1,105 @@
+"""Roofline report: turn results/dryrun.json into EXPERIMENTS.md tables.
+
+Per (arch x shape x mesh) cell:
+    compute_s    = HLO_FLOPs_per_device / 197e12        (bf16 peak, v5e)
+    memory_s     = HLO_bytes_per_device / 819e9          (HBM bw)
+    collective_s = ring-adjusted wire bytes / 50e9       (ICI link bw)
+with loop-corrected HLO numbers from launch.hlo_analysis (XLA's own
+cost_analysis counts while bodies once — see that module's docstring).
+
+Usage::
+
+    PYTHONPATH=src python -m repro.launch.roofline [--json results/dryrun.json]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+
+def fmt_row(rec) -> str:
+    if rec["status"] == "SKIP":
+        return (f"| {rec['arch']} | {rec['shape']} | SKIP | — | — | — | — | — | "
+                f"{rec['reason'][:60]} |")
+    if rec["status"] != "OK":
+        return (f"| {rec['arch']} | {rec['shape']} | FAIL | — | — | — | — | — | "
+                f"{rec.get('error', '')[:60]} |")
+    r = rec["roofline"]
+    m = rec["memory"]
+    note = f"useful={r['useful_flops_ratio']:.2f}"
+    return ("| {arch} | {shape} | {bound} | {c:.3f} | {mem:.3f} | {coll:.3f} "
+            "| {step:.3f} | {hbm:.1f} | {note} |").format(
+        arch=rec["arch"], shape=rec["shape"], bound=r["bound"],
+        c=r["compute_s"], mem=r["memory_s"], coll=r["collective_s"],
+        step=r["step_s_estimate"], hbm=m["hbm_per_device"] / 1e9, note=note)
+
+
+HEADER = ("| arch | shape | bound | compute_s | memory_s | collective_s "
+          "| step_s | HBM GB/dev | notes |\n"
+          "|---|---|---|---|---|---|---|---|---|")
+
+
+def render(results: dict) -> str:
+    out = []
+    for mesh_name, title in (("single", "Single pod (16x16 = 256 chips)"),
+                             ("multi", "Multi-pod (2x16x16 = 512 chips)")):
+        rows = [r for k, r in sorted(results.items())
+                if k.endswith(f"|{mesh_name}")]
+        if not rows:
+            continue
+        out.append(f"\n### {title}\n")
+        out.append(HEADER)
+        for r in rows:
+            out.append(fmt_row(r))
+        n_ok = sum(1 for r in rows if r["status"] == "OK")
+        n_skip = sum(1 for r in rows if r["status"] == "SKIP")
+        n_fail = len(rows) - n_ok - n_skip
+        out.append(f"\n{n_ok} OK / {n_skip} SKIP / {n_fail} FAIL\n")
+    return "\n".join(out)
+
+
+def interesting_cells(results: dict, mesh_name: str = "single"):
+    """The three §Perf hillclimb picks: worst useful-flops fraction, most
+    collective-bound, and the MoE cell most representative of the paper's
+    load-balancing technique."""
+    ok = [r for k, r in results.items()
+          if k.endswith(f"|{mesh_name}") and r["status"] == "OK"]
+    if not ok:
+        return {}
+    worst = min(ok, key=lambda r: r["roofline"]["useful_flops_ratio"]
+                * min(1.0, r["roofline"]["compute_s"]
+                      / max(r["roofline"]["step_s_estimate"], 1e-12)))
+    coll = max(ok, key=lambda r: r["roofline"]["collective_s"]
+               / max(r["roofline"]["step_s_estimate"], 1e-12))
+    moe = [r for r in ok if "moe" in r["arch"] or "arctic" in r["arch"]]
+    rep = max(moe, key=lambda r: r["roofline"]["step_s_estimate"]) if moe else ok[0]
+    return {"worst_roofline": worst, "most_collective_bound": coll,
+            "paper_representative": rep}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    default = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                           "results", "dryrun.json")
+    ap.add_argument("--json", default=os.path.abspath(default))
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+    with open(args.json) as f:
+        results = json.load(f)
+    text = render(results)
+    print(text)
+    picks = interesting_cells(results)
+    if picks:
+        print("\n### Hillclimb picks\n")
+        for why, r in picks.items():
+            print(f"- **{why}**: {r['arch']} x {r['shape']} "
+                  f"(bound={r['roofline']['bound']}, "
+                  f"step≈{r['roofline']['step_s_estimate']:.3f}s)")
+    if args.out:
+        with open(args.out, "w") as f:
+            f.write(text)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,73 @@
+"""Training launcher.
+
+CPU container: ``--smoke`` (reduced config, 1 device) actually trains;
+full configs are exercised through the dry-run.  On a real pod the same
+command with ``--mesh single|multi`` builds the production mesh and runs the
+identical code path (the mesh is the only difference — the paper's
+serial/parallel duality).
+
+    PYTHONPATH=src python -m repro.launch.train --arch qwen3-1.7b --smoke \
+        --steps 100 --batch 8 --seq 128
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+
+from repro.configs import get_config, list_archs, smoke_config
+from repro.data import SyntheticTask, make_data_iter
+from repro.models.api import build_model
+from repro.optim import AdamWConfig
+from repro.train import Trainer, TrainerConfig
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3-1.7b", choices=list_archs())
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced config (CPU-trainable)")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--accum", type=int, default=1)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--mesh", default="none",
+                    choices=["none", "debug", "single", "multi"])
+    # cross-pod int8 compressed sync is host-orchestrated; see
+    # repro.train.pod_dp (exercised by tests/test_distributed.py)
+    args = ap.parse_args()
+
+    cfg = smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    model = build_model(cfg)
+
+    mesh = rules = None
+    if args.mesh != "none":
+        from repro.launch.mesh import make_debug_mesh, make_production_mesh
+        from repro.mesh.axes import rules_for_mesh
+        if args.mesh == "debug":
+            mesh = make_debug_mesh()
+        else:
+            mesh = make_production_mesh(multi_pod=(args.mesh == "multi"))
+        rules = rules_for_mesh(mesh)
+
+    task = SyntheticTask(cfg, batch=args.batch, seq_len=args.seq)
+    specs = model.train_batch_specs(
+        type("S", (), {"global_batch": args.batch, "seq_len": args.seq})())
+    it = make_data_iter(task, mesh, rules, specs)
+
+    tcfg = TrainerConfig(steps=args.steps, ckpt_dir=args.ckpt_dir,
+                         ckpt_every=args.ckpt_every, accum_steps=args.accum)
+    opt = AdamWConfig(peak_lr=args.lr, warmup_steps=max(args.steps // 10, 1),
+                      decay_steps=args.steps)
+    trainer = Trainer(model, opt, tcfg, it, mesh=mesh, rules=rules)
+    result = trainer.fit()
+    h = result["history"]
+    print(f"[train] {args.arch}: loss {h[0]['loss']:.4f} -> {h[-1]['loss']:.4f} "
+          f"over {len(h)} steps; stragglers={result['stragglers']}")
+
+
+if __name__ == "__main__":
+    main()

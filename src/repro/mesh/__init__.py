@@ -1,0 +1,4 @@
+from repro.mesh.axes import (LOGICAL_RULES_1POD, LOGICAL_RULES_2POD, AxisRules,
+                             logical_to_mesh, logical_to_sharding, rules_for_mesh)
+from repro.mesh.ring import ring_attention
+from repro.mesh.pipeline import pipeline_apply, bubble_fraction

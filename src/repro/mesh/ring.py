@@ -1,0 +1,68 @@
+"""Ring attention — the additive-Schwarz neighbour-exchange pattern applied
+to sequence-parallel attention (DESIGN.md §3: "Schwarz → neighbour-exchange
+parallelism").
+
+Q stays put (each shard owns a contiguous sequence block); K/V blocks rotate
+around the ring one hop per step (``ppermute``, the paper's ``communicate``),
+and the online-softmax state (acc, m, l) accumulates exactly as in the flash
+kernel — so after n hops every shard has attended over the full sequence
+while only ever holding 1/n of K/V.  Peak memory O(S/n), wire per device =
+(n-1)/n · |K,V|, fully overlappable with the block computation on TPU.
+
+This is the long-context training/prefill alternative to the gather-KV path
+in ``models/transformer.py`` (which is cheaper for GQA at moderate S but
+holds full K/V).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.comm import Comm
+
+NEG_INF = -1e30
+
+
+def ring_attention(q, k, v, comm: Comm, *, causal: bool = True):
+    """q, k, v: (B, S_local, H, D) — this shard's sequence block, laid out
+    rank-contiguously along ``comm.axis``.  Returns (B, S_local, H, D)."""
+    B, Sq, Hq, D = q.shape
+    Hkv = k.shape[2]
+    G = Hq // Hkv
+    n = comm.size()
+    rank = comm.rank()
+    scale = D ** -0.5
+
+    qg = (q.reshape(B, Sq, Hkv, G, D) * scale).astype(jnp.float32)
+    q_pos = rank * Sq + jnp.arange(Sq)
+
+    def block(carry, kc, vc, k_pos):
+        acc, m, l = carry
+        s = jnp.einsum("bqhgd,bkhd->bhgqk", qg, kc.astype(jnp.float32))
+        if causal:
+            ok = q_pos[:, None] >= k_pos[None, :]
+            s = jnp.where(ok, s, NEG_INF)
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l = l * corr + p.sum(axis=-1)
+        pv = jnp.einsum("bhgqk,bkhd->bhgqd", p, vc.astype(jnp.float32))
+        acc = acc * corr[..., None] + pv
+        return acc, m_new, l
+
+    def hop(i, carry):
+        acc, m, l, kc, vc = carry
+        src = (rank - i) % n                     # whose block we now hold
+        k_pos = src * Sq + jnp.arange(Sq)
+        acc, m, l = block((acc, m, l), kc, vc, k_pos)
+        kc = comm.shift(kc, offset=1)            # pass blocks around the ring
+        vc = comm.shift(vc, offset=1)
+        return acc, m, l, kc, vc
+
+    acc0 = jnp.zeros((B, Hkv, G, Sq, D), jnp.float32)
+    m0 = jnp.full((B, Hkv, G, Sq), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, Hkv, G, Sq), jnp.float32)
+    acc, m, l, _, _ = jax.lax.fori_loop(0, n, hop, (acc0, m0, l0, k, v))
+
+    out = acc / jnp.maximum(l[..., None], 1e-30)
+    return out.transpose(0, 3, 1, 2, 4).reshape(B, Sq, Hq, D).astype(q.dtype)

@@ -1,0 +1,342 @@
+"""Unified model API — the function-centric face of every architecture.
+
+``build_model(cfg)`` returns a :class:`Model` whose members are plain
+functions (loss / prefill / decode_step), so the generic machinery
+(:mod:`repro.train`, :mod:`repro.serve`, :mod:`repro.launch.dryrun`) composes
+them exactly the way the paper's ``solve_problem`` composes ``initialize`` /
+``func`` / ``finalize``: the framework never looks inside the model, it only
+calls the supplied functions.
+
+Batch conventions per family (assignment brief: modality frontends are stubs,
+``input_specs`` provides precomputed embeddings):
+
+  dense/moe:  {tokens (B,S) i32, labels (B,S) i32}
+  vlm:        {tokens (B,S-I) i32, image_embeds (B,I,d) act-dtype, labels (B,S)}
+  hybrid/ssm: {tokens (B,S) i32, labels (B,S) i32}
+  audio:      {frames (B,F,d) act-dtype, tokens (B,S) i32, labels (B,S) i32}
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.mesh.axes import AxisRules, logical_to_sharding
+from repro.models import transformer as T
+from repro.models import rwkv_lm as RW
+from repro.models import whisper as W
+from repro.models import zamba as Z
+from repro.models.module import Param, abstract_params, init_params, param_count
+
+
+@dataclasses.dataclass(frozen=True)
+class ArraySpec:
+    """Shape/dtype/logical-partition declaration of one input array."""
+    shape: tuple
+    dtype: Any
+    spec: P
+
+    def abstract(self, mesh=None, rules: AxisRules | None = None):
+        if mesh is None:
+            return jax.ShapeDtypeStruct(self.shape, self.dtype)
+        return jax.ShapeDtypeStruct(
+            self.shape, self.dtype,
+            sharding=logical_to_sharding(self.spec, mesh, rules))
+
+
+def _tokens(B, S):
+    return ArraySpec((B, S), jnp.int32, P("batch", "seq"))
+
+
+def _labels(B, S):
+    return ArraySpec((B, S), jnp.int32, P("batch", "seq"))
+
+
+class Model:
+    """One architecture, bound to its family's functional implementation."""
+
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+
+    # -- parameters ----------------------------------------------------------
+    def param_defs(self) -> dict:
+        raise NotImplementedError
+
+    def init(self, key, dtype=jnp.float32):
+        return init_params(self.param_defs(), key, dtype=dtype)
+
+    def abstract_params(self, mesh, rules, dtype=jnp.float32):
+        return abstract_params(self.param_defs(), mesh, rules, dtype=dtype)
+
+    def n_params(self) -> int:
+        return param_count(self.param_defs())
+
+    def n_active_params(self) -> int:
+        """Params touched per token (= n_params except for MoE)."""
+        return self.n_params()
+
+    # -- training ------------------------------------------------------------
+    def loss(self, params, batch: dict, rules) -> tuple[jax.Array, dict]:
+        raise NotImplementedError
+
+    def train_batch_specs(self, shape: ShapeConfig) -> dict[str, ArraySpec]:
+        raise NotImplementedError
+
+    # -- serving -------------------------------------------------------------
+    def prefill_batch_specs(self, shape: ShapeConfig) -> dict[str, ArraySpec]:
+        specs = dict(self.train_batch_specs(shape))
+        specs.pop("labels")
+        return specs
+
+    def prefill(self, params, batch: dict, rules, max_len: int):
+        """-> (decode_state, last_hidden)."""
+        raise NotImplementedError
+
+    def init_decode_state(self, batch: int, max_len: int):
+        raise NotImplementedError
+
+    def decode_state_specs(self, batch: int, max_len: int) -> Any:
+        """Pytree of ArraySpec matching init_decode_state."""
+        raise NotImplementedError
+
+    def decode_step(self, params, state, tokens, pos, rules):
+        """tokens (B,1) -> (new_state, logits (B,1,V))."""
+        raise NotImplementedError
+
+    def lm_head(self, params, hidden, rules):
+        return T.lm_logits(params, hidden, self.cfg, rules)
+
+
+# ---------------------------------------------------------------------------
+# Dense / MoE decoder-only LMs (also base for VLM)
+# ---------------------------------------------------------------------------
+
+class DecoderLM(Model):
+    def param_defs(self):
+        return T.transformer_defs(self.cfg)
+
+    def n_active_params(self):
+        cfg = self.cfg
+        if not cfg.n_experts:
+            return self.n_params()
+        expert_p = 3 * cfg.d_model * cfg.expert_d_ff
+        inactive = cfg.n_layers * (cfg.n_experts - cfg.top_k) * expert_p
+        return self.n_params() - inactive
+
+    def loss(self, params, batch, rules):
+        return T.lm_loss(params, self.cfg, rules, tokens=batch["tokens"],
+                         labels=batch["labels"])
+
+    def train_batch_specs(self, shape):
+        B, S = shape.global_batch, shape.seq_len
+        return {"tokens": _tokens(B, S), "labels": _labels(B, S)}
+
+    def prefill(self, params, batch, rules, max_len):
+        return T.prefill(params, self.cfg, rules, tokens=batch["tokens"],
+                         max_len=max_len)
+
+    def init_decode_state(self, batch, max_len):
+        return T.init_cache(self.cfg, batch, max_len,
+                            dtype=jnp.dtype(self.cfg.dtype))
+
+    def decode_state_specs(self, batch, max_len):
+        cfg = self.cfg
+        spec = P(None, "batch", "kv_seq", None, None)
+        hkv, hd = cfg.padded_kv_heads, cfg.head_dim
+        dt = jnp.dtype(cfg.dtype)
+        if not T.uses_window_cache(cfg):
+            a = ArraySpec((cfg.n_layers, batch, max_len, hkv, hd), dt, spec)
+            return {"k": a, "v": a}
+        glob, loc = T.layer_groups(cfg)
+        W = min(cfg.local_window, max_len)
+        g = ArraySpec((len(glob), batch, max_len, hkv, hd), dt, spec)
+        l = ArraySpec((len(loc), batch, W, hkv, hd), dt, spec)
+        return {"k": g, "v": g, "k_loc": l, "v_loc": l}
+
+    def decode_step(self, params, state, tokens, pos, rules):
+        return T.decode_step(params, self.cfg, rules, state, tokens, pos)
+
+
+class VLM(DecoderLM):
+    """LLaVA-style: precomputed anyres patch embeddings prepended to text."""
+
+    def _embeds(self, params, batch, rules):
+        txt = T.embed_tokens(params, batch["tokens"], self.cfg, rules)
+        img = batch["image_embeds"].astype(txt.dtype)
+        return jnp.concatenate([img, txt], axis=1)
+
+    def loss(self, params, batch, rules):
+        x = self._embeds(params, batch, rules)
+        return T.lm_loss(params, self.cfg, rules, inputs_embeds=x,
+                         labels=batch["labels"])
+
+    def train_batch_specs(self, shape):
+        cfg = self.cfg
+        B, S = shape.global_batch, shape.seq_len
+        I = cfg.n_image_tokens
+        assert S > I, (S, I)
+        return {
+            "tokens": _tokens(B, S - I),
+            "image_embeds": ArraySpec((B, I, cfg.d_model),
+                                      jnp.dtype(cfg.dtype),
+                                      P("batch", "seq", None)),
+            "labels": _labels(B, S),
+        }
+
+    def prefill(self, params, batch, rules, max_len):
+        x = self._embeds(params, batch, rules)
+        return T.prefill(params, self.cfg, rules, inputs_embeds=x,
+                         max_len=max_len)
+
+
+# ---------------------------------------------------------------------------
+# Hybrid (zamba2), SSM (rwkv6), audio (whisper)
+# ---------------------------------------------------------------------------
+
+class HybridLM(Model):
+    def param_defs(self):
+        return Z.zamba_defs(self.cfg)
+
+    def loss(self, params, batch, rules):
+        return Z.lm_loss(params, self.cfg, rules, batch["tokens"],
+                         batch["labels"])
+
+    def train_batch_specs(self, shape):
+        B, S = shape.global_batch, shape.seq_len
+        return {"tokens": _tokens(B, S), "labels": _labels(B, S)}
+
+    def prefill(self, params, batch, rules, max_len):
+        return Z.prefill(params, self.cfg, rules, batch["tokens"], max_len)
+
+    def init_decode_state(self, batch, max_len):
+        return Z.init_state(self.cfg, batch, max_len,
+                            dtype=jnp.dtype(self.cfg.dtype))
+
+    def decode_state_specs(self, batch, max_len):
+        cfg = self.cfg
+        specs = Z.state_specs(cfg)
+        seg = cfg.n_layers // cfg.shared_attn_every
+        k = cfg.shared_attn_every
+        H, Pd, N, K = (cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state,
+                       cfg.conv_kernel)
+        hkv, hd = cfg.padded_kv_heads, cfg.head_dim
+        dt = jnp.dtype(cfg.dtype)
+        return {
+            "mamba": {
+                "ssm": ArraySpec((seg, k, batch, H, N, Pd), jnp.float32,
+                                 specs["mamba"]["ssm"]),
+                "conv": {
+                    "x": ArraySpec((seg, k, batch, K - 1, cfg.d_inner),
+                                   jnp.float32, specs["mamba"]["conv"]["x"]),
+                    "B": ArraySpec((seg, k, batch, K - 1, N), jnp.float32,
+                                   specs["mamba"]["conv"]["B"]),
+                    "C": ArraySpec((seg, k, batch, K - 1, N), jnp.float32,
+                                   specs["mamba"]["conv"]["C"]),
+                },
+            },
+            "attn_cache": {
+                "k": ArraySpec((seg, batch, max_len, hkv, hd), dt,
+                               specs["attn_cache"]["k"]),
+                "v": ArraySpec((seg, batch, max_len, hkv, hd), dt,
+                               specs["attn_cache"]["v"]),
+            },
+        }
+
+    def decode_step(self, params, state, tokens, pos, rules):
+        return Z.decode_step(params, self.cfg, rules, state, tokens, pos)
+
+
+class RwkvLM(Model):
+    def param_defs(self):
+        return RW.rwkv_lm_defs(self.cfg)
+
+    def loss(self, params, batch, rules):
+        return RW.lm_loss(params, self.cfg, rules, batch["tokens"],
+                          batch["labels"])
+
+    def train_batch_specs(self, shape):
+        B, S = shape.global_batch, shape.seq_len
+        return {"tokens": _tokens(B, S), "labels": _labels(B, S)}
+
+    def prefill(self, params, batch, rules, max_len):
+        return RW.prefill(params, self.cfg, rules, batch["tokens"])
+
+    def init_decode_state(self, batch, max_len):
+        return RW.init_state(self.cfg, batch)
+
+    def decode_state_specs(self, batch, max_len):
+        cfg = self.cfg
+        Lh, H, hd, d = cfg.n_layers, cfg.rwkv_heads, cfg.rwkv_head_dim, cfg.d_model
+        sp = RW.state_specs(cfg)
+        return {
+            "wkv": ArraySpec((Lh, batch, H, hd, hd), jnp.float32, sp["wkv"]),
+            "tm_prev": ArraySpec((Lh, batch, 1, d), jnp.float32, sp["tm_prev"]),
+            "cm_prev": ArraySpec((Lh, batch, 1, d), jnp.float32, sp["cm_prev"]),
+        }
+
+    def decode_step(self, params, state, tokens, pos, rules):
+        return RW.decode_step(params, self.cfg, rules, state, tokens, pos)
+
+
+class Whisper(Model):
+    def param_defs(self):
+        return W.whisper_defs(self.cfg)
+
+    def loss(self, params, batch, rules):
+        return W.loss(params, self.cfg, rules, batch["frames"],
+                      batch["tokens"], batch["labels"])
+
+    def train_batch_specs(self, shape):
+        cfg = self.cfg
+        B, S = shape.global_batch, shape.seq_len
+        return {
+            "frames": ArraySpec((B, cfg.n_audio_frames, cfg.d_model),
+                                jnp.dtype(cfg.dtype),
+                                P("batch", "frames", None)),
+            "tokens": _tokens(B, S),
+            "labels": _labels(B, S),
+        }
+
+    def prefill(self, params, batch, rules, max_len):
+        return W.prefill(params, self.cfg, rules, batch["frames"],
+                         batch["tokens"], max_len)
+
+    def init_decode_state(self, batch, max_len):
+        return W.init_state(self.cfg, batch, max_len,
+                            dtype=jnp.dtype(self.cfg.dtype))
+
+    def decode_state_specs(self, batch, max_len):
+        cfg = self.cfg
+        dt = jnp.dtype(cfg.dtype)
+        h, hd, Ld, F = cfg.n_heads, cfg.head_dim, cfg.decoder_layers, cfg.n_audio_frames
+        sp = W.state_specs(cfg)
+        return {
+            "self_k": ArraySpec((Ld, batch, max_len, h, hd), dt, sp["self_k"]),
+            "self_v": ArraySpec((Ld, batch, max_len, h, hd), dt, sp["self_v"]),
+            "cross_k": ArraySpec((Ld, batch, F, h, hd), dt, sp["cross_k"]),
+            "cross_v": ArraySpec((Ld, batch, F, h, hd), dt, sp["cross_v"]),
+        }
+
+    def decode_step(self, params, state, tokens, pos, rules):
+        return W.decode_step(params, self.cfg, rules, state, tokens, pos)
+
+    def lm_head(self, params, hidden, rules):
+        return T.lm_logits(params, hidden, self.cfg, rules)
+
+
+_FAMILIES: dict[str, type[Model]] = {
+    "dense": DecoderLM,
+    "moe": DecoderLM,
+    "vlm": VLM,
+    "hybrid": HybridLM,
+    "ssm": RwkvLM,
+    "audio": Whisper,
+}
+
+
+def build_model(cfg: ModelConfig) -> Model:
+    return _FAMILIES[cfg.family](cfg)

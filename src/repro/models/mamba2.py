@@ -1,0 +1,160 @@
+"""Mamba-2 (SSD) block — chunked state-space dual form.
+
+TPU adaptation (DESIGN.md §4): the CUDA SSD kernel's warp-level scan is
+re-blocked as *chunked* SSD — intra-chunk quadratic attention-like GEMMs that
+feed the MXU, plus an inter-chunk state recurrence carried by ``lax.scan``.
+Heads (d_inner/head_dim = 112 for zamba2-7b) are TP-sharded over ``model``
+(divisible by 16); the sequence stays unsharded inside the recurrence.
+
+The Pallas kernel (:mod:`repro.kernels.ssd_scan`) implements the same chunking
+with the state resident in VMEM; this module is its jnp oracle-equivalent.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.mesh.axes import constrain
+from repro.models import layers as L
+from repro.models.module import Param
+
+
+def mamba2_def(cfg) -> dict:
+    d, di, N, H = cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    K = cfg.conv_kernel
+    return {
+        "w_z": Param((d, di), P("embed_w", "inner")),
+        "w_x": Param((d, di), P("embed_w", "inner")),
+        "w_B": Param((d, N), P("embed_w", None)),
+        "w_C": Param((d, N), P("embed_w", None)),
+        "w_dt": Param((d, H), P("embed_w", "ssm_heads")),
+        "conv_x": Param((K, di), P("conv_k", "inner"), init="small"),
+        "conv_B": Param((K, N), P("conv_k", None), init="small"),
+        "conv_C": Param((K, N), P("conv_k", None), init="small"),
+        "A_log": Param((H,), P("ssm_heads"), init="zeros"),
+        "D": Param((H,), P("ssm_heads"), init="ones"),
+        "dt_bias": Param((H,), P("ssm_heads"), init="zeros"),
+        "out_norm": L.rmsnorm_def(di),
+        "w_out": Param((di, d), P("inner", "embed_w")),
+    }
+
+
+def _causal_conv(x, w, conv_state=None):
+    """Depthwise causal conv.  x: (B,S,C), w: (K,C).
+    With ``conv_state`` (B,K-1,C) the history is prepended (decode)."""
+    K = w.shape[0]
+    if conv_state is not None:
+        x_pad = jnp.concatenate([conv_state.astype(x.dtype), x], axis=1)
+    else:
+        x_pad = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+    S = x.shape[1]
+    out = jnp.zeros_like(x, dtype=jnp.float32)
+    for i in range(K):
+        out = out + x_pad[:, i:i + S, :].astype(jnp.float32) * w[i].astype(jnp.float32)
+    return jax.nn.silu(out).astype(x.dtype)
+
+
+def _ssd_chunked(xh, dt, a, Bm, Cm, chunk: int, state0=None):
+    """Chunked SSD.
+
+    xh: (B,S,H,Pd)  head inputs
+    dt: (B,S,H)     post-softplus step sizes
+    a:  (B,S,H)     per-step decay in (0,1]
+    Bm, Cm: (B,S,N) input/output projections (single group)
+    Returns (y (B,S,H,Pd), final_state (B,H,N,Pd)).
+    """
+    Bsz, S, H, Pd = xh.shape
+    N = Bm.shape[-1]
+    Q = min(chunk, S)
+    while S % Q:
+        Q //= 2
+    nc = S // Q
+
+    xdt = (xh * dt[..., None]).astype(jnp.float32)
+    la = jnp.log(jnp.maximum(a, 1e-20)).astype(jnp.float32)      # (B,S,H)
+
+    def rs(t, extra=()):  # (B,S,...) -> (nc, B, Q, ...)
+        return t.reshape((Bsz, nc, Q) + t.shape[2:]).swapaxes(0, 1)
+
+    xdt_c, la_c = rs(xdt), rs(la)
+    B_c, C_c = rs(Bm.astype(jnp.float32)), rs(Cm.astype(jnp.float32))
+
+    if state0 is None:
+        state0 = jnp.zeros((Bsz, H, N, Pd), jnp.float32)
+
+    def body(state, xs):
+        xdt_k, la_k, B_k, C_k = xs                 # (B,Q,H,P),(B,Q,H),(B,Q,N)
+        cs = jnp.cumsum(la_k, axis=1)              # (B,Q,H) inclusive
+        total = cs[:, -1:]                         # (B,1,H)
+        # intra-chunk: y_i += C_i . B_j * exp(cs_i - cs_j) * xdt_j (j<=i)
+        G = jnp.einsum("bqn,bkn->bqk", C_k, B_k)   # (B,Q,Q)
+        Ldec = jnp.exp(cs[:, :, None, :] - cs[:, None, :, :])      # (B,Q,K,H)
+        mask = (jnp.arange(Q)[:, None] >= jnp.arange(Q)[None, :])
+        M = G[..., None] * jnp.where(mask[None, :, :, None], Ldec, 0.0)
+        y = jnp.einsum("bqkh,bkhp->bqhp", M, xdt_k)
+        # inter-chunk: y_i += C_i . state * exp(cs_i)
+        y = y + jnp.einsum("bqn,bhnp,bqh->bqhp", C_k, state, jnp.exp(cs))
+        # state update: state = exp(total) * state + sum_j exp(total - cs_j) B_j xdt_j
+        wj = jnp.exp(total - cs)                   # (B,Q,H)
+        new_state = state * jnp.exp(total).transpose(0, 2, 1)[..., None]
+        new_state = new_state + jnp.einsum("bqn,bqh,bqhp->bhnp", B_k, wj, xdt_k)
+        return new_state, y
+
+    state, ys = jax.lax.scan(body, state0, (xdt_c, la_c, B_c, C_c))
+    y = ys.swapaxes(0, 1).reshape(Bsz, S, H, Pd)
+    return y.astype(xh.dtype), state
+
+
+def mamba2_block(params, x, cfg, rules, *, ssm_state=None, conv_state=None,
+                 chunk: int = 256):
+    """x: (B,S,d).  Training: states None.  Decode (S small): pass and
+    receive (ssm_state (B,H,N,Pd) f32, conv_state dict of (B,K-1,C)).
+
+    Returns (y (B,S,d), new_ssm_state, new_conv_state).
+    """
+    H, Pd, N, K = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state, cfg.conv_kernel
+    z = x @ params["w_z"].astype(x.dtype)
+    xc = x @ params["w_x"].astype(x.dtype)
+    Bm = x @ params["w_B"].astype(x.dtype)
+    Cm = x @ params["w_C"].astype(x.dtype)
+    dt = x @ params["w_dt"].astype(x.dtype)
+
+    new_conv = None
+    if conv_state is not None:
+        cat = lambda old, new: jnp.concatenate(
+            [old, new.astype(old.dtype)], axis=1)[:, -(K - 1):]
+        new_conv = {"x": cat(conv_state["x"], xc),
+                    "B": cat(conv_state["B"], Bm),
+                    "C": cat(conv_state["C"], Cm)}
+        xc = _causal_conv(xc, params["conv_x"], conv_state["x"])
+        Bm = _causal_conv(Bm, params["conv_B"], conv_state["B"])
+        Cm = _causal_conv(Cm, params["conv_C"], conv_state["C"])
+    else:
+        xc = _causal_conv(xc, params["conv_x"])
+        Bm = _causal_conv(Bm, params["conv_B"])
+        Cm = _causal_conv(Cm, params["conv_C"])
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32)
+                         + params["dt_bias"].astype(jnp.float32))
+    a = jnp.exp(-jnp.exp(params["A_log"].astype(jnp.float32)) * dt)  # (B,S,H)
+
+    xh = xc.reshape(xc.shape[0], xc.shape[1], H, Pd)
+    xh = constrain(xh, P("batch", None, "ssm_heads", None), rules)
+    y, new_state = _ssd_chunked(xh, dt, a, Bm, Cm, chunk, state0=ssm_state)
+    y = y + xh.astype(jnp.float32) * params["D"].astype(jnp.float32)[:, None]
+    y = y.reshape(xc.shape)
+
+    y = L.rmsnorm(params["out_norm"], y.astype(x.dtype) * jax.nn.silu(z))
+    out = y @ params["w_out"].astype(y.dtype)
+    return out, new_state, new_conv
+
+
+def init_mamba_state(cfg, batch: int):
+    H, Pd, N, K = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state, cfg.conv_kernel
+    return {
+        "ssm": jnp.zeros((batch, H, N, Pd), jnp.float32),
+        "conv": {"x": jnp.zeros((batch, K - 1, cfg.d_inner), jnp.float32),
+                 "B": jnp.zeros((batch, K - 1, N), jnp.float32),
+                 "C": jnp.zeros((batch, K - 1, N), jnp.float32)},
+    }

@@ -1,0 +1,183 @@
+"""Mixture-of-Experts with sort-based dispatch + expert-parallel all_to_all.
+
+This is the paper's §3.2 dynamic load balancing transplanted to token routing
+(DESIGN.md §3): tokens are the walkers, experts are the processors, the
+capacity factor realizes ``find_optimal_workload``'s balanced target, and the
+``all_to_all`` exchange is ``redistribute_work`` on the ICI torus.  The
+auxiliary balancing loss *drives the router towards the balanced distribution*
+that the paper's rebalancer would impose after the fact — the differentiable
+version of the same idea.
+
+Dispatch is sort-based (argsort by expert, capacity-bounded scatter), NOT a
+one-hot einsum: HLO FLOPs then consist of the true expert GEMMs only, keeping
+`cost_analysis()` (and the roofline) honest.
+
+The block is written in the paper's explicit-communication style inside a
+``shard_map``; with ``rules=None``/``SerialComm`` the identical code runs on
+one device (serial/parallel duality, as in the paper).
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.core.comm import Comm, SerialComm
+from repro.mesh.axes import AxisRules, logical_to_mesh
+from repro.models.module import Param
+
+
+def moe_def(cfg) -> dict:
+    d, E, eff = cfg.d_model, cfg.n_experts, cfg.expert_d_ff
+    return {
+        "router": Param((d, E), P("embed", None), init="small"),
+        "gate": Param((E, d, eff), P("experts", "expert_embed", "expert_mlp")),
+        "up": Param((E, d, eff), P("experts", "expert_embed", "expert_mlp")),
+        "down": Param((E, eff, d), P("experts", "expert_mlp", "expert_embed")),
+    }
+
+
+def capacity(tokens_local: int, top_k: int, n_experts: int, cf: float) -> int:
+    """Per-shard, per-expert slot budget — ``find_optimal_workload`` with
+    uniform timings becomes the balanced ±1 split scaled by the capacity
+    factor."""
+    c = math.ceil(tokens_local * top_k / n_experts * cf)
+    return max(4, ((c + 3) // 4) * 4)
+
+
+def _dispatch_compute_combine(x2d, wr, wg, wu, wd, cfg, comm, tp_comm=None):
+    """Core routed computation on one shard.  x2d: (T_l, d).
+
+    ``tp_comm``: expert-TP mode — the expert ff dim is sharded over this
+    axis; the down projection's partial sums are psum'd across it."""
+    T_l, d = x2d.shape
+    E, k = cfg.n_experts, cfg.top_k
+    ep = comm.size()
+    assert E % ep == 0, (E, ep)
+    E_loc = E // ep
+    C = capacity(T_l, k, E, cfg.capacity_factor)
+
+    # --- route ------------------------------------------------------------
+    logits = (x2d.astype(jnp.float32) @ wr.astype(jnp.float32))      # (T_l, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_p, top_e = jax.lax.top_k(probs, k)                           # (T_l, k)
+    top_p = top_p / jnp.maximum(top_p.sum(-1, keepdims=True), 1e-9)  # renorm
+
+    # --- aux losses (global means via psum) ---------------------------------
+    me = jnp.mean(probs, axis=0)                                     # (E,)
+    ce_frac = jnp.zeros((E,), jnp.float32).at[top_e.reshape(-1)].add(
+        1.0 / (T_l * k))
+    me = comm.all_reduce_sum(me) / max(comm.size(), 1)
+    ce_frac = comm.all_reduce_sum(ce_frac) / max(comm.size(), 1)
+    aux = E * jnp.sum(me * ce_frac)
+    zl = jnp.mean(jax.scipy.special.logsumexp(logits, axis=-1) ** 2)
+    aux = aux + cfg.router_z_weight * comm.all_reduce_sum(zl) / max(comm.size(), 1)
+
+    # --- sort-based dispatch ------------------------------------------------
+    flat_e = top_e.reshape(-1)                                       # (T_l*k,)
+    order = jnp.argsort(flat_e)
+    sorted_e = flat_e[order]
+    sorted_tok = order // k
+    oh = jax.nn.one_hot(sorted_e, E, dtype=jnp.int32)
+    pos_in_e = (jnp.cumsum(oh, axis=0) * oh).sum(-1) - 1             # rank in expert
+    keep = pos_in_e < C
+    slot = jnp.where(keep, sorted_e * C + pos_in_e, E * C)           # drop -> OOB
+    buf = jnp.zeros((E * C + 1, d), x2d.dtype).at[slot].set(
+        x2d[sorted_tok], mode="drop")
+    buf = buf[:-1].reshape(E, C, d)
+
+    # --- EP exchange: redistribute_work on the torus ------------------------
+    buf = comm.all_to_all(buf, split_axis=0, concat_axis=1)          # (E_loc, C*ep, d)
+
+    # --- expert GEMMs (the only matmul FLOPs in the block) -------------------
+    g = jnp.einsum("ecd,edf->ecf", buf, wg.astype(buf.dtype))
+    u = jnp.einsum("ecd,edf->ecf", buf, wu.astype(buf.dtype))
+    h = jax.nn.silu(g) * u
+    out = jnp.einsum("ecf,efd->ecd", h, wd.astype(h.dtype))
+    if tp_comm is not None:
+        # expert-TP: ff dim sharded; sum the down-projection partials
+        out = tp_comm.all_reduce_sum(out.astype(jnp.float32)).astype(out.dtype)
+
+    # --- return + combine ----------------------------------------------------
+    out = comm.all_to_all(out, split_axis=1, concat_axis=0)          # (E, C, d)
+    out = out.reshape(E * C, d)
+    gathered = jnp.where(keep[:, None], out[jnp.clip(slot, 0, E * C - 1)], 0.0)
+    w_sorted = top_p.reshape(-1)[order]
+    contrib = gathered * w_sorted[:, None].astype(gathered.dtype)
+    y = jnp.zeros((T_l, d), x2d.dtype).at[sorted_tok].add(contrib)
+    return y, aux
+
+
+def moe_apply(params, x, cfg, rules: AxisRules | None):
+    """x: (B, S, d) -> (y, aux_loss)."""
+    wr, wg, wu, wd = (params["router"], params["gate"], params["up"],
+                      params["down"])
+
+    if rules is None or rules.mesh is None:
+        y2d, aux = _dispatch_compute_combine(
+            x.reshape(-1, x.shape[-1]), wr, wg, wu, wd, cfg, SerialComm())
+        return y2d.reshape(x.shape), aux
+
+    mesh = rules.mesh
+    x_spec = logical_to_mesh(P("batch", "seq", None), rules)
+    w_specs = {
+        "router": logical_to_mesh(P("embed", None), rules),
+        "gate": logical_to_mesh(P("experts", "expert_embed", "expert_mlp"),
+                                rules),
+        "up": logical_to_mesh(P("experts", "expert_embed", "expert_mlp"),
+                              rules),
+        "down": logical_to_mesh(P("experts", "expert_mlp", "expert_embed"),
+                                rules),
+    }
+    fsdp_axes = rules.get("expert_embed")
+    tp_axes = rules.get("expert_mlp")
+
+    def _fsdp_gather(fs, w, dim):
+        """All-gather a weight's FSDP-sharded ``dim`` (explicit ZeRO-3)."""
+        g = fs.all_gather(w, tiled=False)             # (F, ...)
+        g = jnp.moveaxis(g, 0, dim)                   # (..., F, d/F, ...)
+        shape = list(w.shape)
+        shape[dim] = -1
+        return g.reshape(shape)
+
+    def body(x_l, wr_l, wg_l, wu_l, wd_l):
+        comm_ep = Comm("model")
+        B_l, S_l, d = x_l.shape
+        x2d = x_l.reshape(-1, d)
+        if fsdp_axes is not None:
+            # TRAIN mode (ZeRO-3): many tokens amortize a per-layer weight
+            # gather; expert weights arrive d-sharded and are gathered.
+            fs = Comm(fsdp_axes)
+            wg_l = _fsdp_gather(fs, wg_l, 1)          # (E_loc, d, eff)
+            wu_l = _fsdp_gather(fs, wu_l, 1)
+            wd_l = _fsdp_gather(fs, wd_l, 2)          # (E_loc, eff, d)
+            y, aux = _dispatch_compute_combine(
+                x2d, wr_l, wg_l, wu_l, wd_l, cfg, comm_ep)
+        elif tp_axes is not None:
+            # DECODE mode (weight-stationary expert TP): the token batch is
+            # tiny, the weights are 480B — so move the tokens, never the
+            # weights.  Gather this axis's few tokens, compute against the
+            # local ff slice, psum the down partials, slice my rows back.
+            tpc = Comm(tp_axes)
+            T_l = x2d.shape[0]
+            x_all = tpc.all_gather(x2d, tiled=True)   # (T_l * n_tp, d)
+            y_all, aux = _dispatch_compute_combine(
+                x_all, wr_l, wg_l, wu_l, wd_l, cfg, comm_ep, tp_comm=tpc)
+            y = jax.lax.dynamic_slice_in_dim(y_all, tpc.rank() * T_l, T_l, 0)
+        else:
+            y, aux = _dispatch_compute_combine(
+                x2d, wr_l, wg_l, wu_l, wd_l, cfg, comm_ep)
+        aux = Comm(mesh.axis_names).all_reduce_sum(aux) / mesh.size
+        return y.reshape(B_l, S_l, d), aux
+
+    y, aux = jax.shard_map(
+        body, mesh=mesh,
+        in_specs=(x_spec, w_specs["router"], w_specs["gate"], w_specs["up"],
+                  w_specs["down"]),
+        out_specs=(x_spec, P()),
+        check_vma=False,
+    )(x, wr, wg, wu, wd)
+    return y, aux

@@ -1,0 +1,181 @@
+"""RWKV-6 (Finch) — attention-free token mixing with data-dependent decay.
+
+TPU adaptation: the per-head state recurrence
+``S_t = diag(w_t) S_t-1 + k_t v_t^T`` runs as one ``lax.scan`` over time; the
+per-head *value* channels (64) are TP-sharded over ``model`` (the head count
+40 does not divide 16, value channels do), so the state (B,H,K,V/16) and the
+output projection contraction are sharded with a single psum at the output.
+The Pallas kernel (:mod:`repro.kernels.rwkv6_scan`) keeps the state in VMEM
+scratch across grid steps; this module is its jnp oracle-equivalent.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.mesh.axes import constrain
+from repro.models import layers as L
+from repro.models.module import Param
+
+
+def rwkv_block_def(cfg) -> dict:
+    d, hd = cfg.d_model, cfg.rwkv_head_dim
+    H = cfg.rwkv_heads
+    return {
+        "ln1": L.layernorm_def(d),
+        "ln2": L.layernorm_def(d),
+        "tm": {  # time mix
+            "mu_r": Param((d,), P(None), init="small"),
+            "mu_k": Param((d,), P(None), init="small"),
+            "mu_v": Param((d,), P(None), init="small"),
+            "mu_g": Param((d,), P(None), init="small"),
+            "mu_w": Param((d,), P(None), init="small"),
+            "w_r": Param((d, H, hd), P("embed_w", None, None)),
+            "w_k": Param((d, H, hd), P("embed_w", None, None)),
+            "w_v": Param((d, H, hd), P("embed_w", None, "rwkv_v")),
+            "w_g": Param((d, H, hd), P("embed_w", None, "rwkv_v")),
+            "w_decay": Param((d, H, hd), P("embed_w", None, None), init="small"),
+            "decay_base": Param((H, hd), P(None, None), init="zeros"),
+            "u": Param((H, hd), P(None, None), init="small"),
+            "ln_x": L.layernorm_def(H * hd),
+            "w_o": Param((H, hd, d), P(None, "rwkv_v", "embed_w")),
+        },
+        "cm": {  # channel mix
+            "mu_k": Param((d,), P(None), init="small"),
+            "mu_r": Param((d,), P(None), init="small"),
+            "w_k": Param((d, cfg.d_ff), P("embed_w", "mlp")),
+            "w_v": Param((cfg.d_ff, d), P("mlp", "embed_w")),
+            "w_r": Param((d, d), P("embed_w", None)),
+        },
+    }
+
+
+def _token_shift(x, x_prev=None):
+    """(B,S,d) -> previous token's activations (decode: x_prev (B,1,d))."""
+    if x_prev is None:
+        return jnp.pad(x, ((0, 0), (1, 0), (0, 0)))[:, :-1]
+    return jnp.concatenate([x_prev.astype(x.dtype), x], axis=1)[:, :-1]
+
+
+def _lerp(x, shifted, mu):
+    return x + (shifted - x) * mu.astype(x.dtype)
+
+
+def _wkv_chunked(r, k, v, w, u, state, *, chunk: int):
+    """Chunked matmul form of the wkv recurrence (the SSD trick applied to
+    RWKV-6; mirrors the Pallas kernel's blocking in pure jnp).
+
+    Per chunk of Q steps, with lw = log w and inclusive cumsum cs (per key
+    channel):
+
+        y_t = (r_t ∘ e^{cs_{t-1}}) · S_0              (inter-chunk)
+            + Σ_{j<t} [(r_t ∘ e^{cs_{t-1}}) · (k_j ∘ e^{-cs_j})] v_j
+            + ((r_t ∘ u) · k_t) v_t                   (bonus diagonal)
+        S_Q  = diag(e^{cs_Q}) S_0 + Σ_j (k_j ∘ e^{cs_Q - cs_j}) v_j^T
+
+    The state round-trips HBM once per CHUNK instead of once per step
+    (the jnp scan's pathology — see EXPERIMENTS.md §Perf/rwkv), and the
+    inner sums are (Q x Q) / (Q x V) GEMMs that feed the MXU.
+    Numerics: f32 with Q <= 32 keeps |cs| ~< 32, inside f32 exp range.
+    """
+    B, S, H, K = r.shape
+    Q = chunk
+    nc = S // Q
+
+    def to_chunks(t):                              # (B,S,H,C) -> (nc,B,Q,H,C)
+        return t.reshape(B, nc, Q, H, t.shape[-1]).swapaxes(0, 1)
+
+    rc, kc, vc = to_chunks(r), to_chunks(k), to_chunks(v)
+    lw = to_chunks(jnp.log(jnp.maximum(w, 1e-30)))
+
+    def body(S0, xs):
+        r_, k_, v_, lw_ = xs                       # (B,Q,H,K/V)
+        cs = jnp.cumsum(lw_, axis=1)               # inclusive (B,Q,H,K)
+        cs_prev = cs - lw_                         # exclusive
+        r_t = r_ * jnp.exp(cs_prev)
+        k_t = k_ * jnp.exp(-cs)
+        A = jnp.einsum("bqhk,bjhk->bhqj", r_t, k_t)
+        mask = jnp.tril(jnp.ones((Q, Q), bool), -1)
+        A = jnp.where(mask[None, None], A, 0.0)
+        diag = jnp.einsum("bqhk,bqhk->bqh", r_ * u, k_)
+        y = jnp.einsum("bhqj,bjhv->bqhv", A, v_)
+        y = y + diag[..., None] * v_
+        y = y + jnp.einsum("bqhk,bhkv->bqhv", r_t, S0)
+        k_end = k_ * jnp.exp(cs[:, -1:] - cs)      # (B,Q,H,K)
+        S_new = S0 * jnp.exp(cs[:, -1])[..., None] \
+            + jnp.einsum("bqhk,bqhv->bhkv", k_end, v_)
+        return S_new, y
+
+    state, ys = jax.lax.scan(body, state, (rc, kc, vc, lw))
+    y = ys.swapaxes(0, 1).reshape(B, S, H, -1)
+    return y, state
+
+
+def time_mix(p, x, cfg, rules, *, state=None, x_prev=None):
+    """Returns (out, new_state, last_x).  state: (B,H,K,V) f32."""
+    B, S, d = x.shape
+    H, hd = cfg.rwkv_heads, cfg.rwkv_head_dim
+    sx = _token_shift(x, x_prev)
+    r = jnp.einsum("bsd,dhk->bshk", _lerp(x, sx, p["mu_r"]), p["w_r"].astype(x.dtype))
+    k = jnp.einsum("bsd,dhk->bshk", _lerp(x, sx, p["mu_k"]), p["w_k"].astype(x.dtype))
+    v = jnp.einsum("bsd,dhv->bshv", _lerp(x, sx, p["mu_v"]), p["w_v"].astype(x.dtype))
+    g = jnp.einsum("bsd,dhv->bshv", _lerp(x, sx, p["mu_g"]), p["w_g"].astype(x.dtype))
+    wlog = jnp.einsum("bsd,dhk->bshk", _lerp(x, sx, p["mu_w"]),
+                      p["w_decay"].astype(x.dtype))
+    # data-dependent decay in (0,1): w = exp(-exp(base + wlog))
+    w = jnp.exp(-jnp.exp(p["decay_base"].astype(jnp.float32)
+                         + wlog.astype(jnp.float32)))          # (B,S,H,K)
+    u = p["u"].astype(jnp.float32)
+
+    v = constrain(v, P("batch", None, None, "rwkv_v"), rules)
+    g = constrain(g, P("batch", None, None, "rwkv_v"), rules)
+
+    if state is None:
+        state = jnp.zeros((B, H, hd, v.shape[-1]), jnp.float32)
+        state = constrain(state, P("batch", None, None, "rwkv_v"), rules)
+
+    chunk = cfg.rwkv_time_chunk
+    if chunk and S > 1 and S % chunk == 0:
+        y, state = _wkv_chunked(r.astype(jnp.float32), k.astype(jnp.float32),
+                                v.astype(jnp.float32), w, u, state,
+                                chunk=chunk)
+    else:
+        def step(S_, xs):
+            r_t, k_t, v_t, w_t = xs                             # (B,H,K),(B,H,V)
+            kv = k_t[..., :, None] * v_t[..., None, :]          # (B,H,K,V)
+            y = jnp.einsum("bhk,bhkv->bhv", r_t, S_ + u[..., None] * kv)
+            S_ = w_t[..., None] * S_ + kv
+            return S_, y
+
+        xs = (r.astype(jnp.float32).swapaxes(0, 1),
+              k.astype(jnp.float32).swapaxes(0, 1),
+              v.astype(jnp.float32).swapaxes(0, 1),
+              w.swapaxes(0, 1))
+        state, ys = jax.lax.scan(step, state, xs)
+        y = ys.swapaxes(0, 1)                                   # (B,S,H,V)
+    y = y.reshape(B, S, -1)
+    y = L.layernorm(p["ln_x"], y) if y.shape[-1] == H * hd else y
+    y = y.reshape(B, S, H, -1) * jax.nn.silu(g.astype(y.dtype))
+    out = jnp.einsum("bshv,hvd->bsd", y, p["w_o"].astype(y.dtype))
+    return out.astype(x.dtype), state, x[:, -1:]
+
+
+def channel_mix(p, x, *, x_prev=None):
+    sx = _token_shift(x, x_prev)
+    k = _lerp(x, sx, p["mu_k"]) @ p["w_k"].astype(x.dtype)
+    k = jnp.square(jax.nn.relu(k))
+    kv = k @ p["w_v"].astype(x.dtype)
+    r = jax.nn.sigmoid(_lerp(x, sx, p["mu_r"]) @ p["w_r"].astype(x.dtype))
+    return r * kv, x[:, -1:]
+
+
+def rwkv_block(params, x, cfg, rules, *, tm_state=None, tm_prev=None,
+               cm_prev=None):
+    h = L.layernorm(params["ln1"], x)
+    o, new_state, new_tm_prev = time_mix(params["tm"], h, cfg, rules,
+                                         state=tm_state, x_prev=tm_prev)
+    x = x + o
+    h = L.layernorm(params["ln2"], x)
+    o, new_cm_prev = channel_mix(params["cm"], h, x_prev=cm_prev)
+    return x + o, new_state, new_tm_prev, new_cm_prev

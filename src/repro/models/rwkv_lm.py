@@ -1,0 +1,105 @@
+"""RWKV-6 language model: embed -> [rwkv blocks] -> norm -> head.
+
+Training runs the per-layer time recurrence with ``lax.scan`` over layers
+(stacked params) and, inside each block, ``lax.scan`` over time (the jnp
+oracle of the Pallas ``rwkv6_scan`` kernel).  Decode state is O(1) in the
+sequence length: per layer a (B, H, K, V) f32 wkv state plus the 1-token
+shift buffers — so the ``long_500k`` shape runs with the same state shapes as
+``decode_32k``.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.mesh.axes import constrain
+from repro.models import layers as L
+from repro.models import rwkv6 as R
+from repro.models import transformer as T
+from repro.models.module import Param
+
+
+def rwkv_lm_defs(cfg) -> dict:
+    return {
+        "embed": {"table": Param((cfg.padded_vocab, cfg.d_model),
+                                 P("vocab", "embed_w"), init="small")},
+        "ln_in": L.layernorm_def(cfg.d_model),
+        "blocks": T.stack_defs(R.rwkv_block_def(cfg), cfg.n_layers),
+        "final_norm": L.layernorm_def(cfg.d_model),
+        "unembed": {"w": Param((cfg.d_model, cfg.padded_vocab),
+                               P("embed_w", "vocab"), init="small")},
+    }
+
+
+def forward(params, cfg, rules, tokens):
+    x = T.embed_tokens(params, tokens, cfg, rules)
+    x = L.layernorm(params["ln_in"], x)
+
+    def body(x, p):
+        x, _, _, _ = R.rwkv_block(p, x, cfg, rules)
+        return x, None
+
+    x, _ = jax.lax.scan(T._remat(body, cfg), x, params["blocks"])
+    return L.layernorm(params["final_norm"], x)
+
+
+def lm_loss(params, cfg, rules, tokens, labels, loss_chunks: int = 8):
+    hidden = forward(params, cfg, rules, tokens)
+    ce, cnt = T.loss_from_hidden(params["unembed"]["w"], hidden, labels, cfg,
+                                 rules, loss_chunks)
+    return ce, {"ce": ce, "tokens": cnt}
+
+
+# ---------------------------------------------------------------------------
+# Serving (state is O(1) in sequence length)
+# ---------------------------------------------------------------------------
+
+def init_state(cfg, batch: int, max_len: int = 0, dtype=jnp.bfloat16):
+    Lh, H, hd, d = cfg.n_layers, cfg.rwkv_heads, cfg.rwkv_head_dim, cfg.d_model
+    del max_len  # recurrent state: independent of context length
+    return {
+        "wkv": jnp.zeros((Lh, batch, H, hd, hd), jnp.float32),
+        "tm_prev": jnp.zeros((Lh, batch, 1, d), jnp.float32),
+        "cm_prev": jnp.zeros((Lh, batch, 1, d), jnp.float32),
+    }
+
+
+def state_specs(cfg):
+    return {
+        "wkv": P(None, "batch", None, None, "rwkv_v"),
+        "tm_prev": P(None, "batch", None, None),
+        "cm_prev": P(None, "batch", None, None),
+    }
+
+
+def _forward_with_state(params, cfg, rules, x, state):
+    x = L.layernorm(params["ln_in"], x)
+
+    def body(x, xs):
+        p, wkv, tmp, cmp = xs
+        x, nw, ntp, ncp = R.rwkv_block(p, x, cfg, rules, tm_state=wkv,
+                                       tm_prev=tmp, cm_prev=cmp)
+        return x, (nw, ntp.astype(jnp.float32), ncp.astype(jnp.float32))
+
+    x, (nw, ntp, ncp) = jax.lax.scan(
+        body, x, (params["blocks"], state["wkv"], state["tm_prev"],
+                  state["cm_prev"]))
+    x = L.layernorm(params["final_norm"], x)
+    return x, {"wkv": nw, "tm_prev": ntp, "cm_prev": ncp}
+
+
+def prefill(params, cfg, rules, tokens, max_len: int = 0):
+    B = tokens.shape[0]
+    state = init_state(cfg, B)
+    x = T.embed_tokens(params, tokens, cfg, rules)
+    x, state = _forward_with_state(params, cfg, rules, x, state)
+    return state, x
+
+
+def decode_step(params, cfg, rules, state, tokens, pos):
+    del pos  # recurrent: position enters only through the state
+    x = T.embed_tokens(params, tokens, cfg, rules)
+    x, state = _forward_with_state(params, cfg, rules, x, state)
+    logits = T.lm_logits(params, x, cfg, rules)
+    return state, logits

@@ -1,0 +1,399 @@
+"""Decoder-only LM (dense + MoE variants) with scan-over-layers.
+
+Distribution follows DESIGN.md §5: batch->data(+pod), sequence->model
+(context parallelism; KV all-gathered, cheap under GQA), MLP/vocab/experts
+TP over model, weights FSDP-stored over data.  All sharding is expressed
+through logical ``constrain`` calls so the same code runs single-device
+(rules=None) and on the production meshes.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.mesh.axes import AxisRules, constrain
+from repro.models import layers as L
+from repro.models import attention as A
+from repro.models import moe as M
+from repro.models.module import Param
+
+BIG_WINDOW = 1 << 30
+
+
+# ---------------------------------------------------------------------------
+# Parameter definitions
+# ---------------------------------------------------------------------------
+
+def stack_defs(defs, n: int):
+    """Prepend a stacked ``layers`` axis to every Param in a layer def tree."""
+    def stack(p: Param) -> Param:
+        return Param((n,) + tuple(p.shape), P("layers", *p.spec), init=p.init,
+                     scale=p.scale, dtype=p.dtype)
+    return jax.tree_util.tree_map(stack, defs, is_leaf=lambda x: isinstance(x, Param))
+
+
+def block_defs(cfg) -> dict:
+    d = {
+        "ln1": L.rmsnorm_def(cfg.d_model),
+        "attn": A.attention_def(cfg),
+        "ln2": L.rmsnorm_def(cfg.d_model),
+    }
+    if cfg.n_experts:
+        d["moe"] = M.moe_def(cfg)
+        if cfg.dense_residual:
+            d["mlp"] = L.mlp_def(cfg.d_model, cfg.d_ff)
+    else:
+        d["mlp"] = L.mlp_def(cfg.d_model, cfg.d_ff)
+    return d
+
+
+def transformer_defs(cfg) -> dict:
+    return {
+        "embed": {"table": Param((cfg.padded_vocab, cfg.d_model),
+                                 P("vocab", "embed_w"), init="small")},
+        "blocks": stack_defs(block_defs(cfg), cfg.n_layers),
+        "final_norm": L.rmsnorm_def(cfg.d_model),
+        "unembed": {"w": Param((cfg.d_model, cfg.padded_vocab),
+                               P("embed_w", "vocab"), init="small")},
+    }
+
+
+def layer_windows(cfg) -> jnp.ndarray:
+    """(L,) per-layer attention window (BIG_WINDOW = global)."""
+    return jnp.asarray(
+        [cfg.window_for_layer(i) or BIG_WINDOW for i in range(cfg.n_layers)],
+        jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# One block
+# ---------------------------------------------------------------------------
+
+def block_apply(params, x, cfg, rules, *, positions, window,
+                cache_k=None, cache_v=None, cache_pos=None):
+    """Pre-norm block.  Returns (x, new_k, new_v) where new_k/new_v are the
+    (possibly cache-updated) K/V for this layer (train: fresh; decode: cache).
+    """
+    h = L.rmsnorm(params["ln1"], x, use_pallas=cfg.use_pallas)
+    h = constrain(h, P("batch", "seq", None), rules)
+    q, k, v = A.qkv_project(params["attn"], h, cfg, positions,
+                            rules=rules)
+
+    if cache_k is not None:
+        # decode: write new k/v at cache_pos, attend over the full cache.
+        # cache_pos may be scalar (aligned decode) or (B,) (ragged slots —
+        # continuous batching: every slot sits at its own length).
+        if jnp.ndim(cache_pos) == 1:
+            upd = jax.vmap(
+                lambda c, x, p: jax.lax.dynamic_update_slice_in_dim(
+                    c, x, p, axis=0))
+            new_k = upd(cache_k, k, cache_pos)
+            new_v = upd(cache_v, v, cache_pos)
+        else:
+            new_k = jax.lax.dynamic_update_slice_in_dim(cache_k, k, cache_pos,
+                                                        axis=1)
+            new_v = jax.lax.dynamic_update_slice_in_dim(cache_v, v, cache_pos,
+                                                        axis=1)
+        new_k = constrain(new_k, P("batch", "kv_seq", None, None), rules)
+        new_v = constrain(new_v, P("batch", "kv_seq", None, None), rules)
+        kv_len = cache_pos + q.shape[1]
+        o = A.gqa_attention(q, new_k, new_v, causal=True, window=window,
+                            q_offset=cache_pos, kv_valid_len=kv_len,
+                            kv_chunk=max(cache_k.shape[1], 1),
+                            use_pallas=False)
+    else:
+        # train/prefill: q is sequence-sharded; gather K/V across model axis
+        new_k = constrain(k, P("batch", None, None, None), rules)
+        new_v = constrain(v, P("batch", None, None, None), rules)
+        o = A.gqa_attention(q, new_k, new_v, causal=True, window=window,
+                            kv_chunk=cfg.kv_chunk, use_pallas=cfg.use_pallas)
+
+    o = constrain(o, P("batch", "seq", None, None), rules)
+    x = x + A.out_project(params["attn"], o)
+
+    h = L.rmsnorm(params["ln2"], x, use_pallas=cfg.use_pallas)
+    h = constrain(h, P("batch", "seq", None), rules)
+    aux = jnp.zeros((), jnp.float32)
+    if cfg.n_experts:
+        y, aux = M.moe_apply(params["moe"], h, cfg, rules)
+        if cfg.dense_residual:
+            y = y + L.mlp(params["mlp"], h)
+    else:
+        y = L.mlp(params["mlp"], h)
+    y = constrain(y, P("batch", "seq", None), rules)
+    return x + y, new_k, new_v, aux
+
+
+def _remat(fn, cfg):
+    if cfg.remat == "none":
+        return fn
+    if cfg.remat == "dots":
+        policy = jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+    else:
+        policy = jax.checkpoint_policies.nothing_saveable
+    return jax.checkpoint(fn, policy=policy)
+
+
+# ---------------------------------------------------------------------------
+# Forward passes
+# ---------------------------------------------------------------------------
+
+def embed_tokens(params, tokens, cfg, rules):
+    x = L.embed(params["embed"], tokens).astype(jnp.dtype(cfg.dtype))
+    return constrain(x, P("batch", "seq", None), rules)
+
+
+def forward(params, cfg, rules, tokens=None, inputs_embeds=None):
+    """Training/scoring forward (no cache).  Returns (hidden, aux_loss)."""
+    x = inputs_embeds if inputs_embeds is not None \
+        else embed_tokens(params, tokens, cfg, rules)
+    S = x.shape[1]
+    positions = jnp.arange(S)
+    windows = layer_windows(cfg)
+
+    def body(carry, xs):
+        x, aux = carry
+        p, w = xs
+        x, _, _, a = block_apply(p, x, cfg, rules, positions=positions,
+                                 window=w)
+        return (x, aux + a), None
+
+    (x, aux), _ = jax.lax.scan(_remat(body, cfg),
+                               (x, jnp.zeros((), jnp.float32)),
+                               (params["blocks"], windows))
+    x = L.rmsnorm(params["final_norm"], x, use_pallas=cfg.use_pallas)
+    return x, aux / max(cfg.n_layers, 1)
+
+
+def lm_logits(params, hidden, cfg, rules):
+    logits = jnp.einsum("bsd,dv->bsv", hidden,
+                        params["unembed"]["w"].astype(hidden.dtype),
+                        preferred_element_type=jnp.float32)
+    return constrain(logits, P("batch", None, "vocab"), rules)
+
+
+def loss_from_hidden(unembed_w, hidden, labels, cfg, rules,
+                     loss_chunks: int = 8):
+    """Cross-entropy from final hidden states with sequence-chunked,
+    rematerialized logits.  Shared by every architecture family.
+
+    The loss region is vocab-parallel (Megatron-style): hidden is resharded
+    to (batch: data, seq: full) so logits shard over vocab ("model") and the
+    softmax reductions psum across it; the seq dim is free for chunking."""
+    hidden = constrain(hidden, P("batch", None, None), rules)
+    labels = constrain(labels, P("batch", None), rules)
+    S = hidden.shape[1]
+    chunks = loss_chunks if S % loss_chunks == 0 and S >= loss_chunks else 1
+    c = S // chunks
+
+    def chunk_loss(h_c, l_c):
+        logits = jnp.einsum("bsd,dv->bsv", h_c, unembed_w.astype(h_c.dtype),
+                            preferred_element_type=jnp.float32)
+        logits = constrain(logits, P("batch", None, "vocab"), rules)
+        return _masked_ce_sums(logits, l_c, cfg)
+
+    chunk_loss = jax.checkpoint(chunk_loss)
+
+    hs = hidden.reshape(hidden.shape[0], chunks, c, -1).swapaxes(0, 1)
+    ls = labels.reshape(labels.shape[0], chunks, c).swapaxes(0, 1)
+
+    def body(carry, xs):
+        tot, cnt = carry
+        t, n = chunk_loss(*xs)
+        return (tot + t, cnt + n), None
+
+    (tot, cnt), _ = jax.lax.scan(body, (jnp.zeros((), jnp.float32),) * 2,
+                                 (hs, ls))
+    return tot / jnp.maximum(cnt, 1.0), cnt
+
+
+def lm_loss(params, cfg, rules, tokens=None, labels=None, inputs_embeds=None,
+            loss_chunks: int = 8):
+    hidden, aux = forward(params, cfg, rules, tokens=tokens,
+                          inputs_embeds=inputs_embeds)
+    ce, cnt = loss_from_hidden(params["unembed"]["w"], hidden, labels, cfg,
+                               rules, loss_chunks)
+    loss = ce
+    if cfg.n_experts:
+        loss = loss + cfg.moe_aux_weight * aux
+    return loss, {"ce": ce, "aux": aux, "tokens": cnt}
+
+
+def _masked_ce_sums(logits, labels, cfg):
+    """(sum nll, count) with padded-vocab masking, TP-safe (one-hot gold)."""
+    v = logits.shape[-1]
+    if cfg.padded_vocab > cfg.vocab:
+        pad = jnp.arange(v) >= cfg.vocab
+        logits = jnp.where(pad, -1e30, logits)
+    m = jax.lax.stop_gradient(jnp.max(logits, axis=-1, keepdims=True))
+    lse = jnp.log(jnp.sum(jnp.exp(logits - m), axis=-1)) + m[..., 0]
+    onehot = jax.nn.one_hot(jnp.maximum(labels, 0), v, dtype=logits.dtype)
+    gold = jnp.sum(logits * onehot, axis=-1)
+    nll = lse - gold
+    w = (labels >= 0).astype(jnp.float32)
+    if cfg.z_loss:
+        nll = nll + cfg.z_loss * lse ** 2
+    return jnp.sum(nll * w), jnp.sum(w)
+
+
+# ---------------------------------------------------------------------------
+# Serving: prefill + decode
+# ---------------------------------------------------------------------------
+
+def uses_window_cache(cfg) -> bool:
+    """Sliding-window archs (gemma3 5:1) keep ring caches of size `window`
+    for local layers — at 500k context that is a ~7x cache cut (29 of 34
+    layers hold 1024 entries instead of 524288)."""
+    return bool(cfg.local_window and cfg.global_every)
+
+
+def layer_groups(cfg):
+    """(global layer indices, local layer indices)."""
+    glob = [i for i in range(cfg.n_layers) if cfg.window_for_layer(i) is None]
+    loc = [i for i in range(cfg.n_layers) if cfg.window_for_layer(i) is not None]
+    return glob, loc
+
+
+def init_cache(cfg, batch: int, max_len: int, dtype=jnp.bfloat16):
+    hkv, hd = cfg.padded_kv_heads, cfg.head_dim
+    if not uses_window_cache(cfg):
+        shape = (cfg.n_layers, batch, max_len, hkv, hd)
+        return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+    glob, loc = layer_groups(cfg)
+    W = min(cfg.local_window, max_len)
+    return {
+        "k": jnp.zeros((len(glob), batch, max_len, hkv, hd), dtype),
+        "v": jnp.zeros((len(glob), batch, max_len, hkv, hd), dtype),
+        # ring buffers: slot W-1 always holds the newest position
+        "k_loc": jnp.zeros((len(loc), batch, W, hkv, hd), dtype),
+        "v_loc": jnp.zeros((len(loc), batch, W, hkv, hd), dtype),
+    }
+
+
+def cache_specs(cfg):
+    s = P("layers", "batch", "kv_seq", None, None)
+    if not uses_window_cache(cfg):
+        return {"k": s, "v": s}
+    return {"k": s, "v": s, "k_loc": s, "v_loc": s}
+
+
+def prefill(params, cfg, rules, tokens=None, inputs_embeds=None,
+            max_len: Optional[int] = None):
+    """Run the prompt, build the cache.  Returns (cache, hidden (B,S,d)).
+
+    The full hidden sequence is returned (not just the last position) so
+    callers with right-padded prompts can read the hidden state at their own
+    valid length (the serving engine's bucketed prefill does)."""
+    x = inputs_embeds if inputs_embeds is not None \
+        else embed_tokens(params, tokens, cfg, rules)
+    B, S = x.shape[0], x.shape[1]
+    max_len = max_len or S
+    positions = jnp.arange(S)
+    windows = layer_windows(cfg)
+
+    def body(x, xs):
+        p, w = xs
+        x, k, v, _ = block_apply(p, x, cfg, rules, positions=positions,
+                                 window=w)
+        if max_len > S:
+            pad = [(0, 0), (0, max_len - S), (0, 0), (0, 0)]
+            k, v = jnp.pad(k, pad), jnp.pad(v, pad)
+        k = constrain(k, P("batch", "kv_seq", None, None), rules)
+        v = constrain(v, P("batch", "kv_seq", None, None), rules)
+        return x, (k, v)
+
+    x, (ks, vs) = jax.lax.scan(_remat(body, cfg), x,
+                               (params["blocks"], windows))
+    x = L.rmsnorm(params["final_norm"], x, use_pallas=cfg.use_pallas)
+    if not uses_window_cache(cfg):
+        return {"k": ks, "v": vs}, x
+    # compress local layers to their ring windows (right-aligned: slot W-1
+    # = newest position; short prompts left-pad with masked zeros)
+    glob, loc = layer_groups(cfg)
+    W = min(cfg.local_window, max_len)
+    take = min(W, S)
+    k_loc = ks[jnp.asarray(loc)][:, :, S - take:S]
+    v_loc = vs[jnp.asarray(loc)][:, :, S - take:S]
+    pad = [(0, 0), (0, 0), (W - take, 0), (0, 0), (0, 0)]
+    return {"k": ks[jnp.asarray(glob)], "v": vs[jnp.asarray(glob)],
+            "k_loc": jnp.pad(k_loc, pad), "v_loc": jnp.pad(v_loc, pad)}, x
+
+
+def _window_decode_step(params, cfg, rules, cache, tokens, pos):
+    """Decode with mixed caches: full KV for global layers, ring buffers of
+    size W for sliding-window layers (aligned decode only: scalar ``pos``)."""
+    assert jnp.ndim(pos) == 0, "window-cache decode is aligned-only"
+    glob, loc = layer_groups(cfg)
+    g_of = {i: glob.index(i) for i in glob}
+    l_of = {i: loc.index(i) for i in loc}
+    W = cache["k_loc"].shape[2]
+
+    x = embed_tokens(params, tokens, cfg, rules)
+    x = constrain(x, P("batch", None, None), rules)
+    positions = jnp.asarray(pos)[..., None] + jnp.arange(1)
+
+    new_g_k, new_g_v = list(range(len(glob))), list(range(len(glob)))
+    new_l_k, new_l_v = list(range(len(loc))), list(range(len(loc)))
+    for i in range(cfg.n_layers):
+        p = jax.tree_util.tree_map(lambda a: a[i], params["blocks"])
+        h = L.rmsnorm(p["ln1"], x)
+        q, k, v = A.qkv_project(p["attn"], h, cfg, positions, rules=rules)
+        if i in g_of:                                  # global: normal cache
+            g = g_of[i]
+            nk = jax.lax.dynamic_update_slice_in_dim(cache["k"][g], k, pos,
+                                                     axis=1)
+            nv = jax.lax.dynamic_update_slice_in_dim(cache["v"][g], v, pos,
+                                                     axis=1)
+            nk = constrain(nk, P("batch", "kv_seq", None, None), rules)
+            nv = constrain(nv, P("batch", "kv_seq", None, None), rules)
+            o = A.gqa_attention(q, nk, nv, causal=True, q_offset=pos,
+                                kv_valid_len=pos + 1,
+                                kv_chunk=max(nk.shape[1], 1))
+            new_g_k[g], new_g_v[g] = nk, nv
+        else:                                          # local: ring buffer
+            l = l_of[i]
+            nk = jnp.concatenate([cache["k_loc"][l][:, 1:], k], axis=1)
+            nv = jnp.concatenate([cache["v_loc"][l][:, 1:], v], axis=1)
+            nk = constrain(nk, P("batch", "kv_seq", None, None), rules)
+            nv = constrain(nv, P("batch", "kv_seq", None, None), rules)
+            o = A.gqa_attention(q, nk, nv, causal=True,
+                                window=cfg.local_window, q_offset=pos,
+                                k_start=pos - W + 1, kv_chunk=W)
+            new_l_k[l], new_l_v[l] = nk, nv
+        x = x + A.out_project(p["attn"], o)
+        h = L.rmsnorm(p["ln2"], x)
+        x = x + L.mlp(p["mlp"], h)
+
+    x = L.rmsnorm(params["final_norm"], x, use_pallas=cfg.use_pallas)
+    logits = lm_logits(params, x, cfg, rules)
+    new_cache = {"k": jnp.stack(new_g_k), "v": jnp.stack(new_g_v),
+                 "k_loc": jnp.stack(new_l_k), "v_loc": jnp.stack(new_l_v)}
+    return new_cache, logits
+
+
+def decode_step(params, cfg, rules, cache, tokens, pos):
+    """One token for every sequence.  tokens: (B, 1); pos: scalar int32
+    (aligned) or (B,) int32 (ragged slots).  Returns (cache, logits)."""
+    if uses_window_cache(cfg):
+        return _window_decode_step(params, cfg, rules, cache, tokens, pos)
+    x = embed_tokens(params, tokens, cfg, rules)
+    x = constrain(x, P("batch", None, None), rules)
+    positions = jnp.asarray(pos)[..., None] + jnp.arange(1)
+    windows = layer_windows(cfg)
+
+    def body(x, xs):
+        p, w, ck, cv = xs
+        x, nk, nv, _ = block_apply(p, x, cfg, rules, positions=positions,
+                                   window=w, cache_k=ck, cache_v=cv,
+                                   cache_pos=pos)
+        return x, (nk, nv)
+
+    x, (ks, vs) = jax.lax.scan(body, x, (params["blocks"], windows,
+                                         cache["k"], cache["v"]))
+    x = L.rmsnorm(params["final_norm"], x, use_pallas=cfg.use_pallas)
+    logits = lm_logits(params, x, cfg, rules)
+    return {"k": ks, "v": vs}, logits

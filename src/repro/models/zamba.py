@@ -1,0 +1,226 @@
+"""Zamba2-style hybrid LM: a Mamba2 backbone with one *shared* transformer
+block applied every ``cfg.shared_attn_every`` layers.
+
+Structure (zamba2-7b: 81 Mamba2 layers, shared block after every 27):
+
+    [27 x mamba2] -> shared attn+mlp -> [27 x mamba2] -> shared ... -> norm
+
+The shared block has ONE parameter copy (the zamba trick), but each of its
+applications has its *own* KV cache during decode (activations differ even
+though weights are shared).  Layers are grouped in segments of
+``shared_attn_every`` so the whole network is (outer python loop over
+segments) x (inner ``lax.scan`` over the segment's stacked Mamba params) —
+no per-layer ``lax.cond`` needed, keeping the lowered HLO clean.
+
+Decode state: per-layer Mamba (ssm f32 + conv tails) states, stacked along a
+leading ``layers`` axis, plus per-application KV caches for the shared block.
+Both are O(1) (Mamba) / O(seq) (attn) — the arch is sub-quadratic, so the
+``long_500k`` shape runs.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.mesh.axes import constrain
+from repro.models import attention as A
+from repro.models import layers as L
+from repro.models import mamba2 as M2
+from repro.models import transformer as T
+from repro.models.module import Param
+
+
+def _n_segments(cfg) -> int:
+    k = cfg.shared_attn_every
+    assert cfg.n_layers % k == 0, (cfg.n_layers, k)
+    return cfg.n_layers // k
+
+
+def zamba_defs(cfg) -> dict:
+    seg = _n_segments(cfg)
+    k = cfg.shared_attn_every
+    mamba_layer = {
+        "ln": L.rmsnorm_def(cfg.d_model),
+        "mamba": M2.mamba2_def(cfg),
+    }
+    return {
+        "embed": {"table": Param((cfg.padded_vocab, cfg.d_model),
+                                 P("vocab", "embed_w"), init="small")},
+        # (segments, layers_per_segment, ...) stacked Mamba params
+        "mamba_blocks": T.stack_defs(T.stack_defs(mamba_layer, k), seg),
+        "shared": {
+            "ln1": L.rmsnorm_def(cfg.d_model),
+            "attn": A.attention_def(cfg),
+            "ln2": L.rmsnorm_def(cfg.d_model),
+            "mlp": L.mlp_def(cfg.d_model, cfg.d_ff),
+        },
+        "final_norm": L.rmsnorm_def(cfg.d_model),
+        "unembed": {"w": Param((cfg.d_model, cfg.padded_vocab),
+                               P("embed_w", "vocab"), init="small")},
+    }
+
+
+def _shared_block(params, x, cfg, rules, *, positions, cache_k=None,
+                  cache_v=None, cache_pos=None):
+    """One application of the shared attention+MLP block."""
+    h = L.rmsnorm(params["ln1"], x, use_pallas=cfg.use_pallas)
+    h = constrain(h, P("batch", "seq", None), rules)
+    q, k, v = A.qkv_project(params["attn"], h, cfg, positions,
+                            rules=rules)
+    if cache_k is not None:
+        new_k = jax.lax.dynamic_update_slice_in_dim(cache_k, k, cache_pos, axis=1)
+        new_v = jax.lax.dynamic_update_slice_in_dim(cache_v, v, cache_pos, axis=1)
+        kv_len = cache_pos + q.shape[1]
+        o = A.gqa_attention(q, new_k, new_v, causal=True,
+                            q_offset=cache_pos, kv_valid_len=kv_len,
+                            kv_chunk=max(cache_k.shape[1], 1), use_pallas=False)
+    else:
+        new_k, new_v = k, v
+        o = A.gqa_attention(q, k, v, causal=True, kv_chunk=cfg.kv_chunk,
+                            use_pallas=cfg.use_pallas)
+    x = x + A.out_project(params["attn"], o)
+    h = L.rmsnorm(params["ln2"], x, use_pallas=cfg.use_pallas)
+    return x + L.mlp(params["mlp"], h), new_k, new_v
+
+
+def _mamba_segment(seg_params, x, cfg, rules, *, states=None):
+    """Scan over one segment's stacked Mamba layers.
+
+    ``states``: None (train) or stacked per-layer {"ssm","conv"} pytree.
+    Returns (x, new_states or None).
+    """
+    def body(x, xs):
+        if states is None:
+            p = xs
+            h = L.rmsnorm(p["ln"], x, use_pallas=cfg.use_pallas)
+            h = constrain(h, P("batch", "seq", None), rules)
+            y, _, _ = M2.mamba2_block(p["mamba"], h, cfg, rules)
+            return x + y, None
+        p, st = xs
+        h = L.rmsnorm(p["ln"], x, use_pallas=cfg.use_pallas)
+        y, new_ssm, new_conv = M2.mamba2_block(
+            p["mamba"], h, cfg, rules, ssm_state=st["ssm"],
+            conv_state=st["conv"])
+        return x + y, {"ssm": new_ssm, "conv": new_conv}
+
+    if states is None:
+        fn = T._remat(lambda c, xs: body(c, xs), cfg)
+        x, _ = jax.lax.scan(fn, x, seg_params)
+        return x, None
+    x, new_states = jax.lax.scan(body, x, (seg_params, states))
+    return x, new_states
+
+
+def forward(params, cfg, rules, tokens):
+    """Training forward -> final hidden states."""
+    x = T.embed_tokens(params, tokens, cfg, rules)
+    S = x.shape[1]
+    positions = jnp.arange(S)
+    seg = _n_segments(cfg)
+    for s in range(seg):
+        seg_p = jax.tree_util.tree_map(lambda a: a[s], params["mamba_blocks"])
+        x, _ = _mamba_segment(seg_p, x, cfg, rules)
+        x, _, _ = _shared_block(params["shared"], x, cfg, rules,
+                                positions=positions)
+    return L.rmsnorm(params["final_norm"], x, use_pallas=cfg.use_pallas)
+
+
+def lm_loss(params, cfg, rules, tokens, labels, loss_chunks: int = 8):
+    hidden = forward(params, cfg, rules, tokens)
+    ce, cnt = T.loss_from_hidden(params["unembed"]["w"], hidden, labels, cfg,
+                                 rules, loss_chunks)
+    return ce, {"ce": ce, "tokens": cnt}
+
+
+# ---------------------------------------------------------------------------
+# Serving
+# ---------------------------------------------------------------------------
+
+def init_state(cfg, batch: int, max_len: int, dtype=jnp.bfloat16):
+    seg = _n_segments(cfg)
+    k = cfg.shared_attn_every
+    H, Pd, N, K = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state, cfg.conv_kernel
+    hkv, hd = cfg.padded_kv_heads, cfg.head_dim
+    return {
+        "mamba": {
+            "ssm": jnp.zeros((seg, k, batch, H, N, Pd), jnp.float32),
+            "conv": {
+                "x": jnp.zeros((seg, k, batch, K - 1, cfg.d_inner), jnp.float32),
+                "B": jnp.zeros((seg, k, batch, K - 1, N), jnp.float32),
+                "C": jnp.zeros((seg, k, batch, K - 1, N), jnp.float32),
+            },
+        },
+        "attn_cache": {
+            "k": jnp.zeros((seg, batch, max_len, hkv, hd), dtype),
+            "v": jnp.zeros((seg, batch, max_len, hkv, hd), dtype),
+        },
+    }
+
+
+def state_specs(cfg):
+    """Logical PartitionSpecs matching :func:`init_state`'s tree."""
+    return {
+        "mamba": {
+            "ssm": P(None, None, "batch", "ssm_heads", None, None),
+            "conv": {
+                "x": P(None, None, "batch", None, "inner"),
+                "B": P(None, None, "batch", None, None),
+                "C": P(None, None, "batch", None, None),
+            },
+        },
+        "attn_cache": {
+            "k": P(None, "batch", "kv_seq", None, None),
+            "v": P(None, "batch", "kv_seq", None, None),
+        },
+    }
+
+
+def _forward_with_state(params, cfg, rules, x, state, pos):
+    """Shared by prefill (S>=1) and decode (S==1)."""
+    S = x.shape[1]
+    positions = pos + jnp.arange(S)
+    seg = _n_segments(cfg)
+    new_ssm, new_conv_x, new_conv_B, new_conv_C = [], [], [], []
+    new_ck, new_cv = [], []
+    for s in range(seg):
+        seg_p = jax.tree_util.tree_map(lambda a: a[s], params["mamba_blocks"])
+        st = {"ssm": state["mamba"]["ssm"][s],
+              "conv": {kk: state["mamba"]["conv"][kk][s] for kk in "xBC"}}
+        x, ns = _mamba_segment(seg_p, x, cfg, rules, states=st)
+        new_ssm.append(ns["ssm"])
+        new_conv_x.append(ns["conv"]["x"])
+        new_conv_B.append(ns["conv"]["B"])
+        new_conv_C.append(ns["conv"]["C"])
+        x, ck, cv = _shared_block(
+            params["shared"], x, cfg, rules, positions=positions,
+            cache_k=state["attn_cache"]["k"][s],
+            cache_v=state["attn_cache"]["v"][s], cache_pos=pos)
+        new_ck.append(ck)
+        new_cv.append(cv)
+    x = L.rmsnorm(params["final_norm"], x, use_pallas=cfg.use_pallas)
+    new_state = {
+        "mamba": {"ssm": jnp.stack(new_ssm),
+                  "conv": {"x": jnp.stack(new_conv_x),
+                           "B": jnp.stack(new_conv_B),
+                           "C": jnp.stack(new_conv_C)}},
+        "attn_cache": {"k": jnp.stack(new_ck), "v": jnp.stack(new_cv)},
+    }
+    return x, new_state
+
+
+def prefill(params, cfg, rules, tokens, max_len: int):
+    B, S = tokens.shape
+    state = init_state(cfg, B, max_len, dtype=jnp.dtype(cfg.dtype))
+    x = T.embed_tokens(params, tokens, cfg, rules)
+    # attn caches need S <= max_len writes at pos 0
+    x, state = _forward_with_state(params, cfg, rules, x, state,
+                                   jnp.asarray(0, jnp.int32))
+    return state, x
+
+
+def decode_step(params, cfg, rules, state, tokens, pos):
+    x = T.embed_tokens(params, tokens, cfg, rules)
+    x, state = _forward_with_state(params, cfg, rules, x, state, pos)
+    logits = T.lm_logits(params, x, cfg, rules)
+    return state, logits

@@ -1,0 +1,5 @@
+from repro.optim.adamw import (AdamWConfig, adamw_init, adamw_update,
+                               lr_schedule, global_norm, clip_by_global_norm)
+from repro.optim.compress import (int8_compress, int8_decompress,
+                                  compressed_psum, CompressionState,
+                                  init_compression_state)

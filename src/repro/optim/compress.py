@@ -1,0 +1,68 @@
+"""Int8 gradient compression with error feedback.
+
+For cross-pod data-parallel all-reduce the wire format dominates: an int8
+payload moves 4x less than f32 (2x less than bf16) over the slow inter-pod
+links.  Per-tensor symmetric quantization ``q = round(g / s)``, s = max|g|/127,
+with the quantization residual fed back into the next step's gradient
+(error feedback), which is what keeps SGD convergence unaffected (Karimireddy
+et al., 2019).
+
+Usage inside a shard_map'd train step (explicit-DP mode, the paper's
+"communication as a pluggable function" design)::
+
+    g, err = compressed_psum(g, err, comm)   # comm: Comm over ("pod","data")
+
+The all-reduce itself runs as all_gather(int8) + local dequant-sum: a true
+int8 ring all-reduce needs custom accumulation; gather+sum keeps the wire
+traffic int8 (the win) at the cost of n_dp partial sums in f32 locally.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.comm import Comm
+
+CompressionState = dict  # {"err": pytree of f32 residuals}
+
+
+def init_compression_state(grads) -> CompressionState:
+    return {"err": jax.tree_util.tree_map(
+        lambda g: jnp.zeros(g.shape, jnp.float32), grads)}
+
+
+def int8_compress(g):
+    """-> (q int8, scale f32 scalar)."""
+    gf = g.astype(jnp.float32)
+    s = jnp.max(jnp.abs(gf)) / 127.0
+    s = jnp.maximum(s, 1e-30)
+    q = jnp.clip(jnp.round(gf / s), -127, 127).astype(jnp.int8)
+    return q, s
+
+
+def int8_decompress(q, s):
+    return q.astype(jnp.float32) * s
+
+
+def compressed_psum(grads, err, comm: Comm):
+    """Error-feedback int8 mean-all-reduce of a gradient pytree.
+
+    Returns (mean_grads f32, new_err).  Wire payload: int8 + one f32 scale
+    per tensor.
+    """
+    n = comm.size()
+
+    def one(g, e):
+        gf = g.astype(jnp.float32) + e
+        q, s = int8_compress(gf)
+        new_e = gf - int8_decompress(q, s)          # residual stays local
+        qs = comm.all_gather(q)                     # (n, ...) int8 on the wire
+        ss = comm.all_gather(s)                     # (n,) f32
+        mean = jnp.tensordot(ss, qs.astype(jnp.float32), axes=([0], [0])) / n
+        return mean.astype(g.dtype), new_e
+
+    flat_g, tdef = jax.tree_util.tree_flatten(grads)
+    flat_e = tdef.flatten_up_to(err)
+    out = [one(g, e) for g, e in zip(flat_g, flat_e)]
+    return (tdef.unflatten([o[0] for o in out]),
+            tdef.unflatten([o[1] for o in out]))

@@ -1,0 +1,2 @@
+from repro.serve.sampling import greedy, sample_top_k
+from repro.serve.engine import ServeEngine, Request

@@ -1,0 +1,177 @@
+"""Continuous-batching serving engine.
+
+This is the paper's §3.2 *dynamic population* pattern applied to inference
+(DESIGN.md §3): decode **slots** are the processors' capacity, **requests**
+are walkers that enter (prefill), live (decode steps), and leave (EOS /
+length) — the engine's admission loop is ``do_timestep`` plus the
+append/delete walker operations, and the host-side queue bookkeeping is the
+``finalize_timestep`` analogue.
+
+Mechanics:
+
+* One fixed-capacity batched decode state (``B = max_slots``) lives on
+  device; slots are admitted/retired with masked writes (static shapes, the
+  TPU constraint from DESIGN.md §2).
+* Prefill runs per request (shape-bucketed to limit recompilation) and the
+  resulting cache is spliced into the slot's rows of the batched cache.
+* Every engine tick decodes ONE token for ALL live slots in a single SPMD
+  step with **ragged positions** — slot i attends to its own ``pos[i]``-long
+  prefix (the per-batch kv_valid_len path in :mod:`repro.models.attention`).
+* Retired slots are immediately refillable: walkers deleted, capacity
+  reclaimed — the population stays balanced exactly like the DMC rebalancer
+  keeps walker counts balanced.
+
+The engine is family-generic for models whose decode state has the batch on
+a known axis (axis 1 for the stacked dense/MoE/VLM caches; declared by
+``state_batch_axes``).
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+import time
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.serve.sampling import greedy
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray                     # (prompt_len,) int32
+    max_new_tokens: int = 32
+    eos_id: Optional[int] = None
+    # filled by the engine:
+    output: list = dataclasses.field(default_factory=list)
+    submitted_at: float = 0.0
+    first_token_at: Optional[float] = None
+    done_at: Optional[float] = None
+
+
+def _bucket(n: int, buckets=(32, 64, 128, 256, 512, 1024, 2048, 4096)) -> int:
+    for b in buckets:
+        if n <= b:
+            return b
+    return ((n + 4095) // 4096) * 4096
+
+
+class ServeEngine:
+    def __init__(self, model, params, *, max_slots: int = 8,
+                 max_len: int = 512, rules=None, sampler: Callable = None):
+        self.model, self.params, self.rules = model, params, rules
+        self.max_slots, self.max_len = max_slots, max_len
+        self.sampler = sampler or (lambda key, logits: greedy(
+            logits, true_vocab=model.cfg.vocab))
+        self.state = model.init_decode_state(max_slots, max_len)
+        self.pos = np.zeros(max_slots, np.int32)        # per-slot lengths
+        self.live = np.zeros(max_slots, bool)
+        self.slot_req: list[Optional[Request]] = [None] * max_slots
+        self.last_token = np.zeros(max_slots, np.int32)
+        self.queue: list[Request] = []
+        self.finished: list[Request] = []
+        self._rid = itertools.count()
+        self._key = jax.random.PRNGKey(0)
+        self.stats = {"ticks": 0, "tokens": 0, "prefills": 0}
+
+        self._decode = jax.jit(
+            lambda p, s, t, pos: model.decode_step(p, s, t, pos, rules))
+        self._prefill = jax.jit(
+            lambda p, b: model.prefill(p, b, rules, max_len),
+            static_argnames=())
+
+    # -- request lifecycle ---------------------------------------------------
+
+    def submit(self, prompt, max_new_tokens: int = 32,
+               eos_id: Optional[int] = None) -> int:
+        req = Request(next(self._rid), np.asarray(prompt, np.int32),
+                      max_new_tokens, eos_id)
+        req.submitted_at = time.perf_counter()
+        self.queue.append(req)
+        return req.rid
+
+    def _admit(self):
+        """Fill free slots from the queue (walker ``append``)."""
+        for slot in range(self.max_slots):
+            if self.live[slot] or not self.queue:
+                continue
+            req = self.queue.pop(0)
+            L = len(req.prompt)
+            bucket = min(_bucket(L), self.max_len)
+            toks = np.zeros((1, bucket), np.int32)
+            toks[0, :L] = req.prompt                  # right-pad into bucket
+            cache, hidden = self._prefill(self.params,
+                                          {"tokens": jnp.asarray(toks)})
+            # right-padding: cache rows beyond L hold pad garbage, but
+            # pos[slot] = L masks them out (kv_valid_len) and later decode
+            # tokens overwrite them in order.
+            logits = self.model.lm_head(self.params, hidden[:, L - 1:L],
+                                        self.rules)
+            self._key, sub = jax.random.split(self._key)
+            tok = int(jax.device_get(self.sampler(sub, logits[0, -1])))
+            self._splice(cache, slot)
+            self.pos[slot] = L
+            self.live[slot] = True
+            self.slot_req[slot] = req
+            self.last_token[slot] = tok
+            req.first_token_at = time.perf_counter()
+            req.output.append(tok)
+            self.stats["prefills"] += 1
+
+    def _splice(self, cache, slot: int):
+        """Write a (B=1) prefill cache into the batched state's slot rows."""
+        def splice_leaf(dst, src):
+            # dst (..., B, S, ...), src (..., 1, S', ...): batch axis = 1
+            # for every stacked family cache in this repo.
+            pad = [(0, 0)] * src.ndim
+            pad[2] = (0, dst.shape[2] - src.shape[2])
+            src = jnp.pad(src, pad)
+            return jax.lax.dynamic_update_slice_in_dim(
+                dst, src.astype(dst.dtype), slot, axis=1)
+
+        self.state = jax.tree_util.tree_map(splice_leaf, self.state, cache)
+
+    def _retire(self, slot: int):
+        """Walker ``delete``: slot capacity returns to the pool."""
+        req = self.slot_req[slot]
+        req.done_at = time.perf_counter()
+        self.finished.append(req)
+        self.live[slot] = False
+        self.slot_req[slot] = None
+
+    # -- the tick: one SPMD decode step for all live slots --------------------
+
+    def tick(self):
+        self._admit()
+        if not self.live.any():
+            return False
+        toks = jnp.asarray(self.last_token.reshape(-1, 1))
+        pos = jnp.asarray(self.pos)
+        self.state, logits = self._decode(self.params, self.state, toks, pos)
+        self._key, sub = jax.random.split(self._key)
+        nxt = np.asarray(jax.device_get(self.sampler(sub, logits[:, -1])))
+        self.stats["ticks"] += 1
+        for slot in range(self.max_slots):
+            if not self.live[slot]:
+                continue
+            req = self.slot_req[slot]
+            tok = int(nxt[slot])
+            req.output.append(tok)
+            self.pos[slot] += 1
+            self.last_token[slot] = tok
+            self.stats["tokens"] += 1
+            hit_eos = req.eos_id is not None and tok == req.eos_id
+            if (hit_eos or len(req.output) >= req.max_new_tokens
+                    or self.pos[slot] >= self.max_len - 1):
+                self._retire(slot)
+        return True
+
+    def run_until_drained(self, max_ticks: int = 10_000):
+        for _ in range(max_ticks):
+            busy = self.tick()
+            if not busy and not self.queue:
+                break
+        return self.finished

@@ -1,0 +1,28 @@
+"""Token sampling heads (jit-friendly, vocab-padding aware)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def _mask_pad(logits, true_vocab):
+    if true_vocab is not None and true_vocab < logits.shape[-1]:
+        pad = jnp.arange(logits.shape[-1]) >= true_vocab
+        logits = jnp.where(pad, -1e30, logits)
+    return logits
+
+
+def greedy(logits, *, true_vocab=None):
+    """logits (..., V) -> (...,) int32."""
+    return jnp.argmax(_mask_pad(logits, true_vocab), axis=-1).astype(jnp.int32)
+
+
+def sample_top_k(key, logits, *, k: int = 40, temperature: float = 1.0,
+                 true_vocab=None):
+    logits = _mask_pad(logits, true_vocab).astype(jnp.float32)
+    if temperature <= 0:
+        return greedy(logits)
+    top_v, top_i = jax.lax.top_k(logits, k)
+    gs = jax.random.categorical(key, top_v / temperature)
+    return jnp.take_along_axis(top_i, gs[..., None], axis=-1)[..., 0].astype(
+        jnp.int32)

@@ -1,0 +1,6 @@
+from repro.train.state import TrainState, create_train_state, abstract_train_state
+from repro.train.step import make_train_step, make_eval_step
+from repro.train.checkpoint import (save_checkpoint, restore_checkpoint,
+                                    latest_checkpoint, checkpoint_steps)
+from repro.train.fault import reshard_state, NanGuard
+from repro.train.trainer import Trainer, TrainerConfig

@@ -1,0 +1,170 @@
+"""Cross-pod data parallelism with int8 error-feedback gradient exchange,
+orchestrated at the HOST level — the paper's thesis applied to multi-pod
+training.
+
+Each pod runs its own compiled SPMD program (grads + update) on its own
+sub-mesh; the *inter-pod* communication — the slow tier — is done by a thin
+Python layer that moves int8-quantized gradients between pods, exactly like
+the paper's thin MPI layer moved pickled arrays between serial processes.
+(A single-jit formulation with a partial-manual shard_map over "pod" hits an
+XLA SPMD-partitioner check failure — see EXPERIMENTS.md §Perf notes — and a
+multi-controller deployment needs the host path anyway: pods on different
+fabrics cannot share one XLA program.)
+
+Wire format per tensor per step: int8 payload + one f32 scale (4x smaller
+than f32, 2x smaller than bf16); the quantization residual stays pod-local as
+error feedback, so convergence is unaffected (tests assert loss parity with
+uncompressed DP).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.mesh.axes import AxisRules
+from repro.optim.adamw import AdamWConfig, adamw_init, adamw_update
+from repro.optim.compress import int8_compress, int8_decompress
+from repro.train.state import state_shardings
+from repro.train.step import _strip_axis
+
+
+def split_pod_meshes(mesh):
+    """(2,16,16) ("pod","data","model") -> [two (16,16) sub-meshes]."""
+    assert "pod" in mesh.axis_names
+    pod_idx = list(mesh.axis_names).index("pod")
+    rest = tuple(a for a in mesh.axis_names if a != "pod")
+    out = []
+    for p in range(mesh.shape["pod"]):
+        devs = np.take(mesh.devices, p, axis=pod_idx)
+        out.append(jax.sharding.Mesh(devs, rest))
+    return out
+
+
+@dataclasses.dataclass
+class PodDPStep:
+    """Host-level train step over per-pod compiled programs."""
+    model: object
+    opt_cfg: AdamWConfig
+    submeshes: list
+    sub_rules: list
+    compress: bool = True
+
+    def __post_init__(self):
+        model, opt_cfg = self.model, self.opt_cfg
+        self.grads_fns, self.apply_fns, self.shardings = [], [], []
+        for m, r in zip(self.submeshes, self.sub_rules):
+            sh = state_shardings(model, m, r)
+            self.shardings.append(sh)
+
+            def make(r=r, sh=sh):
+                def grads(params, batch):
+                    def loss_fn(p, b):
+                        return model.loss(p, b, r)
+                    (loss, metrics), g = jax.value_and_grad(
+                        loss_fn, has_aux=True)(params, batch)
+                    return loss, metrics, g
+
+                def apply(state, mean_grads):
+                    new_p, new_opt, stats = adamw_update(
+                        state["params"], mean_grads, state["opt"], opt_cfg)
+                    return {"params": new_p, "opt": new_opt}, stats
+
+                return (jax.jit(grads, in_shardings=(sh["params"], None)),
+                        jax.jit(apply, donate_argnums=(0,),
+                                in_shardings=(sh, sh["params"]),
+                                out_shardings=(sh, None)))
+
+            gf, af = make()
+            self.grads_fns.append(gf)
+            self.apply_fns.append(af)
+
+    def init_state(self, key, param_dtype=jnp.float32):
+        """Identical params on every pod + per-pod EF residuals (host f32)."""
+        pods = []
+        for m, r, sh in zip(self.submeshes, self.sub_rules, self.shardings):
+            params = jax.jit(
+                lambda k: self.model.init(k, dtype=param_dtype),
+                out_shardings=sh["params"])(key)
+            pods.append({"params": params,
+                         "opt": adamw_init(params, self.opt_cfg)})
+        err = [jax.tree_util.tree_map(
+            lambda p: np.zeros(p.shape, np.float32), pods[p]["params"])
+            for p in range(len(pods))]
+        return {"pods": pods, "err": err}
+
+    def __call__(self, state, batch):
+        """batch: host/global arrays (B, ...); B splits across pods."""
+        n = len(self.submeshes)
+        B = jax.tree_util.tree_leaves(batch)[0].shape[0]
+        per = B // n
+        losses, wires = [], []
+        bytes_fp32 = bytes_wire = 0
+
+        # 1. per-pod local grads (each pod's own compiled program)
+        for p in range(n):
+            bp = jax.tree_util.tree_map(
+                lambda x: x[p * per:(p + 1) * per], batch)
+            loss, metrics, grads = self.grads_fns[p](
+                state["pods"][p]["params"], bp)
+            losses.append(loss)
+
+            if self.compress:
+                # 2. quantize (on device), ship int8+scale (host = the wire)
+                leaves, tdef = jax.tree_util.tree_flatten(grads)
+                errs = tdef.flatten_up_to(state["err"][p])
+                qs, new_errs = [], []
+                for g, e in zip(leaves, errs):
+                    gf = g.astype(jnp.float32) + jnp.asarray(e)
+                    q, s = int8_compress(gf)
+                    q_host = np.asarray(jax.device_get(q))
+                    s_host = float(jax.device_get(s))
+                    # EF residual stays local to the pod
+                    new_errs.append(np.asarray(jax.device_get(
+                        gf - int8_decompress(q, s))))
+                    qs.append((q_host, s_host))
+                    bytes_fp32 += q_host.size * 4
+                    bytes_wire += q_host.size + 4
+                state["err"][p] = tdef.unflatten(new_errs)
+                wires.append((qs, tdef))
+            else:
+                wires.append((jax.device_get(grads), None))
+
+        # 3. host "all-reduce" across pods (the inter-pod fabric)
+        if self.compress:
+            qs0, tdef = wires[0]
+            mean_leaves = []
+            for i in range(len(qs0)):
+                acc = np.zeros(qs0[i][0].shape, np.float32)
+                for p in range(n):
+                    q, s = wires[p][0][i]
+                    acc += q.astype(np.float32) * s
+                mean_leaves.append(acc / n)
+            mean_grads = tdef.unflatten(mean_leaves)
+        else:
+            mean_grads = jax.tree_util.tree_map(
+                lambda *gs: sum(np.asarray(g, np.float64) for g in gs) / n,
+                *[w[0] for w in wires])
+            mean_grads = jax.tree_util.tree_map(
+                lambda g: g.astype(np.float32), mean_grads)
+
+        # 4. every pod applies the same mean gradient
+        all_stats = None
+        for p in range(n):
+            state["pods"][p], stats = self.apply_fns[p](
+                state["pods"][p], mean_grads)
+            all_stats = stats
+        loss = float(np.mean([float(l) for l in losses]))
+        out = {"loss": loss, **{k: float(v) for k, v in all_stats.items()},
+               "wire_bytes": bytes_wire, "fp32_bytes": bytes_fp32}
+        return state, out
+
+
+def make_pod_dp_step(model, opt_cfg: AdamWConfig, mesh,
+                     rules: AxisRules, *, compress: bool = True) -> PodDPStep:
+    submeshes = split_pod_meshes(mesh)
+    sub_rules = [_strip_axis(rules, "pod").with_mesh(m) for m in submeshes]
+    return PodDPStep(model, opt_cfg, submeshes, sub_rules, compress)

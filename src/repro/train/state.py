@@ -1,0 +1,70 @@
+"""TrainState: the device-resident pytree the trainer time-integrates.
+
+The state is a plain dict (params / opt / step) so the generic machinery
+(checkpointing, resharding, the paper-style time loop) treats it exactly like
+the DMC app treats its walker population: an opaque pytree with a sharding.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.mesh.axes import AxisRules, logical_to_sharding
+from repro.models.module import abstract_params, sharding_tree, spec_tree
+from repro.optim.adamw import AdamWConfig, adamw_init
+
+TrainState = dict  # {"params": ..., "opt": {"m","v","step"}}
+
+
+def create_train_state(model, key, opt_cfg: AdamWConfig,
+                       mesh=None, rules: AxisRules | None = None,
+                       param_dtype=jnp.float32) -> TrainState:
+    """Initialize params + optimizer, sharded at birth when a mesh is given."""
+    defs = model.param_defs()
+
+    def build(key):
+        params = model.init(key, dtype=param_dtype)
+        return {"params": params, "opt": adamw_init(params, opt_cfg)}
+
+    if mesh is None:
+        return build(key)
+
+    p_shard = sharding_tree(defs, mesh, rules)
+    out_shardings = {
+        "params": p_shard,
+        "opt": {"m": p_shard, "v": p_shard,
+                "step": jax.sharding.NamedSharding(
+                    mesh, jax.sharding.PartitionSpec())},
+    }
+    return jax.jit(build, out_shardings=out_shardings)(key)
+
+
+def abstract_train_state(model, opt_cfg: AdamWConfig, mesh, rules,
+                         param_dtype=jnp.float32) -> TrainState:
+    """ShapeDtypeStruct stand-in (dry-run: no allocation for the 480B archs)."""
+    defs = model.param_defs()
+    params = abstract_params(defs, mesh, rules, dtype=param_dtype)
+
+    def moment(p):
+        return jax.ShapeDtypeStruct(p.shape, opt_cfg.moment_dtype,
+                                    sharding=p.sharding)
+
+    m = jax.tree_util.tree_map(moment, params)
+    return {
+        "params": params,
+        "opt": {"m": m, "v": m,
+                "step": jax.ShapeDtypeStruct(
+                    (), jnp.int32,
+                    sharding=jax.sharding.NamedSharding(
+                        mesh, jax.sharding.PartitionSpec()))},
+    }
+
+
+def state_shardings(model, mesh, rules):
+    defs = model.param_defs()
+    p_shard = sharding_tree(defs, mesh, rules)
+    scalar = jax.sharding.NamedSharding(mesh, jax.sharding.PartitionSpec())
+    return {"params": p_shard,
+            "opt": {"m": p_shard, "v": p_shard, "step": scalar}}

@@ -1,0 +1,120 @@
+"""Train/eval step builders — the ``do_timestep`` of the paper's generic loop.
+
+``make_train_step`` returns one jitted SPMD program: loss -> grad -> clip ->
+AdamW, with the state donated (in-place buffer reuse) and every input/output
+sharding pinned.  Two gradient-sync modes:
+
+* ``gspmd`` (default): gradients are reduced by the compiler as part of the
+  backward pass (fully overlapped by XLA's latency-hiding scheduler).
+* compressed cross-pod sync lives in :mod:`repro.train.pod_dp`: per-pod
+  compiled programs + a host-level int8 error-feedback exchange (the paper's
+  thin-Python-communication-layer design applied to the inter-pod fabric).
+
+Gradient accumulation (``accum_steps``) scans over microbatches, which is
+also the main activation-memory lever (the other is remat).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.core.comm import Comm
+from repro.mesh.axes import AxisRules, logical_to_mesh, logical_to_sharding
+from repro.optim.adamw import AdamWConfig, adamw_update
+from repro.optim.compress import compressed_psum
+from repro.train.state import state_shardings
+
+
+def _split_microbatches(batch, n: int):
+    """(B, ...) -> (n, B/n, ...) for every leaf."""
+    def sp(x):
+        return x.reshape((n, x.shape[0] // n) + x.shape[1:])
+    return jax.tree_util.tree_map(sp, batch)
+
+
+def make_train_step(model, opt_cfg: AdamWConfig, mesh=None,
+                    rules: AxisRules | None = None, *,
+                    accum_steps: int = 1, grad_sync: str = "gspmd",
+                    donate: bool = True):
+    """Returns ``step(state, batch) -> (state, metrics)`` (jitted)."""
+    cfg = model.cfg
+
+    def make_grads_of(rules_):
+        def loss_fn(params, batch):
+            loss, metrics = model.loss(params, batch, rules_)
+            return loss, metrics
+
+        def grads_of(params, batch):
+            if accum_steps == 1:
+                (loss, metrics), grads = jax.value_and_grad(
+                    loss_fn, has_aux=True)(params, batch)
+                return loss, metrics, grads
+
+            micro = _split_microbatches(batch, accum_steps)
+
+            def body(carry, mb):
+                loss_acc, grads_acc = carry
+                (loss, metrics), grads = jax.value_and_grad(
+                    loss_fn, has_aux=True)(params, mb)
+                grads_acc = jax.tree_util.tree_map(jnp.add, grads_acc, grads)
+                return (loss_acc + loss, grads_acc), metrics
+
+            zeros = jax.tree_util.tree_map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (loss_sum, grads), metrics = jax.lax.scan(
+                body, (jnp.zeros((), jnp.float32), zeros), micro)
+            scale = 1.0 / accum_steps
+            grads = jax.tree_util.tree_map(lambda g: g * scale, grads)
+            last = jax.tree_util.tree_map(lambda m: m[-1], metrics)
+            return loss_sum * scale, last, grads
+
+        return grads_of
+
+    grads_of = make_grads_of(rules)
+
+    def step(state, batch):
+        loss, metrics, grads = grads_of(state["params"], batch)
+        new_params, new_opt, stats = adamw_update(
+            state["params"], grads, state["opt"], opt_cfg)
+        out = {"loss": loss, **metrics, **stats}
+        return {"params": new_params, "opt": new_opt}, out
+
+    if mesh is None:
+        return jax.jit(step, donate_argnums=(0,) if donate else ())
+
+    st_sh = state_shardings(model, mesh, rules)
+    if grad_sync == "compressed":
+        raise ValueError(
+            "compressed cross-pod sync is host-orchestrated: use "
+            "repro.train.pod_dp.make_pod_dp_step (a single-jit partial-manual "
+            "shard_map over 'pod' crashes XLA's SPMD partitioner; see "
+            "EXPERIMENTS.md)")
+
+    return jax.jit(step,
+                   in_shardings=(st_sh, None),
+                   out_shardings=(st_sh, None),
+                   donate_argnums=(0,) if donate else ())
+
+
+def _strip_axis(rules: AxisRules, axis: str) -> AxisRules:
+    """Rules with every reference to ``axis`` removed (for code running on a
+    per-pod sub-mesh, e.g. the host-level pod-DP path)."""
+    out = {}
+    for k, v in rules.rules.items():
+        if v == axis:
+            v = None
+        elif isinstance(v, (tuple, list)):
+            v = tuple(a for a in v if a != axis) or None
+        out[k] = v
+    return AxisRules(out, rules.mesh)
+
+
+def make_eval_step(model, mesh=None, rules=None):
+    def step(params, batch):
+        loss, metrics = model.loss(params, batch, rules)
+        return {"loss": loss, **metrics}
+    return jax.jit(step)

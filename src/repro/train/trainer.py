@@ -1,0 +1,138 @@
+"""Trainer — the paper's ``parallel_time_integration`` used as the spine of a
+production training loop.
+
+Mapping (DESIGN.md §3):
+
+    initialize         -> build/restore TrainState + data iterator
+    do_timestep        -> the jitted train step (donated, SPMD)
+    finalize_timestep  -> checkpoint cadence + NaN guard + metrics
+    finalize           -> final checkpoint + summary
+
+The loop itself IS :func:`repro.core.time_integration.parallel_time_integration`
+— the framework does not special-case ML training; a training run and a DMC
+walker simulation drive the same generic function with different user
+functions, which is the paper's whole point.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Iterator, Optional
+
+import jax
+
+from repro.core.time_integration import parallel_time_integration
+from repro.optim.adamw import AdamWConfig
+from repro.train import checkpoint as ckpt_lib
+from repro.train.fault import NanGuard, loss_is_bad
+from repro.train.state import create_train_state, state_shardings
+from repro.train.step import make_train_step
+
+
+@dataclasses.dataclass
+class TrainerConfig:
+    steps: int = 100
+    ckpt_dir: Optional[str] = None
+    ckpt_every: int = 50
+    ckpt_keep: int = 3
+    log_every: int = 10
+    accum_steps: int = 1
+    grad_sync: str = "gspmd"            # gspmd | compressed
+    nan_guard: bool = True
+    straggler_factor: float = 3.0       # host-level step-deadline watchdog
+    resume: bool = True
+
+
+class Trainer:
+    def __init__(self, model, opt_cfg: AdamWConfig, tcfg: TrainerConfig,
+                 data_iter: Iterator[dict], *, mesh=None, rules=None,
+                 key=None, log: Callable[[str], None] = print):
+        self.model, self.opt_cfg, self.tcfg = model, opt_cfg, tcfg
+        self.data_iter = data_iter
+        self.mesh, self.rules = mesh, rules
+        self.key = key if key is not None else jax.random.PRNGKey(0)
+        self.log = log
+        self.step_fn = make_train_step(model, opt_cfg, mesh, rules,
+                                       accum_steps=tcfg.accum_steps,
+                                       grad_sync=tcfg.grad_sync)
+        self.shardings = (state_shardings(model, mesh, rules)
+                          if mesh is not None else None)
+        self.start_step = 0
+        self.metrics_history: list[dict] = []
+        self.stragglers: list[int] = []
+        self._guard = (NanGuard(tcfg.ckpt_dir, self.shardings)
+                       if (tcfg.nan_guard and tcfg.ckpt_dir) else None)
+        self._data_skip = 0
+
+    # -- the three user functions handed to the generic loop ---------------
+
+    def _initialize(self):
+        state = create_train_state(self.model, self.key, self.opt_cfg,
+                                   self.mesh, self.rules)
+        if (self.tcfg.resume and self.tcfg.ckpt_dir
+                and ckpt_lib.latest_checkpoint(self.tcfg.ckpt_dir) is not None):
+            state, step = ckpt_lib.restore_checkpoint(
+                self.tcfg.ckpt_dir, state, shardings=self.shardings)
+            self.start_step = step
+            self.log(f"[trainer] resumed from step {step}")
+        return state, self.tcfg.steps - self.start_step
+
+    def _do_timestep(self, state):
+        batch = next(self.data_iter)
+        if self._data_skip:                       # NaN rollback batch skip
+            for _ in range(self._data_skip):
+                batch = next(self.data_iter)
+            self._data_skip = 0
+        return self.step_fn(state, batch)
+
+    def _finalize_timestep(self, state, step, obs):
+        gstep = self.start_step + step + 1
+        if self._guard is not None:
+            rolled = self._guard.check(obs["loss"], state)
+            if rolled is not None:
+                state, rstep, skip = rolled
+                self._data_skip = skip
+                self.log(f"[trainer] NaN at step {gstep}; rolled back to "
+                         f"{rstep}, skipping {skip} batch(es)")
+                return state
+        if (self.tcfg.ckpt_dir and gstep % self.tcfg.ckpt_every == 0):
+            ckpt_lib.save_checkpoint(self.tcfg.ckpt_dir, gstep, state,
+                                     keep=self.tcfg.ckpt_keep)
+        return state
+
+    def _on_step_end(self, step, obs, stats):
+        gstep = self.start_step + step + 1
+        self.metrics_history.append(
+            {"step": gstep, **{k: float(v) for k, v in obs.items()},
+             "step_time": stats["step_time"]})
+        times = [m["step_time"] for m in self.metrics_history]
+        if len(times) >= 5:
+            med = sorted(times)[len(times) // 2]
+            if stats["step_time"] > self.tcfg.straggler_factor * med:
+                self.stragglers.append(gstep)
+                self.log(f"[trainer] straggler step {gstep}: "
+                         f"{stats['step_time']:.3f}s vs median {med:.3f}s")
+        if gstep % self.tcfg.log_every == 0:
+            self.log(f"[trainer] step {gstep} loss {obs['loss']:.4f} "
+                     f"lr {obs.get('lr', 0):.2e} ({stats['step_time']:.3f}s)")
+
+    def _finalize(self, outputs):
+        if self.tcfg.ckpt_dir and outputs:
+            pass  # last periodic checkpoint already saved in finalize_timestep
+        return {"history": self.metrics_history,
+                "stragglers": self.stragglers}
+
+    # -- public --------------------------------------------------------------
+
+    def fit(self):
+        result, stats = parallel_time_integration(
+            self._initialize, self._do_timestep, self._finalize,
+            finalize_timestep=self._finalize_timestep,
+            on_step_end=self._on_step_end)
+        self.final_state = stats["state"]
+        if self.tcfg.ckpt_dir:
+            gstep = self.start_step + len(self.metrics_history)
+            ckpt_lib.save_checkpoint(self.tcfg.ckpt_dir, gstep,
+                                     self.final_state,
+                                     keep=self.tcfg.ckpt_keep)
+        return result

@@ -1,0 +1,124 @@
+"""The paper's three applications — scientific correctness on one device.
+(Multi-device equivalence lives in test_distributed.py subprocesses.)"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.apps import boussinesq as bq
+from repro.apps import dmc, mcmc
+
+
+# ---------------------------------------------------------------------------
+# §4.1 MCMC ideal points
+# ---------------------------------------------------------------------------
+
+def test_mcmc_recovers_ideal_points():
+    y, truth = mcmc.make_synthetic_votes(jax.random.PRNGKey(1),
+                                         n_leg=50, n_votes=120)
+    prob = mcmc.IdealPointProblem(y, n_chains=4, n_iter=120, burn=60)
+    res = mcmc.solve_vmap(prob)
+    corr = abs(np.corrcoef(np.asarray(res["x_mean"]),
+                           np.asarray(truth["x"]))[0, 1])
+    assert corr > 0.85, corr
+
+
+def test_mcmc_serial_equals_vmap_structure():
+    y, _ = mcmc.make_synthetic_votes(jax.random.PRNGKey(2), 20, 40)
+    p1 = mcmc.IdealPointProblem(y, n_chains=2, n_iter=40, burn=20, seed=3)
+    p2 = mcmc.IdealPointProblem(y, n_chains=2, n_iter=40, burn=20, seed=3)
+    r1 = mcmc.solve_serial(p1)
+    r2 = mcmc.solve_vmap(p2)
+    # same chains, same seeds -> identical draws
+    np.testing.assert_allclose(np.asarray(r1["x_mean"]),
+                               np.asarray(r2["x_mean"]), rtol=1e-4, atol=1e-4)
+
+
+def test_trunc_normal_signs():
+    key = jax.random.PRNGKey(0)
+    mu = jnp.zeros((1000,))
+    pos = mcmc._trunc_normal(key, mu, jnp.ones(1000, bool))
+    neg = mcmc._trunc_normal(key, mu, jnp.zeros(1000, bool))
+    assert (np.asarray(pos) > 0).all() and (np.asarray(neg) < 0).all()
+
+
+# ---------------------------------------------------------------------------
+# §4.2 Diffusion Monte Carlo
+# ---------------------------------------------------------------------------
+
+def test_dmc_ground_state_energy():
+    out = dmc.run_serial(n_walkers=300, timesteps=500, tau=0.02, seed=0)
+    assert abs(float(out["e0_estimate"]) - 1.5) < 0.15
+
+
+def test_dmc_population_control():
+    out = dmc.run_serial(n_walkers=200, timesteps=300, tau=0.02, seed=1)
+    counts = np.asarray(out["counts"])
+    # E_T feedback keeps the population near target, never extinct/exploded
+    assert counts.min() > 50 and counts.max() < 800
+    assert abs(counts[-50:].mean() - 200) < 80
+
+
+def test_walker_step_compaction_invariants():
+    key = jax.random.PRNGKey(0)
+    pos = jax.random.normal(key, (64, 3))
+    count = jnp.asarray(40, jnp.int32)
+    new_pos, new_count, obs = dmc.walker_step(key, pos, count,
+                                              jnp.asarray(1.5), tau=0.01)
+    n = int(new_count)
+    assert 0 <= n <= 64
+    # dead slots zeroed; live slots finite
+    np.testing.assert_allclose(np.asarray(new_pos[n:]), 0.0)
+    assert np.isfinite(np.asarray(new_pos[:n])).all()
+
+
+# ---------------------------------------------------------------------------
+# §4.3 Boussinesq (serial; Schwarz equivalence is distributed test)
+# ---------------------------------------------------------------------------
+
+def test_boussinesq_mass_conserved():
+    p = bq.BoussinesqParams(nx=48, ny=48, dt=0.02)
+    _, _, hist = bq.run_serial(p, steps=30)
+    mass = np.asarray(hist["mass"])
+    assert abs(mass[-1] - mass[0]) < 1e-3 * abs(mass[0]) + 1e-3
+
+
+def test_boussinesq_wave_oscillates():
+    """Standing-wave probe must oscillate (not decay to zero or blow up).
+
+    k_mode=1: the probe at x = Lx/4 sits at cos(pi/4), off any node."""
+    p = bq.BoussinesqParams(nx=48, ny=48, dt=0.05, eps=0.2)
+    _, _, hist = bq.run_serial(p, steps=200, k_mode=1)
+    probe = np.asarray(hist["probe"])
+    assert np.isfinite(probe).all()
+    assert probe.max() > 0.01 and probe.min() < -0.01      # oscillation
+    assert abs(probe).max() < 0.2                           # stability
+
+
+def test_boussinesq_dispersion_slows_waves():
+    """Boussinesq regime: larger eps (dispersion) -> slower oscillation.
+
+    Count probe zero-crossings as a frequency proxy."""
+    def crossings(eps):
+        # k_mode=4: k^2 ~ 6.9, so eps=1 slows the wave ~45% vs eps~0
+        p = bq.BoussinesqParams(nx=48, ny=48, dt=0.05, eps=eps)
+        _, _, hist = bq.run_serial(p, steps=400, k_mode=4)
+        probe = np.asarray(hist["probe"])
+        return int((np.diff(np.sign(probe)) != 0).sum())
+
+    assert crossings(1.0) < 0.8 * crossings(0.01)
+
+
+def test_jacobi_solves_helmholtz():
+    """The 'legacy serial kernel' actually solves (I - c∇²)x = b
+    (BC refreshed between sweep batches, as the Schwarz loop does)."""
+    p = bq.BoussinesqParams(nx=32, ny=32)
+    rng = np.random.default_rng(0)
+    rhs = jnp.asarray(rng.normal(size=(32, 32)) * 0.1)
+    x = jnp.zeros((34, 32))
+    for _ in range(150):
+        x = bq.apply_physical_bc(x, None)
+        x = bq.jacobi_sweeps(x, rhs, p.c, p.dx, 6)
+    x = bq.apply_physical_bc(x, None)
+    resid = rhs - (x[1:-1] - p.c * bq.laplacian(x, p.dx))
+    assert float(jnp.abs(resid).max()) < 1e-4

@@ -1,0 +1,207 @@
+"""Unit + property tests for the paper's generic layer (repro.core)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (balanced_counts, collect_subproblem_output_args,
+                        find_optimal_workload, get_subproblem_input_args,
+                        pad_to_multiple, simple_partitioning, solve_problem,
+                        time_integration, vmap_solve_problem)
+from repro.core.comm import SerialComm
+from repro.core.load_balance import redistribute_plan, redistribute_work
+from repro.core.functional import host_task_farm
+
+
+# ---------------------------------------------------------------------------
+# simple_partitioning — the paper's ±1 rule (property tests)
+# ---------------------------------------------------------------------------
+
+@given(st.integers(0, 10_000), st.integers(1, 64))
+def test_partitioning_conserves_and_balances(length, procs):
+    parts = simple_partitioning(length, procs)
+    assert parts.sum() == length                     # nothing lost
+    assert parts.max() - parts.min() <= 1            # ±1 balance
+    assert (parts >= 0).all()
+
+
+@given(st.integers(0, 500), st.integers(1, 16))
+def test_get_subproblem_input_args_partitions_exactly(n, procs):
+    items = list(range(n))
+    chunks = [get_subproblem_input_args(items, r, procs)
+              for r in range(procs)]
+    flat = [x for c in chunks for x in c]
+    assert flat == items                             # order-preserving cover
+
+
+@given(st.integers(0, 1000), st.integers(1, 64))
+def test_pad_to_multiple(n, m):
+    p = pad_to_multiple(n, m)
+    assert p >= n and p % m == 0 and p - n < m
+
+
+# ---------------------------------------------------------------------------
+# find_optimal_workload — paper-faithful timing-proportional balance
+# ---------------------------------------------------------------------------
+
+@given(st.lists(st.floats(0.1, 100.0), min_size=1, max_size=12),
+       st.lists(st.integers(0, 500), min_size=1, max_size=12))
+def test_find_optimal_workload_conserves(timings, work):
+    n = min(len(timings), len(work))
+    timings, work = timings[:n], work[:n]
+    out = find_optimal_workload(timings, work)
+    assert out.sum() == sum(work)                    # work conserved
+    assert (out >= 0).all()
+
+
+def test_find_optimal_workload_inverse_to_time():
+    # a 2x slower worker gets ~half the items
+    out = find_optimal_workload([1.0, 2.0], [50, 50])
+    assert out[0] > out[1]
+    assert abs(out[0] - 2 * out[1]) <= 2
+
+
+@given(st.lists(st.integers(0, 100), min_size=2, max_size=8))
+def test_redistribute_plan_reaches_target(work):
+    target = np.asarray(
+        find_optimal_workload([1.0] * len(work), work))
+    plan = redistribute_plan(work, target)
+    cur = np.asarray(work, np.int64)
+    for src, dst, n in plan:
+        assert n > 0
+        cur[src] -= n
+        cur[dst] += n
+    assert (cur == target).all()
+
+
+# ---------------------------------------------------------------------------
+# solve_problem tiers — the paper's §2 parabola example, verbatim
+# ---------------------------------------------------------------------------
+
+class Parabola:
+    """The paper's motivating example."""
+
+    def __init__(self, m, n, L):
+        self.m, self.n, self.L = m, n, L
+
+    def initialize(self):
+        x = np.linspace(0, self.L, self.n)
+        a_vals = np.linspace(-1, 1, self.m)
+        b_vals = np.linspace(-1, 1, self.m)
+        self.input_args = []
+        for a in a_vals:
+            for b in b_vals:
+                self.input_args.append(((x,), {"a": a, "b": b, "c": 5}))
+        return self.input_args
+
+    def func(self, x, a=0, b=0, c=1):
+        return a * x ** 2 + b * x + c
+
+    def finalize(self, output):
+        self.ab = []
+        for inp, result in zip(self.input_args, output):
+            if min(result) < 0:
+                self.ab.append((inp[1]["a"], inp[1]["b"]))
+        return self.ab
+
+
+def test_solve_problem_parabola():
+    p = Parabola(10, 20, 10)
+    ab = solve_problem(p.initialize, p.func, p.finalize)
+    # every flagged (a, b) really does go negative somewhere
+    x = np.linspace(0, 10, 20)
+    for a, b in ab:
+        assert (a * x ** 2 + b * x + 5).min() < 0
+    assert len(ab) > 0
+
+
+def test_vmap_solve_problem_matches_serial():
+    m, n, L = 8, 16, 10.0
+
+    def initialize():
+        a = jnp.linspace(-1, 1, m)
+        b = jnp.linspace(-1, 1, m)
+        aa, bb = jnp.meshgrid(a, b, indexing="ij")
+        return {"a": aa.ravel(), "b": bb.ravel()}
+
+    x = jnp.linspace(0, L, n)
+
+    def func(task):
+        return task["a"] * x ** 2 + task["b"] * x + 5
+
+    got = vmap_solve_problem(initialize, func, lambda o: o)
+    tasks = initialize()
+    want = jnp.stack([func({"a": a, "b": b})
+                      for a, b in zip(tasks["a"], tasks["b"])])
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+def test_time_integration_contract():
+    class Counter:
+        def __init__(self):
+            self.n = 3
+            self.finalized = []
+
+        def __len__(self):
+            return self.n
+
+        def finalize_timestep(self, old, new):
+            self.finalized.append((old, new))
+
+    def initialize():
+        return Counter(), 4
+
+    def do_timestep(c):
+        c.n += 1
+        return c.n
+
+    out = time_integration(initialize, do_timestep,
+                           lambda res: res)
+    assert out == [4, 5, 6, 7]
+
+
+def test_host_task_farm_straggler_redispatch():
+    import time as _t
+    calls = {"n": 0}
+
+    def slow():
+        calls["n"] += 1
+        _t.sleep(0.05 if calls["n"] == 1 else 0.0)
+        return 42
+
+    tasks = [lambda: 1] * 6 + [slow]
+    results, stats = host_task_farm(tasks, deadline_factor=3.0)
+    assert results[:6] == [1] * 6 and results[6] == 42
+    assert stats["stragglers"] == [6]       # re-dispatched once
+    assert calls["n"] == 2
+
+
+# ---------------------------------------------------------------------------
+# SPMD count-based rebalancing (single-shard semantics via SerialComm)
+# ---------------------------------------------------------------------------
+
+@given(st.integers(1, 32), st.integers(0, 32))
+@settings(max_examples=20, deadline=None)
+def test_redistribute_work_serial_identity(cap, count):
+    count = min(count, cap)
+    data = jnp.arange(cap * 2.0).reshape(cap, 2)
+    comm = SerialComm()
+    new_data, new_count = redistribute_work(data, jnp.asarray(count), comm)
+    assert int(new_count) == count
+    np.testing.assert_allclose(new_data[:count], data[:count])
+    # dead slots zeroed
+    np.testing.assert_allclose(new_data[count:], 0.0)
+
+
+@given(st.integers(0, 100), st.integers(1, 9))
+@settings(deadline=None)
+def test_balanced_counts(total, n):
+    c = np.asarray(balanced_counts(jnp.asarray(total), n))
+    assert c.sum() == total and c.max() - c.min() <= 1
+
+
+def test_collect_serial():
+    out = collect_subproblem_output_args({"x": jnp.arange(4.0)}, SerialComm(),
+                                         tiled=True)
+    np.testing.assert_allclose(out["x"], np.arange(4.0))

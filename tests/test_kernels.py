@@ -1,0 +1,155 @@
+"""Per-kernel allclose tests: Pallas (interpret=True on CPU) vs ref oracles,
+swept over shapes and dtypes."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+RNG = np.random.default_rng(42)
+
+
+def _arr(shape, dtype=jnp.float32, scale=1.0):
+    return jnp.asarray(RNG.normal(size=shape) * scale, dtype)
+
+
+# ---------------------------------------------------------------------------
+# rmsnorm
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("shape", [(4, 64), (3, 37, 128), (1, 256), (257, 64)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_rmsnorm(shape, dtype):
+    x = _arr(shape, dtype)
+    s = _arr(shape[-1:], jnp.float32)
+    got = ops.rmsnorm(x, s)
+    want = ref.rmsnorm(x, s)
+    tol = 1e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=tol, atol=tol)
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("B,Sq,Sk,Hq,Hkv,D,causal,window", [
+    (2, 256, 256, 4, 2, 32, True, None),     # GQA causal
+    (1, 512, 512, 2, 2, 16, True, 100),      # sliding window
+    (2, 256, 256, 4, 1, 32, False, None),    # bidirectional, MQA
+    (1, 128, 128, 8, 8, 64, True, None),     # MHA
+    (1, 384, 384, 2, 1, 32, True, 64),       # window + GQA, 3 tiles
+])
+def test_flash_attention_vs_ref(B, Sq, Sk, Hq, Hkv, D, causal, window):
+    q = _arr((B, Sq, Hq, D))
+    k = _arr((B, Sk, Hkv, D))
+    v = _arr((B, Sk, Hkv, D))
+    got = ops.flash_attention(q, k, v, causal=causal, window=window,
+                              q_blk=128, kv_blk=128)
+    want = ref.flash_attention(q, k, v, causal=causal, window=window)
+    np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-4)
+
+
+def test_flash_attention_bf16():
+    q = _arr((1, 256, 4, 32), jnp.bfloat16)
+    k = _arr((1, 256, 2, 32), jnp.bfloat16)
+    v = _arr((1, 256, 2, 32), jnp.bfloat16)
+    got = ops.flash_attention(q, k, v, q_blk=128, kv_blk=128)
+    want = ref.flash_attention(q, k, v)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=3e-2, atol=3e-2)
+
+
+def test_flash_attention_matches_model_attention():
+    """Kernel == the models' jnp online-softmax path (the runtime fallback)."""
+    from repro.models.attention import gqa_attention
+    q = _arr((2, 256, 4, 32))
+    k = _arr((2, 256, 2, 32))
+    v = _arr((2, 256, 2, 32))
+    a = ops.flash_attention(q, k, v, causal=True, q_blk=128, kv_blk=128)
+    b = gqa_attention(q, k, v, causal=True, kv_chunk=64)
+    np.testing.assert_allclose(a, b, rtol=2e-4, atol=2e-4)
+
+
+# ---------------------------------------------------------------------------
+# rwkv6 scan
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("B,S,H,K,V,t_blk", [
+    (2, 128, 3, 16, 16, 32),
+    (1, 64, 2, 8, 8, 64),     # single tile
+    (1, 192, 1, 32, 16, 64),  # K != V
+])
+def test_rwkv6_scan(B, S, H, K, V, t_blk):
+    r = _arr((B, S, H, K))
+    k = _arr((B, S, H, K), scale=0.3)
+    v = _arr((B, S, H, V))
+    w = jnp.asarray(RNG.uniform(0.8, 0.999, (B, S, H, K)), jnp.float32)
+    u = _arr((H, K))
+    s0 = _arr((B, H, K, V), scale=0.1)
+    y1, f1 = ops.rwkv6_scan(r, k, v, w, u, s0, t_blk=t_blk)
+    y2, f2 = ref.rwkv6_scan(r, k, v, w, u, s0)
+    np.testing.assert_allclose(y1, y2, rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(f1, f2, rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# ssd (mamba-2) scan
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("B,S,H,P,N,q_blk", [
+    (2, 256, 3, 16, 8, 64),
+    (1, 128, 2, 32, 16, 128),  # single chunk
+    (1, 512, 1, 8, 4, 32),     # many chunks
+])
+def test_ssd_scan(B, S, H, P, N, q_blk):
+    xdt = _arr((B, S, H, P), scale=0.1)
+    la = jnp.asarray(np.log(RNG.uniform(0.8, 0.999, (B, S, H))), jnp.float32)
+    Bm = _arr((B, S, N), scale=0.3)
+    Cm = _arr((B, S, N), scale=0.3)
+    s0 = _arr((B, H, N, P), scale=0.1)
+    y1, f1 = ops.ssd_scan(xdt, la, Bm, Cm, s0, q_blk=q_blk)
+    y2, f2 = ref.ssd_scan(xdt, la, Bm, Cm, s0)
+    np.testing.assert_allclose(y1, y2, rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(f1, f2, rtol=1e-4, atol=1e-4)
+
+
+def test_ssd_kernel_matches_model_chunked_path():
+    """Kernel == the zamba model's jnp chunked SSD implementation."""
+    from repro.models.mamba2 import _ssd_chunked
+    B, S, H, P, N = 2, 256, 3, 16, 8
+    xdt = _arr((B, S, H, P), scale=0.1)
+    la = jnp.asarray(np.log(RNG.uniform(0.8, 0.999, (B, S, H))), jnp.float32)
+    Bm = _arr((B, S, N), scale=0.3)
+    Cm = _arr((B, S, N), scale=0.3)
+    y1, f1 = ops.ssd_scan(xdt, la, Bm, Cm, q_blk=64)
+    dt = jnp.ones((B, S, H))
+    y2, f2 = _ssd_chunked(xdt, dt, jnp.exp(la), Bm, Cm, chunk=64)
+    np.testing.assert_allclose(y1, y2, rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(f1, f2, rtol=1e-4, atol=1e-4)
+
+
+def test_rwkv_kernel_matches_model_time_mix_recurrence():
+    """Kernel recurrence == rwkv6 model block's lax.scan recurrence."""
+    B, S, H, K = 1, 64, 2, 16
+    r = _arr((B, S, H, K)); k = _arr((B, S, H, K), scale=0.3)
+    v = _arr((B, S, H, K)); u = _arr((H, K))
+    w = jnp.asarray(RNG.uniform(0.9, 0.999, (B, S, H, K)), jnp.float32)
+
+    def model_step(S_, xs):
+        r_t, k_t, v_t, w_t = xs
+        kv = k_t[..., :, None] * v_t[..., None, :]
+        y = jnp.einsum("bhk,bhkv->bhv", r_t, S_ + u[..., None] * kv)
+        S_ = w_t[..., None] * S_ + kv
+        return S_, y
+
+    xs = (r.swapaxes(0, 1), k.swapaxes(0, 1), v.swapaxes(0, 1),
+          w.swapaxes(0, 1))
+    fin, ys = jax.lax.scan(model_step, jnp.zeros((B, H, K, K)), xs)
+    y_kernel, fin_kernel = ops.rwkv6_scan(r, k, v, w, u, t_blk=32)
+    np.testing.assert_allclose(y_kernel, ys.swapaxes(0, 1), rtol=1e-4,
+                               atol=1e-4)
+    np.testing.assert_allclose(fin_kernel, fin, rtol=1e-4, atol=1e-4)

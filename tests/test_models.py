@@ -1,0 +1,138 @@
+"""Per-architecture smoke tests (assignment requirement): every assigned arch
+instantiates its REDUCED config, runs one forward/train step on CPU, asserts
+output shapes and finiteness; decode/prefill consistency per family."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import list_archs, smoke_config
+from repro.models.api import build_model
+
+ARCHS = list_archs()
+
+
+class _Shape:
+    global_batch, seq_len = 2, 32
+    name, kind = "smoke", "train"
+
+
+def _batch_for(model):
+    specs = model.train_batch_specs(_Shape)
+    rng = np.random.default_rng(0)
+    batch = {}
+    for name, sp in specs.items():
+        if jnp.issubdtype(sp.dtype, jnp.integer):
+            arr = rng.integers(0, model.cfg.vocab, sp.shape)
+            batch[name] = jnp.asarray(arr, sp.dtype)
+        else:
+            batch[name] = jnp.asarray(rng.normal(size=sp.shape) * 0.02,
+                                      sp.dtype)
+    return batch
+
+
+@pytest.fixture(scope="module")
+def built():
+    out = {}
+    key = jax.random.PRNGKey(0)
+    for arch in ARCHS:
+        cfg = smoke_config(arch).replace(remat="none")
+        if cfg.n_experts:
+            # generous capacity: token drops are legitimate MoE behaviour but
+            # would break the exact prefill/decode consistency check below
+            cfg = cfg.replace(capacity_factor=8.0)
+        model = build_model(cfg)
+        out[arch] = (model, model.init(key))
+    return out
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_loss_finite_and_grads_flow(arch, built):
+    model, params = built[arch]
+    batch = _batch_for(model)
+    (loss, metrics), grads = jax.jit(
+        jax.value_and_grad(lambda p, b: model.loss(p, b, None),
+                           has_aux=True))(params, batch)
+    assert jnp.isfinite(loss), arch
+    assert 1.0 < float(loss) < 20.0, (arch, float(loss))
+    gn = sum(float(jnp.sum(jnp.abs(g))) for g in jax.tree_util.tree_leaves(grads))
+    assert np.isfinite(gn) and gn > 0, arch       # gradients flow everywhere
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_train_step_reduces_loss(arch, built):
+    from repro.optim import AdamWConfig
+    from repro.train import make_train_step
+    model, params = built[arch]
+    batch = _batch_for(model)
+    opt = AdamWConfig(peak_lr=3e-3, warmup_steps=1, decay_steps=20)
+    step = make_train_step(model, opt, donate=False)
+    from repro.optim.adamw import adamw_init
+    state = {"params": params, "opt": adamw_init(params, opt)}
+    losses = []
+    for _ in range(8):
+        state, out = step(state, batch)   # same batch: loss must drop
+        losses.append(float(out["loss"]))
+    assert losses[-1] < losses[0], (arch, losses)
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_decode_matches_prefill(arch, built):
+    """Teacher-forcing consistency: decoding token t with a cache built from
+    tokens[:t] gives the same hidden as prefilling tokens[:t+1]."""
+    model, params = built[arch]
+    cfg = model.cfg
+    rng = np.random.default_rng(1)
+    B, S = 2, 8
+    batch = _batch_for(model)
+    pb = {k: batch[k] for k in model.prefill_batch_specs(_Shape)}
+    # shorten the token stream to S for the consistency check
+    pb["tokens"] = jnp.asarray(rng.integers(0, cfg.vocab, (B, S)), jnp.int32)
+    max_len = S + 4 + (cfg.n_image_tokens if cfg.family == "vlm" else 0)
+
+    state, hidden_full = jax.jit(
+        lambda p, b: model.prefill(p, b, None, max_len))(params, pb)
+
+    # now prefill S-1 then decode the final token
+    pb_short = dict(pb, tokens=pb["tokens"][:, :-1])
+    state2, _ = jax.jit(
+        lambda p, b: model.prefill(p, b, None, max_len))(params, pb_short)
+    last_tok = pb["tokens"][:, -1:]
+    pos = jnp.asarray(S - 1 + getattr(model, "_decode_pos_offset", 0),
+                      jnp.int32)
+    if cfg.family == "vlm":
+        pos = jnp.asarray(cfg.n_image_tokens + S - 1, jnp.int32)
+    state2, logits_dec = jax.jit(
+        lambda p, s, t, q: model.decode_step(p, s, t, q, None))(
+        params, state2, last_tok, pos)
+
+    logits_full = model.lm_head(params, hidden_full[:, -1:], None)
+    np.testing.assert_allclose(np.asarray(logits_dec, np.float32),
+                               np.asarray(logits_full, np.float32),
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_moe_capacity_drops_are_bounded():
+    """Router with capacity factor: dropped fraction stays small on random
+    inputs (the balancing loss pushes towards the paper's balanced target)."""
+    from repro.models import moe
+    cfg = smoke_config("qwen3-moe-235b-a22b").replace(remat="none")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    batch = _batch_for(model)
+    loss, metrics = jax.jit(lambda p, b: model.loss(p, b, None))(params, batch)
+    assert jnp.isfinite(metrics["aux"])
+    # aux (switch) loss near 1.0 = balanced; hugely above = collapsed router
+    assert float(metrics["aux"]) < 4.0
+
+
+def test_gemma3_local_global_pattern():
+    cfg = smoke_config("gemma3-4b")
+    wins = [cfg.window_for_layer(i) for i in range(cfg.n_layers)]
+    assert wins[2] is None                      # every 3rd layer global (smoke)
+    assert wins[0] == cfg.local_window
+    full = smoke_config("gemma3-4b").replace(n_layers=34, global_every=6,
+                                             local_window=1024)
+    wins = [full.window_for_layer(i) for i in range(34)]
+    assert sum(w is None for w in wins) == 5    # 34 layers -> 5 globals
+    assert wins[5] is None and wins[0] == 1024  # 5:1 pattern
