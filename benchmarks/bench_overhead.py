@@ -12,6 +12,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import solve_problem, time_integration, vmap_solve_problem
+from repro.core.runtime import ThreadFarmExecutor
 
 
 def run(csv_rows: list):
@@ -36,6 +37,17 @@ def run(csv_rows: list):
         f"overhead_taskfarm,{t_layer*1e6:.0f},"
         f"direct_s={t_direct:.4f};layer_s={t_layer:.4f};"
         f"overhead={100*(t_layer/t_direct-1):.1f}%")
+
+    # -- thread-farm scheduling overhead (same tasks, concurrent runtime) ----
+    farm = ThreadFarmExecutor(num_workers=8)
+    farm.map_callables([lambda: None] * 8)   # warm the persistent pool
+    t0 = time.perf_counter()
+    farm.run(initialize, f, jax.block_until_ready)
+    t_farm = time.perf_counter() - t0
+    csv_rows.append(
+        f"overhead_threadfarm,{t_farm*1e6:.0f},"
+        f"direct_s={t_direct:.4f};farm_s={t_farm:.4f};"
+        f"overhead={100*(t_farm/t_direct-1):.1f}%")
 
     # -- time-integration overhead -------------------------------------------
     # realistic per-step work (~ms), as in any actual simulation/train step

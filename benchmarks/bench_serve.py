@@ -1,6 +1,6 @@
 """Serving throughput: continuous batching vs sequential request handling.
 
-The engine's win (the population-dynamics analogy from DESIGN.md §3) is slot
+The engine's win is slot
 reuse: decode ticks amortize across live requests.  Reported: tokens/s with
 max_slots=1 (sequential) vs max_slots=4 (continuous batching) on the smoke
 dense model — the ratio is the batching speedup the slot machinery delivers.

@@ -6,6 +6,7 @@ Prints ``name,us_per_call,derived`` CSV rows (and tees to results/bench.csv).
   bench_dmc      paper Table 2 (DMC + dynamic load balancing, scaled-size)
   bench_schwarz  paper Table 3 (Boussinesq additive Schwarz speedup)
   bench_overhead paper §1/§5 (function-centric layer overhead)
+  bench_runtime  executor runtime (farm speedup + cross-tier parity)
   bench_kernels  Pallas kernel suite (traffic-saving ratios)
   bench_serve    continuous-batching engine throughput
 """
@@ -17,10 +18,11 @@ import traceback
 def main() -> None:
     only = sys.argv[1] if len(sys.argv) > 1 else None
     from benchmarks import (bench_dmc, bench_kernels, bench_mcmc,
-                            bench_overhead, bench_schwarz, bench_serve)
+                            bench_overhead, bench_runtime, bench_schwarz,
+                            bench_serve)
     mods = {"mcmc": bench_mcmc, "dmc": bench_dmc, "schwarz": bench_schwarz,
-            "overhead": bench_overhead, "kernels": bench_kernels,
-            "serve": bench_serve}
+            "overhead": bench_overhead, "runtime": bench_runtime,
+            "kernels": bench_kernels, "serve": bench_serve}
     rows = ["name,us_per_call,derived"]
     for name, mod in mods.items():
         if only and name != only:

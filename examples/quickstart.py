@@ -1,19 +1,21 @@
-"""Quickstart: the paper's §2 parabola example through all three tiers of the
-function-centric layer.
+"""Quickstart: the paper's §2 parabola example through all four executors of
+the function-centric runtime (every tier drives the SAME three functions).
 
     PYTHONPATH=src python examples/quickstart.py
 
-1. ``solve_problem``          — the paper's serial loop, verbatim semantics.
-2. ``vmap_solve_problem``     — same three functions, vectorized on-device.
-3. ``parallel_solve_problem`` — same three functions over a device mesh
-                                (here 1 CPU device; on a pod, the production
-                                mesh — the code does not change).
+1. ``solve_problem`` / ``SerialExecutor``     — the paper's serial loop.
+2. ``vmap_solve_problem`` / ``VmapExecutor``  — vectorized on one device.
+3. ``parallel_solve_problem`` / ``MeshExecutor`` — SPMD over a device mesh
+   (here 1 CPU device; on a pod, the production mesh — code unchanged).
+4. ``ThreadFarmExecutor``                     — concurrent host-level farm
+   (work stealing + straggler re-dispatch) for separately-jitted programs.
 """
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core import solve_problem, vmap_solve_problem, parallel_solve_problem
+from repro.core.runtime import ThreadFarmExecutor
 
 M, N, L = 32, 50, 10.0
 
@@ -71,5 +73,11 @@ print("== tier 3: SPMD task farm over the available mesh ==")
 mesh = jax.make_mesh((jax.device_count(),), ("data",))
 n_neg = parallel_solve_problem(initialize, func, finalize, mesh)
 print(f"   {n_neg} negative combinations on a {jax.device_count()}-device mesh")
+assert n_neg == len(ab)
+
+print("== tier 4: concurrent host-level thread farm ==")
+farm = ThreadFarmExecutor(num_workers=8, deadline_factor=3.0)
+n_neg = farm.run(initialize, func, finalize)
+print(f"   {n_neg} negative combinations on the thread farm")
 assert n_neg == len(ab)
 print("quickstart OK")

@@ -31,7 +31,9 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
-from repro.core.comm import Comm, make_comm
+from repro.core.comm import Comm, make_comm, shard_map
+from repro.core.runtime import (Executor, MeshExecutor, SerialExecutor,
+                                make_executor)
 from repro.core.schwarz import (additive_schwarz_iterations, halo_exchange,
                                 simple_convergence_test)
 
@@ -219,6 +221,26 @@ def run_serial(p: BoussinesqParams, steps: int, *, k_mode: int = 1):
     return eta[1:-1], phi[1:-1], hist
 
 
+def run(p: BoussinesqParams, steps: int, *, k_mode: int = 1,
+        executor: Executor | str = "serial", **executor_kwargs):
+    """Executor-selecting driver: a :class:`MeshExecutor` runs the
+    row-decomposed Schwarz solve over its mesh axis; a
+    :class:`SerialExecutor` runs the single-domain serial solve (same kernel
+    either way — Schwarz is domain decomposition, so only a mesh changes the
+    layout).  Other executors are rejected rather than silently degraded.
+    """
+    executor = make_executor(executor, **executor_kwargs)
+    if isinstance(executor, MeshExecutor):
+        return run_parallel(executor.mesh, p, steps, k_mode=k_mode,
+                            axis=executor.axis)
+    if not isinstance(executor, SerialExecutor):
+        raise TypeError(
+            f"boussinesq.run supports 'serial' or 'mesh' executors, not "
+            f"{type(executor).__name__}: the Schwarz solve is domain "
+            f"decomposition, so only a mesh changes the layout")
+    return run_serial(p, steps, k_mode=k_mode)
+
+
 def run_parallel(mesh, p: BoussinesqParams, steps: int, *, k_mode: int = 1,
                  axis: str = "data"):
     """Row-decomposed Schwarz run; one jitted scan over time."""
@@ -240,7 +262,7 @@ def run_parallel(mesh, p: BoussinesqParams, steps: int, *, k_mode: int = 1,
         (eta, phi), hist = jax.lax.scan(body, (eta, phi), None, length=steps)
         return eta[1:-1], phi[1:-1], hist
 
-    run = jax.shard_map(
+    run = shard_map(
         per_shard, mesh=mesh,
         in_specs=(P(axis, None), P(axis, None)),
         out_specs=(P(axis, None), P(axis, None),

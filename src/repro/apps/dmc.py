@@ -9,7 +9,7 @@ Walkers diffuse with step N(0, sqrt(tau)) (D = 1/2) and branch with
 
     G_B = exp(-((V(R) + V(R'))/2 - E_T) tau),   marker = floor(G_B + u)
 
-TPU adaptation of the paper's ``class Walkers`` (DESIGN.md §2): the
+TPU adaptation of the paper's ``class Walkers``: the
 population lives in a fixed-capacity array with a live ``count``; delete/clone
 (the paper's ``delete``/``append``) are realized as a prefix-sum *compaction*
 — the static-shape equivalent of list surgery.  E_T population control is the
@@ -30,8 +30,9 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
-from repro.core.comm import Comm, SerialComm, make_comm
+from repro.core.comm import Comm, SerialComm, make_comm, shard_map
 from repro.core.load_balance import dynamic_load_balancing
+from repro.core.runtime import Executor, make_executor
 from repro.core.time_integration import time_integration
 
 
@@ -152,6 +153,34 @@ def run_serial(n_walkers: int = 500, timesteps: int = 400, *,
     return time_integration(initialize, do_timestep, finalize)
 
 
+def run_replicas(n_replicas: int = 4, executor: Executor | str = "thread",
+                 n_walkers: int = 300, timesteps: int = 300, *,
+                 tau: float = 0.02, seed: int = 0, **executor_kwargs):
+    """Independent-replica DMC through the function-centric runtime.
+
+    Each replica is one full serial DMC run with its own seed — a
+    heavyweight *host* task (a separately-jitted program), exactly the
+    paper's original task-farm scope.  The executor must therefore be a
+    host tier (``serial`` or ``thread``); the thread farm overlaps replicas
+    because the device computation releases the GIL.  ``finalize`` averages
+    the per-replica energies and reports their spread (the standard
+    independent-population error bar).
+    """
+    executor = make_executor(executor, **executor_kwargs)
+
+    def initialize():
+        return [((), {"n_walkers": n_walkers, "timesteps": timesteps,
+                      "tau": tau, "seed": seed + i})
+                for i in range(n_replicas)]
+
+    def finalize(outputs):
+        e0s = jnp.stack([o["e0_estimate"] for o in outputs])
+        return {"e0_estimate": e0s.mean(), "e0_std": e0s.std(),
+                "replicas": outputs}
+
+    return executor.run(initialize, run_serial, finalize)
+
+
 # ---------------------------------------------------------------------------
 # SPMD step (shard_map body) with dynamic load balancing
 # ---------------------------------------------------------------------------
@@ -216,7 +245,7 @@ def run_parallel(mesh, n_walkers: int = 512, timesteps: int = 200, *,
             obs["local_count"] = obs["local_count"][:, None]    # (T, 1)
             return obs
 
-        return jax.shard_map(
+        return shard_map(
             per_shard, mesh=mesh, in_specs=P(),
             out_specs={"e_trial": P(), "count_after": P(), "pot": P(),
                        "rebalanced": P(), "local_count": P(None, axis)},

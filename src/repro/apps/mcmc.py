@@ -11,14 +11,14 @@ estimated by Gibbs sampling with truncated-normal data augmentation:
   (iii) x_i | beta, alpha, y*      ~ 1D Bayesian regression per legislator
 
 The paper farms *chains* out as independent ``func`` evaluations (its R
-``ideal`` calls); here each chain is one task in
-:func:`repro.core.functional.parallel_solve_problem` (or ``vmap`` on one
-device) — the replacement of the paper's rpy-wrapped engine by a JAX-native
-one, with the same initialize/func/finalize decomposition.
+``ideal`` calls); here each chain is one task handed to any
+:class:`repro.core.runtime.Executor` — serial, vmap, mesh, or thread farm —
+the replacement of the paper's rpy-wrapped engine by a JAX-native one, with
+the same initialize/func/finalize decomposition.
 
 Class :class:`IdealPointProblem` mirrors the paper's ``PIPE`` class: the
 constructor holds the data, and ``initialize`` / ``func`` / ``finalize`` have
-exactly the generic signatures ``solve_problem`` demands.
+exactly the generic signatures the executors demand.
 """
 from __future__ import annotations
 
@@ -27,9 +27,9 @@ from functools import partial
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
-from repro.core.functional import solve_problem, vmap_solve_problem
+from repro.core.runtime import (Executor, SerialExecutor, VmapExecutor,
+                                make_executor)
 
 
 def make_synthetic_votes(key, n_leg: int, n_votes: int):
@@ -128,16 +128,22 @@ class IdealPointProblem:
         return self.result
 
 
+def solve(problem: IdealPointProblem, executor: Executor | str = "vmap",
+          **executor_kwargs):
+    """Run the problem on any executor (spec string or instance).
+
+    The application selects an executor instead of hand-wiring a tier — the
+    same three problem functions drive every backend.
+    """
+    executor = make_executor(executor, **executor_kwargs)
+    return executor.run(problem.initialize, problem.func, problem.finalize)
+
+
 def solve_serial(problem: IdealPointProblem):
     """Paper's serial ``solve_problem`` driving the same three functions."""
-    tasks = problem.initialize()
-    keys = tasks["key"]
-    outs = [problem.func({"key": k}) for k in keys]
-    stacked = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *outs)
-    return problem.finalize(stacked)
+    return solve(problem, SerialExecutor())
 
 
 def solve_vmap(problem: IdealPointProblem):
     """Single-device data-parallel chains (VPU/MXU inner parallelism)."""
-    return vmap_solve_problem(problem.initialize, problem.func,
-                              problem.finalize)
+    return solve(problem, VmapExecutor())

@@ -69,7 +69,7 @@ class ModelConfig:
     # ---- derived -----------------------------------------------------------
     @property
     def padded_q_heads(self) -> int:
-        return self.n_heads                 # heads never TP-sharded (DESIGN §5)
+        return self.n_heads                 # heads never TP-sharded
 
     @property
     def padded_kv_heads(self) -> int:
@@ -134,7 +134,7 @@ SHAPES = {
 
 
 def shape_applicable(cfg: ModelConfig, shape: ShapeConfig) -> tuple[bool, str]:
-    """(runs?, reason-if-skipped) — the DESIGN.md §6 skip table, in code."""
+    """(runs?, reason-if-skipped) — the config skip table, in code."""
     if shape.name == "long_500k" and not cfg.sub_quadratic:
         return False, "pure full-attention arch: 500k decode skipped per assignment"
     return True, ""

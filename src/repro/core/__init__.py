@@ -19,9 +19,19 @@ Paper (Python + MPI)                     This package (JAX SPMD)
 ``simple_convergence_test``              :func:`repro.core.schwarz.simple_convergence_test`
 send/recv/all_gather function arguments  :class:`repro.core.comm.Comm`
 =======================================  =========================================
+
+All four tiers are implementations of one :class:`repro.core.runtime.Executor`
+protocol — ``SerialExecutor`` / ``VmapExecutor`` / ``MeshExecutor`` /
+``ThreadFarmExecutor`` — sharing the paper's ``(initialize, func, finalize)``
+contract; the functions above are thin wrappers kept for the paper-faithful
+spelling.
 """
 from repro.core.comm import Comm
-from repro.core.functional import solve_problem, parallel_solve_problem, vmap_solve_problem
+from repro.core.functional import (solve_problem, parallel_solve_problem,
+                                   vmap_solve_problem, host_task_farm)
+from repro.core.runtime import (Executor, MeshExecutor, SerialExecutor,
+                                ThreadFarmExecutor, VmapExecutor,
+                                make_executor, straggler_deadline)
 from repro.core.partition import simple_partitioning, get_subproblem_input_args, pad_to_multiple
 from repro.core.collect import collect_subproblem_output_args
 from repro.core.time_integration import time_integration, parallel_time_integration
@@ -31,6 +41,8 @@ from repro.core.schwarz import additive_schwarz_iterations, simple_convergence_t
 
 __all__ = [
     "Comm", "solve_problem", "parallel_solve_problem", "vmap_solve_problem",
+    "host_task_farm", "Executor", "SerialExecutor", "VmapExecutor", "MeshExecutor",
+    "ThreadFarmExecutor", "make_executor", "straggler_deadline",
     "simple_partitioning", "get_subproblem_input_args", "pad_to_multiple",
     "collect_subproblem_output_args", "time_integration", "parallel_time_integration",
     "find_optimal_workload", "redistribute_work", "dynamic_load_balancing",

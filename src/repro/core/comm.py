@@ -18,6 +18,14 @@ import jax
 import jax.numpy as jnp
 
 
+def _axis_size(axis) -> int:
+    """Version-compat static axis size: ``jax.lax.axis_size`` where it
+    exists, else the classic ``psum(1, axis)`` idiom."""
+    if hasattr(jax.lax, "axis_size"):
+        return int(jax.lax.axis_size(axis))
+    return int(jax.lax.psum(1, axis))
+
+
 @dataclasses.dataclass(frozen=True)
 class Comm:
     """Axis-bound collectives, usable inside ``shard_map``/``pmap`` bodies.
@@ -37,8 +45,8 @@ class Comm:
         """Paper's ``num_procs`` (static)."""
         if isinstance(self.axis, (tuple, list)):
             import math
-            return int(math.prod(jax.lax.axis_size(a) for a in self.axis))
-        return int(jax.lax.axis_size(self.axis))
+            return int(math.prod(_axis_size(a) for a in self.axis))
+        return int(_axis_size(self.axis))
 
     # -- collectives --------------------------------------------------------
     def all_gather(self, x, *, tiled: bool = False):
@@ -126,3 +134,18 @@ class SerialComm:
 def make_comm(axis) -> Comm | SerialComm:
     """Factory: ``axis=None`` gives the serial transport."""
     return SerialComm() if axis is None else Comm(axis)
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check_vma: bool = True):
+    """Version-compat ``shard_map``: newer jax exposes ``jax.shard_map``
+    (with ``check_vma``); older releases only have
+    ``jax.experimental.shard_map.shard_map`` (with ``check_rep``).
+
+    The default matches jax's own (validation on); the repo's production
+    call sites pass ``check_vma=False`` explicitly, as they always have."""
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=check_vma)
+    from jax.experimental.shard_map import shard_map as _shard_map
+    return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      check_rep=check_vma)

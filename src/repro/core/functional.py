@@ -1,130 +1,69 @@
-"""The paper's §2: ``solve_problem`` / ``parallel_solve_problem``.
+"""The paper's §2 entry points, kept as thin wrappers over the executor
+runtime (:mod:`repro.core.runtime`).
 
-Three tiers, all sharing the (initialize, func, finalize) contract:
+Historically this module carried four divergent implementations of the
+``(initialize, func, finalize)`` pattern; they are now one subsystem:
 
-1. :func:`solve_problem` — paper-faithful serial version (any Python callables).
-2. :func:`vmap_solve_problem` — single-device JAX: tasks as stacked pytrees,
-   ``func`` vectorized with ``vmap`` (the TPU replacement for the paper's
-   list-comprehension loop; the VPU/MXU *is* the inner parallelism).
-3. :func:`parallel_solve_problem` — multi-device SPMD: tasks sharded over a
-   mesh axis (paper's ``get_subproblem_input_args``), ``func`` vmapped within
-   each shard, results collected with ``all_gather`` (paper's
-   ``collect_subproblem_output_args``), ``finalize`` run host-side (paper's
-   "only on master" step).
+1. :func:`solve_problem` — :class:`~repro.core.runtime.SerialExecutor`
+   (paper-faithful serial semantics, any Python callables).
+2. :func:`vmap_solve_problem` — :class:`~repro.core.runtime.VmapExecutor`
+   (single-device JAX; the VPU/MXU *is* the inner parallelism).
+3. :func:`parallel_solve_problem` — :class:`~repro.core.runtime.MeshExecutor`
+   (multi-device SPMD over a mesh axis; pad+mask replaces the paper's ±1
+   rule, and two-argument finalizers receive the documented
+   ``finalize(outputs, valid_mask)`` signature).
+4. :func:`host_task_farm` — :class:`~repro.core.runtime.ThreadFarmExecutor`
+   (genuinely concurrent master/worker farm for arbitrary host callables,
+   with work stealing, timing-proportional rebalancing, and deadline-based
+   straggler re-dispatch).
 
-A host-level heterogeneous task farm (:func:`host_task_farm`) covers the
-paper's original use-case of wrapping *arbitrary* serial code (here: separately
-jitted programs of different shapes), with timing-based dynamic scheduling —
-the part of the paper's design that must stay at the host level on TPU.
+New code should select an executor directly; these wrappers exist for the
+paper-faithful spelling and backward compatibility.
 """
 from __future__ import annotations
 
-import time
 from typing import Callable, Sequence
 
-import jax
-import jax.numpy as jnp
-from jax.sharding import NamedSharding, PartitionSpec as P
+from repro.core.runtime import (MeshExecutor, SerialExecutor,
+                                ThreadFarmExecutor, VmapExecutor)
 
-from repro.core import partition as _part
-from repro.core.comm import Comm
-
-
-# ---------------------------------------------------------------------------
-# 1. Paper-faithful serial version (verbatim semantics from §2.1)
-# ---------------------------------------------------------------------------
 
 def solve_problem(initialize: Callable, func: Callable, finalize: Callable):
     """``output = [func(*a, **kw) for a, kw in initialize()]; finalize(output)``."""
-    input_args = initialize()
-    output = [func(*args, **kwargs) for args, kwargs in input_args]
-    return finalize(output)
+    return SerialExecutor().run(initialize, func, finalize)
 
-
-# ---------------------------------------------------------------------------
-# 2. Single-device JAX version
-# ---------------------------------------------------------------------------
 
 def vmap_solve_problem(initialize: Callable, func: Callable, finalize: Callable):
     """``initialize()`` returns a pytree whose leaves stack the per-task args
     along axis 0; ``func`` maps one task's pytree slice to outputs."""
-    tasks = initialize()
-    output = jax.jit(jax.vmap(func))(tasks)
-    return finalize(output)
+    return VmapExecutor().run(initialize, func, finalize)
 
 
-# ---------------------------------------------------------------------------
-# 3. SPMD version
-# ---------------------------------------------------------------------------
+def parallel_solve_problem(initialize: Callable, func: Callable,
+                           finalize: Callable, mesh, *, axis: str = "data"):
+    """Task farm over mesh axis ``axis`` (the paper's
+    ``parallel_solve_problem``); see :class:`repro.core.runtime.MeshExecutor`."""
+    return MeshExecutor(mesh, axis=axis).run(initialize, func, finalize)
 
-def parallel_solve_problem(initialize: Callable, func: Callable, finalize: Callable,
-                           mesh, *, axis: str = "data", donate: bool = False):
-    """Task farm over mesh axis ``axis``.
-
-    ``initialize()`` → stacked task pytree (leading axis = #tasks).  Tasks are
-    padded to a multiple of the axis size (paper's ±1 rule becomes pad+mask),
-    sharded, evaluated with a vmapped ``func`` inside the shard, and gathered.
-    ``finalize(outputs, valid_mask)`` runs on host with the full result.
-    """
-    tasks = initialize()
-    n_tasks = jax.tree_util.tree_leaves(tasks)[0].shape[0]
-    n_shards = mesh.shape[axis]
-    padded = _part.pad_to_multiple(n_tasks, n_shards)
-    tasks, mask = _part.pad_leading(tasks, padded)
-    tasks = _part.shard_tasks(tasks, mesh, axis)
-
-    vfunc = jax.vmap(func)
-
-    out_sharding = NamedSharding(mesh, P())
-
-    @jax.jit
-    def run(tasks):
-        out = vfunc(tasks)
-        # Keep results sharded until the host needs them; the gather to the
-        # host below is the paper's collect-to-master step.
-        return out
-
-    out = run(tasks)
-    out = jax.device_get(out)
-    out = jax.tree_util.tree_map(lambda x: x[:n_tasks], out)
-    return finalize(out)
-
-
-# ---------------------------------------------------------------------------
-# Host-level heterogeneous task farm (paper's original scope: arbitrary
-# serial programs), with the paper's timing-driven dynamic scheduling.
-# ---------------------------------------------------------------------------
 
 def host_task_farm(tasks: Sequence[Callable[[], object]], *,
                    num_workers: int | None = None,
                    deadline_factor: float | None = None):
-    """Run independent zero-arg callables with greedy dynamic dispatch.
+    """Run independent zero-arg callables on the concurrent thread farm.
 
-    This models the paper's master/worker farm at the host level (each task is
-    typically a separately-jitted program).  ``deadline_factor`` enables the
-    straggler mitigation used by the production trainer: a task whose runtime
-    exceeds ``deadline_factor`` x (median runtime so far) is recorded as a
-    straggler and re-dispatched once (results of the first completion win).
+    Kept for backward compatibility; returns (results list, stats dict) with
+    the historical ``timings`` / ``stragglers`` keys plus the farm's
+    ``steals`` / ``rebalances`` / ``worker_tasks`` counters.
 
-    Returns (results list, stats dict).
+    Each call gets its own farm (released on return), so concurrent callers
+    stay fully independent, as they were with the serial implementation.
+    Hot loops that farm work every tick should hold a
+    :class:`~repro.core.runtime.ThreadFarmExecutor` instead and reuse its
+    persistent pool (the serve engine does exactly that).
     """
-    results: list = [None] * len(tasks)
-    timings: list[float] = []
-    stragglers: list[int] = []
-    for i, task in enumerate(tasks):
-        t0 = time.perf_counter()
-        results[i] = task()
-        dt = time.perf_counter() - t0
-        if deadline_factor is not None and timings:
-            med = sorted(timings)[len(timings) // 2]
-            if dt > deadline_factor * med:
-                stragglers.append(i)
-                # re-dispatch once (first completion wins; on a real cluster
-                # this would go to a hot spare — see train/fault.py)
-                t0 = time.perf_counter()
-                redo = task()
-                redo_dt = time.perf_counter() - t0
-                if redo_dt < dt:
-                    results[i], dt = redo, redo_dt
-        timings.append(dt)
-    return results, {"timings": timings, "stragglers": stragglers}
+    farm = ThreadFarmExecutor(num_workers=num_workers,
+                              deadline_factor=deadline_factor)
+    try:
+        return farm.map_callables(list(tasks))
+    finally:
+        farm.shutdown()

@@ -135,8 +135,9 @@ def redistribute_work(local_data, local_count, comm: Comm,
 def dynamic_load_balancing(local_data, local_count, comm: Comm,
                            threshold_factor: float = 1.1):
     """Paper's ``dynamic_load_balancing``: rebalance only when
-    ``max_count > threshold_factor * min_count`` (count-driven on TPU; see
-    DESIGN.md §2 for why wall-clock balancing stays at the host level).
+    ``max_count > threshold_factor * min_count`` (count-driven on TPU;
+    wall-clock balancing stays at the host level — see
+    :class:`repro.core.runtime.ThreadFarmExecutor`).
 
     Returns (data, count, counts_per_shard, did_rebalance).
     """

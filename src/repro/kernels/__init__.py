@@ -1,4 +1,4 @@
-"""Pallas TPU kernels for the compute hot-spots (DESIGN.md §4).
+"""Pallas TPU kernels for the compute hot-spots.
 
 Each kernel ships three layers: ``<name>.py`` (pl.pallas_call + BlockSpec),
 ``ops.py`` (jitted public wrapper, interpret=True off-TPU), ``ref.py``

@@ -1,6 +1,6 @@
 """Blocked online-softmax (flash) attention for TPU.
 
-TPU adaptation of the GPU flash-attention idea (DESIGN.md §4): instead of a
+TPU adaptation of the GPU flash-attention idea: instead of a
 warp-cooperative SRAM tile, blocks are VMEM tiles driven by the sequential
 Pallas grid.  Grid = (B*Hq, Sq/q_blk, Sk/kv_blk) with the KV dimension
 innermost, so the (acc, m, l) running state for one q tile lives in VMEM

@@ -1,7 +1,7 @@
 """Mamba-2 SSD kernel: chunked state-space dual form with the inter-chunk
 state carried in VMEM scratch.
 
-TPU adaptation (DESIGN.md §4): the CUDA SSD kernel splits work across warps
+TPU adaptation: the CUDA SSD kernel splits work across warps
 with the state in shared memory; here each (batch, head) runs a sequential
 chunk sweep — grid (B*H, S/Q) with chunks innermost — holding the (N x P)
 state in f32 VMEM scratch.  The *intra*-chunk part is the quadratic

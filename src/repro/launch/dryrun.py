@@ -43,7 +43,7 @@ RESULTS = os.path.join(os.path.dirname(__file__), "..", "..", "..",
 
 
 # ---------------------------------------------------------------------------
-# Per-cell sharding rules (DESIGN.md §5 + shape-driven overrides)
+# Per-cell sharding rules (baseline scheme + shape-driven overrides)
 # ---------------------------------------------------------------------------
 
 def rules_for_cell(mesh, cfg: ModelConfig, shape: ShapeConfig) -> AxisRules:

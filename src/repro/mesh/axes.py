@@ -2,7 +2,7 @@
 ``simple_partitioning``: a single generic mapping from *logical* tensor axes to
 mesh axes replaces per-tensor hand sharding.
 
-Baseline scheme (see DESIGN.md §5):
+Baseline scheme:
 
 * batch          -> ("data",) / ("pod","data")      pure DP
 * seq            -> "model"                          sequence/context parallel

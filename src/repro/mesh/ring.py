@@ -1,6 +1,5 @@
 """Ring attention — the additive-Schwarz neighbour-exchange pattern applied
-to sequence-parallel attention (DESIGN.md §3: "Schwarz → neighbour-exchange
-parallelism").
+to sequence-parallel attention ("Schwarz → neighbour-exchange parallelism").
 
 Q stays put (each shard owns a contiguous sequence block); K/V blocks rotate
 around the ring one hop per step (``ppermute``, the paper's ``communicate``),

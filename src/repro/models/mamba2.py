@@ -1,6 +1,6 @@
 """Mamba-2 (SSD) block — chunked state-space dual form.
 
-TPU adaptation (DESIGN.md §4): the CUDA SSD kernel's warp-level scan is
+TPU adaptation: the CUDA SSD kernel's warp-level scan is
 re-blocked as *chunked* SSD — intra-chunk quadratic attention-like GEMMs that
 feed the MXU, plus an inter-chunk state recurrence carried by ``lax.scan``.
 Heads (d_inner/head_dim = 112 for zamba2-7b) are TP-sharded over ``model``

@@ -1,7 +1,7 @@
 """Mixture-of-Experts with sort-based dispatch + expert-parallel all_to_all.
 
-This is the paper's §3.2 dynamic load balancing transplanted to token routing
-(DESIGN.md §3): tokens are the walkers, experts are the processors, the
+This is the paper's §3.2 dynamic load balancing transplanted to token routing:
+tokens are the walkers, experts are the processors, the
 capacity factor realizes ``find_optimal_workload``'s balanced target, and the
 ``all_to_all`` exchange is ``redistribute_work`` on the ICI torus.  The
 auxiliary balancing loss *drives the router towards the balanced distribution*
@@ -26,6 +26,7 @@ import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from repro.core.comm import Comm, SerialComm
+from repro.core.comm import shard_map as _comm_shard_map
 from repro.mesh.axes import AxisRules, logical_to_mesh
 from repro.models.module import Param
 
@@ -173,7 +174,7 @@ def moe_apply(params, x, cfg, rules: AxisRules | None):
         aux = Comm(mesh.axis_names).all_reduce_sum(aux) / mesh.size
         return y.reshape(B_l, S_l, d), aux
 
-    y, aux = jax.shard_map(
+    y, aux = _comm_shard_map(
         body, mesh=mesh,
         in_specs=(x_spec, w_specs["router"], w_specs["gate"], w_specs["up"],
                   w_specs["down"]),

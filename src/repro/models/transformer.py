@@ -1,6 +1,6 @@
 """Decoder-only LM (dense + MoE variants) with scan-over-layers.
 
-Distribution follows DESIGN.md §5: batch->data(+pod), sequence->model
+Distribution scheme: batch->data(+pod), sequence->model
 (context parallelism; KV all-gathered, cheap under GQA), MLP/vocab/experts
 TP over model, weights FSDP-stored over data.  All sharding is expressed
 through logical ``constrain`` calls so the same code runs single-device

@@ -1,19 +1,22 @@
 """Continuous-batching serving engine.
 
-This is the paper's §3.2 *dynamic population* pattern applied to inference
-(DESIGN.md §3): decode **slots** are the processors' capacity, **requests**
-are walkers that enter (prefill), live (decode steps), and leave (EOS /
-length) — the engine's admission loop is ``do_timestep`` plus the
-append/delete walker operations, and the host-side queue bookkeeping is the
-``finalize_timestep`` analogue.
+This is the paper's §3.2 *dynamic population* pattern applied to inference:
+decode **slots** are the processors' capacity, **requests** are walkers that
+enter (prefill), live (decode steps), and leave (EOS / length) — the
+engine's admission loop is ``do_timestep`` plus the append/delete walker
+operations, and the host-side queue bookkeeping is the ``finalize_timestep``
+analogue.
 
 Mechanics:
 
 * One fixed-capacity batched decode state (``B = max_slots``) lives on
-  device; slots are admitted/retired with masked writes (static shapes, the
-  TPU constraint from DESIGN.md §2).
-* Prefill runs per request (shape-bucketed to limit recompilation) and the
-  resulting cache is spliced into the slot's rows of the batched cache.
+  device; slots are admitted/retired with masked writes (static shapes — the
+  TPU constraint that rules out Python list surgery on device data).
+* Prefill runs per request (shape-bucketed to limit recompilation) through
+  the :class:`repro.core.runtime.ThreadFarmExecutor`, so prefills for
+  different admitted requests overlap on the host instead of running
+  one-by-one; each resulting cache is spliced into the slot's rows of the
+  batched cache in deterministic slot order.
 * Every engine tick decodes ONE token for ALL live slots in a single SPMD
   step with **ragged positions** — slot i attends to its own ``pos[i]``-long
   prefix (the per-batch kv_valid_len path in :mod:`repro.models.attention`).
@@ -28,6 +31,7 @@ a known axis (axis 1 for the stacked dense/MoE/VLM caches; declared by
 from __future__ import annotations
 
 import dataclasses
+import functools
 import itertools
 import time
 from typing import Callable, Optional
@@ -36,6 +40,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.runtime import ThreadFarmExecutor
 from repro.serve.sampling import greedy
 
 
@@ -50,6 +55,7 @@ class Request:
     submitted_at: float = 0.0
     first_token_at: Optional[float] = None
     done_at: Optional[float] = None
+    error: Optional[BaseException] = None  # set if prefill failed
 
 
 def _bucket(n: int, buckets=(32, 64, 128, 256, 512, 1024, 2048, 4096)) -> int:
@@ -61,9 +67,12 @@ def _bucket(n: int, buckets=(32, 64, 128, 256, 512, 1024, 2048, 4096)) -> int:
 
 class ServeEngine:
     def __init__(self, model, params, *, max_slots: int = 8,
-                 max_len: int = 512, rules=None, sampler: Callable = None):
+                 max_len: int = 512, rules=None, sampler: Callable = None,
+                 prefill_workers: int = 4):
         self.model, self.params, self.rules = model, params, rules
         self.max_slots, self.max_len = max_slots, max_len
+        self._prefill_farm = ThreadFarmExecutor(
+            num_workers=max(1, prefill_workers))
         self.sampler = sampler or (lambda key, logits: greedy(
             logits, true_vocab=model.cfg.vocab))
         self.state = model.init_decode_state(max_slots, max_len)
@@ -87,39 +96,89 @@ class ServeEngine:
 
     def submit(self, prompt, max_new_tokens: int = 32,
                eos_id: Optional[int] = None) -> int:
-        req = Request(next(self._rid), np.asarray(prompt, np.int32),
-                      max_new_tokens, eos_id)
+        prompt = np.asarray(prompt, np.int32)
+        if len(prompt) >= self.max_len:
+            # reject at the source: an oversized prompt can never decode
+            raise ValueError(
+                f"prompt length {len(prompt)} >= max_len {self.max_len}")
+        req = Request(next(self._rid), prompt, max_new_tokens, eos_id)
         req.submitted_at = time.perf_counter()
         self.queue.append(req)
         return req.rid
 
+    def _prefill_one(self, req: Request, key):
+        """One request's prefill + first token — a self-contained farm task
+        (pure device work; jitted dispatch releases the GIL, so bucketed
+        prefills for different requests overlap)."""
+        L = len(req.prompt)
+        bucket = min(_bucket(L), self.max_len)
+        toks = np.zeros((1, bucket), np.int32)
+        toks[0, :L] = req.prompt                      # right-pad into bucket
+        cache, hidden = self._prefill(self.params,
+                                      {"tokens": jnp.asarray(toks)})
+        # right-padding: cache rows beyond L hold pad garbage, but
+        # pos[slot] = L masks them out (kv_valid_len) and later decode
+        # tokens overwrite them in order.
+        logits = self.model.lm_head(self.params, hidden[:, L - 1:L],
+                                    self.rules)
+        tok = int(jax.device_get(self.sampler(key, logits[0, -1])))
+        return cache, tok
+
     def _admit(self):
-        """Fill free slots from the queue (walker ``append``)."""
+        """Fill free slots from the queue (walker ``append``).
+
+        Prefills for all admitted requests run concurrently on the thread
+        farm; state mutation (cache splice + slot bookkeeping) stays on this
+        thread, in slot order, so admission is deterministic.
+        """
+        admits: list[tuple[int, Request]] = []
         for slot in range(self.max_slots):
             if self.live[slot] or not self.queue:
                 continue
-            req = self.queue.pop(0)
-            L = len(req.prompt)
-            bucket = min(_bucket(L), self.max_len)
-            toks = np.zeros((1, bucket), np.int32)
-            toks[0, :L] = req.prompt                  # right-pad into bucket
-            cache, hidden = self._prefill(self.params,
-                                          {"tokens": jnp.asarray(toks)})
-            # right-padding: cache rows beyond L hold pad garbage, but
-            # pos[slot] = L masks them out (kv_valid_len) and later decode
-            # tokens overwrite them in order.
-            logits = self.model.lm_head(self.params, hidden[:, L - 1:L],
-                                        self.rules)
+            admits.append((slot, self.queue.pop(0)))
+        if not admits:
+            return
+        keys = []
+        for _ in admits:                    # keys drawn in slot order
             self._key, sub = jax.random.split(self._key)
-            tok = int(jax.device_get(self.sampler(sub, logits[0, -1])))
+            keys.append(sub)
+
+        def guarded(req, key):
+            # isolate failures so one bad request (e.g. prompt > max_len)
+            # cannot drop the other concurrently admitted requests
+            try:
+                return self._prefill_one(req, key)
+            except BaseException as e:                  # noqa: BLE001
+                return e
+
+        results, _ = self._prefill_farm.map_callables(
+            [functools.partial(guarded, req, key)
+             for (_, req), key in zip(admits, keys)])
+        errors = []
+        for (slot, req), res in zip(admits, results):
+            if isinstance(res, BaseException):
+                # retire the failed request with its error so clients
+                # tracking the rid see a terminal state, not a black hole
+                req.error = res
+                req.done_at = time.perf_counter()
+                self.finished.append(req)
+                errors.append((req.rid, res))
+                continue
+            cache, tok = res
             self._splice(cache, slot)
-            self.pos[slot] = L
+            self.pos[slot] = len(req.prompt)
             self.live[slot] = True
             self.slot_req[slot] = req
             self.last_token[slot] = tok
             req.first_token_at = time.perf_counter()
             req.output.append(tok)
             self.stats["prefills"] += 1
+        if errors:
+            rids = [rid for rid, _ in errors]
+            raise RuntimeError(
+                f"prefill failed for request(s) {rids} "
+                f"({len(errors)} of {len(admits)} admitted); "
+                f"each request's .error holds its exception") from errors[0][1]
 
     def _splice(self, cache, slot: int):
         """Write a (B=1) prefill cache into the batched state's slot rows."""
@@ -175,3 +234,22 @@ class ServeEngine:
             if not busy and not self.queue:
                 break
         return self.finished
+
+    # -- lifecycle -----------------------------------------------------------
+
+    def close(self):
+        """Release the prefill farm's worker threads.  The engine stays
+        usable — the pool is transparently recreated on the next admit."""
+        self._prefill_farm.shutdown()
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.close()
+
+    def __del__(self):
+        try:
+            self.close()
+        except Exception:       # interpreter teardown: best effort only
+            pass

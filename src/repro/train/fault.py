@@ -14,20 +14,39 @@ Failure model at 1000+ nodes (what each piece handles):
   resume is bit-exact because the data pipeline is a pure function of step.
 * **Stragglers**: inside one jitted SPMD step TPUs are lock-stepped, so
   stragglers only exist at host level (input stalls, separately-jitted farm
-  tasks).  ``core.functional.host_task_farm(deadline_factor=...)`` re-issues
-  tasks that exceed ``k x`` the median runtime — the classic backup-task
-  trick — and the Trainer's watchdog records steps that breach the deadline.
+  tasks).  :func:`redispatch_stragglers` runs such tasks on the runtime's
+  :class:`~repro.core.runtime.ThreadFarmExecutor`, whose idle workers
+  re-issue any task exceeding ``k x`` the median runtime (the classic
+  backup-task trick, first completion wins); the Trainer's watchdog flags
+  steps breaching the same :func:`~repro.core.runtime.straggler_deadline`.
 """
 from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Any, Optional
+from typing import Any, Callable, Optional, Sequence
 
 import jax
 import numpy as np
 
+from repro.core.functional import host_task_farm
 from repro.train import checkpoint as ckpt
+
+
+def redispatch_stragglers(tasks: Sequence[Callable[[], Any]], *,
+                          deadline_factor: float = 3.0,
+                          num_workers: int | None = None):
+    """Run host-level tasks with backup re-dispatch of stragglers.
+
+    Fault-tolerance-flavored entry point over the runtime's thread farm
+    (same machinery as :func:`repro.core.functional.host_task_farm`, with
+    re-dispatch on by default): tasks whose elapsed time exceeds
+    ``deadline_factor`` x the median runtime are re-issued once to an idle
+    worker and the first completion wins.  Returns (results, stats) with
+    ``stats['stragglers']`` listing re-issued indices.
+    """
+    return host_task_farm(tasks, num_workers=num_workers,
+                          deadline_factor=deadline_factor)
 
 
 def loss_is_bad(loss) -> bool:

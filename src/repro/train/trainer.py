@@ -1,7 +1,7 @@
 """Trainer — the paper's ``parallel_time_integration`` used as the spine of a
 production training loop.
 
-Mapping (DESIGN.md §3):
+Mapping:
 
     initialize         -> build/restore TrainState + data iterator
     do_timestep        -> the jitted train step (donated, SPMD)
@@ -21,6 +21,7 @@ from typing import Any, Callable, Iterator, Optional
 
 import jax
 
+from repro.core.runtime import straggler_deadline
 from repro.core.time_integration import parallel_time_integration
 from repro.optim.adamw import AdamWConfig
 from repro.train import checkpoint as ckpt_lib
@@ -107,11 +108,13 @@ class Trainer:
              "step_time": stats["step_time"]})
         times = [m["step_time"] for m in self.metrics_history]
         if len(times) >= 5:
-            med = sorted(times)[len(times) // 2]
-            if stats["step_time"] > self.tcfg.straggler_factor * med:
+            # same deadline rule as the thread farm's re-dispatch
+            deadline = straggler_deadline(times, self.tcfg.straggler_factor)
+            if stats["step_time"] > deadline:
                 self.stragglers.append(gstep)
                 self.log(f"[trainer] straggler step {gstep}: "
-                         f"{stats['step_time']:.3f}s vs median {med:.3f}s")
+                         f"{stats['step_time']:.3f}s vs deadline "
+                         f"{deadline:.3f}s")
         if gstep % self.tcfg.log_every == 0:
             self.log(f"[trainer] step {gstep} loss {obs['loss']:.4f} "
                      f"lr {obs.get('lr', 0):.2e} ({stats['step_time']:.3f}s)")

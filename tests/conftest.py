@@ -1,6 +1,20 @@
 """Shared fixtures.  NOTE: no XLA_FLAGS here — smoke tests and benches must
 see 1 device (the dry-run sets its own 512-device flag in its own process;
 multi-device tests spawn subprocesses)."""
+import importlib.util
+import pathlib
+import sys
+
+# Property tests use hypothesis when available (``pip install -e .[test]``);
+# otherwise fall back to the deterministic stub so collection never dies on
+# the missing import.
+if importlib.util.find_spec("hypothesis") is None:
+    _spec = importlib.util.spec_from_file_location(
+        "hypothesis", pathlib.Path(__file__).parent / "_hypothesis_stub.py")
+    _mod = importlib.util.module_from_spec(_spec)
+    _spec.loader.exec_module(_mod)
+    sys.modules["hypothesis"] = _mod
+
 import jax
 import pytest
 

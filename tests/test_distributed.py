@@ -64,7 +64,8 @@ def test_redistribute_work_across_shards():
             new_data, new_count = redistribute_work(data, count, comm)
             return new_data, new_count.reshape(1)
         x = jnp.tile(jnp.arange(cap, dtype=jnp.float32)[:, None], (8, 1))
-        f = jax.jit(jax.shard_map(per_shard, mesh=mesh,
+        from repro.core.comm import shard_map
+        f = jax.jit(shard_map(per_shard, mesh=mesh,
                     in_specs=P("data", None),
                     out_specs=(P("data", None), P("data")), check_vma=False))
         data, counts = f(x)

@@ -19,7 +19,8 @@ def test_ring_attention_matches_full_attention():
         mesh = jax.make_mesh((8,), ("sp",))
         def body(q, k, v):
             return ring_attention(q, k, v, Comm("sp"), causal=True)
-        got = jax.jit(jax.shard_map(
+        from repro.core.comm import shard_map
+        got = jax.jit(shard_map(
             body, mesh=mesh,
             in_specs=(P(None, "sp", None, None),) * 3,
             out_specs=P(None, "sp", None, None), check_vma=False))(q, k, v)

@@ -73,6 +73,50 @@ def test_engine_latency_stats(dense):
     assert r.done_at >= r.first_token_at
 
 
+def test_engine_rejects_oversized_prompt_at_submit(dense):
+    model, params = dense
+    eng = ServeEngine(model, params, max_slots=2, max_len=128)
+    with pytest.raises(ValueError, match="prompt length 200"):
+        eng.submit(list(range(200)), max_new_tokens=4)
+    assert eng.queue == []                 # nothing was enqueued
+
+
+def test_engine_bad_request_does_not_drop_concurrent_admits(dense):
+    """One failing prefill must not lose the requests admitted concurrently
+    with it (an unforeseen failure — submit()'s validation is bypassed)."""
+    import numpy as _np
+    from repro.serve.engine import Request
+    model, params = dense
+    eng = ServeEngine(model, params, max_slots=3, max_len=128)
+    eng.submit([5, 17, 33], max_new_tokens=4)
+    eng.queue.append(Request(1000, _np.arange(200, dtype=_np.int32), 4))
+    eng.submit([7, 8, 9], max_new_tokens=4)
+    with pytest.raises(RuntimeError,
+                       match=r"prefill failed for request\(s\) \[1000\]"):
+        eng.run_until_drained()
+    # the failed request is retired with its error recorded, not lost
+    failed = [r for r in eng.finished if r.error is not None]
+    assert [r.rid for r in failed] == [1000] and failed[0].done_at is not None
+    # the two good requests were admitted and can finish
+    done = eng.run_until_drained()
+    ok = sorted(r.rid for r in done if r.error is None)
+    assert ok == [0, 1]
+    assert all(len(r.output) == 4 for r in done if r.error is None)
+
+
+def test_engine_close_releases_prefill_pool(dense):
+    model, params = dense
+    with ServeEngine(model, params, max_slots=2, max_len=128) as eng:
+        eng.submit([1, 2, 3], max_new_tokens=2)
+        eng.run_until_drained()
+        assert eng._prefill_farm._pool is not None
+    assert eng._prefill_farm._pool is None      # context exit shut it down
+    # engine remains usable: pool transparently recreated
+    eng.submit([4, 5], max_new_tokens=2)
+    done = eng.run_until_drained()
+    assert len(done) == 2
+
+
 def test_sampling_greedy_masks_padded_vocab():
     logits = jnp.zeros((1, 10)).at[0, 9].set(5.0)   # argmax in padded tail
     assert int(greedy(logits, true_vocab=8)[0]) < 8
