@@ -1,9 +1,19 @@
-"""Serving throughput: continuous batching vs sequential request handling.
+"""Serving throughput + the paged KV-cache scaling win.
 
-The engine's win is slot
-reuse: decode ticks amortize across live requests.  Reported: tokens/s with
-max_slots=1 (sequential) vs max_slots=4 (continuous batching) on the smoke
-dense model — the ratio is the batching speedup the slot machinery delivers.
+Three comparisons on the smoke dense model:
+
+1. Continuous batching vs sequential request handling (dense path): the
+   tick ratio is the real batching speedup on memory-bound accelerators.
+2. **Equal-KV-budget slot scaling**: with the same token budget of KV
+   memory, the dense engine reserves ``max_slots x max_len`` up front and
+   caps out, while the paged engine admits 2x the concurrent slots and its
+   pages-in-use high-water mark stays far below the dense reservation.
+3. **Chunked prefill anti-stall**: while a long prompt prefills in chunks,
+   an already-live request keeps emitting a token every tick.
+
+``run`` returns a machine-readable payload that ``benchmarks.run`` writes
+to ``results/BENCH_serve.json`` so the perf trajectory is tracked across
+PRs.
 """
 from __future__ import annotations
 
@@ -16,33 +26,105 @@ from repro.configs import smoke_config
 from repro.models.api import build_model
 from repro.serve import ServeEngine
 
+MAX_LEN = 128
+PAGE = 16
 
-def _throughput(model, params, slots: int, n_req: int = 8,
-                max_new: int = 16):
-    eng = ServeEngine(model, params, max_slots=slots, max_len=128)
+
+def _drain_tracking_peak(eng):
+    """run_until_drained, recording the peak number of live slots."""
+    peak = 0
+    for _ in range(10_000):
+        busy = eng.tick()
+        peak = max(peak, len(eng.sched.live_slots()))
+        if not busy and not eng.sched.has_work():
+            break
+    return peak
+
+
+def _throughput(model, params, slots: int, *, paged: bool, n_req: int = 8,
+                max_new: int = 16, num_pages=None):
+    eng = ServeEngine(model, params, max_slots=slots, max_len=MAX_LEN,
+                      paged=paged, page_size=PAGE, num_pages=num_pages,
+                      prefill_chunk=32)
     rng = np.random.default_rng(0)
     for _ in range(n_req):
         eng.submit(rng.integers(0, model.cfg.vocab, 8), max_new_tokens=max_new)
     t0 = time.perf_counter()
-    done = eng.run_until_drained()
+    peak = _drain_tracking_peak(eng)
     dt = time.perf_counter() - t0
-    toks = sum(len(r.output) for r in done)
-    return toks / dt, eng.stats["ticks"], toks
+    toks = sum(len(r.output) for r in eng.finished)
+    eng.close()
+    return {"tok_per_s": toks / dt, "ticks": eng.stats["ticks"],
+            "tokens": toks, "peak_slots": peak,
+            "pages_high_water": eng.pool.high_water if eng.pool else None,
+            "preemptions": eng.stats["preemptions"]}
+
+
+def _prefill_stall(model, params, *, paged: bool):
+    """Tokens a live request emits during a 96-token prompt's prefill."""
+    eng = ServeEngine(model, params, max_slots=2, max_len=MAX_LEN,
+                      paged=paged, page_size=PAGE, prefill_chunk=16,
+                      chunks_per_tick=1)
+    eng.submit([3, 1, 4], max_new_tokens=64)
+    eng.run_until_drained(max_ticks=2)          # short request is live
+    short = eng.sched.slot_req[0]
+    eng.submit(list(range(1, 97)), max_new_tokens=2)
+    long_req = eng.queue[-1]
+    n0 = len(short.output)
+    ticks = 0
+    while not long_req.output and ticks < 30:
+        eng.tick()
+        ticks += 1
+    emitted = len(short.output) - n0
+    eng.close()
+    return {"ticks_to_long_first_token": ticks,
+            "short_tokens_during_prefill": emitted}
 
 
 def run(csv_rows: list):
     cfg = smoke_config("qwen2-7b").replace(remat="none")
     model = build_model(cfg)
     params = model.init(jax.random.PRNGKey(0))
-    _throughput(model, params, 2, n_req=2, max_new=4)   # warm compiles
+    _throughput(model, params, 2, paged=False, n_req=2, max_new=4)  # warm
+    _throughput(model, params, 2, paged=True, n_req=2, max_new=4,
+                num_pages=2 * MAX_LEN // PAGE)
 
-    seq, seq_ticks, toks = _throughput(model, params, slots=1)
-    cb, cb_ticks, _ = _throughput(model, params, slots=4)
-    csv_rows.append(f"serve_sequential,{1e6/seq:.0f},tok_per_s={seq:.1f};"
-                    f"decode_ticks={seq_ticks}")
+    seq = _throughput(model, params, 1, paged=False)
+    cb = _throughput(model, params, 4, paged=False)
+    csv_rows.append(
+        f"serve_sequential,{1e6/seq['tok_per_s']:.0f},"
+        f"tok_per_s={seq['tok_per_s']:.1f};decode_ticks={seq['ticks']}")
     # On memory-bound accelerators a decode tick's cost is ~flat in batch, so
     # the tick ratio is the real continuous-batching speedup; CPU tok/s is
     # compute-bound and does not show it.
-    csv_rows.append(f"serve_continuous4,{1e6/cb:.0f},tok_per_s={cb:.1f};"
-                    f"decode_ticks={cb_ticks};"
-                    f"ticks_saved={seq_ticks/cb_ticks:.2f}x")
+    csv_rows.append(
+        f"serve_continuous4,{1e6/cb['tok_per_s']:.0f},"
+        f"tok_per_s={cb['tok_per_s']:.1f};decode_ticks={cb['ticks']};"
+        f"ticks_saved={seq['ticks']/cb['ticks']:.2f}x")
+
+    # equal KV budget: 4 dense slots' worth of pages, 2x the slots paged
+    budget_tokens = 4 * MAX_LEN
+    dense = _throughput(model, params, 4, paged=False)
+    paged = _throughput(model, params, 8, paged=True,
+                        num_pages=budget_tokens // PAGE)
+    csv_rows.append(
+        f"serve_paged8_equal_budget,{1e6/paged['tok_per_s']:.0f},"
+        f"tok_per_s={paged['tok_per_s']:.1f};decode_ticks={paged['ticks']};"
+        f"peak_slots={paged['peak_slots']}vs{dense['peak_slots']};"
+        f"pages_hw={paged['pages_high_water']}"
+        f"of{budget_tokens // PAGE}")
+
+    stall = _prefill_stall(model, params, paged=True)
+    csv_rows.append(
+        f"serve_chunked_prefill,{stall['ticks_to_long_first_token']},"
+        f"short_tokens_during_96tok_prefill="
+        f"{stall['short_tokens_during_prefill']}")
+
+    return {
+        "sequential": seq, "continuous4": cb,
+        "dense_equal_budget": dense, "paged_equal_budget": paged,
+        "dense_reserved_pages": budget_tokens // PAGE,
+        "budget_tokens": budget_tokens,
+        "chunked_prefill": stall,
+        "slot_scaling_x": paged["peak_slots"] / max(dense["peak_slots"], 1),
+    }

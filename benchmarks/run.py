@@ -1,6 +1,9 @@
 """Benchmark harness — one module per paper table/figure + framework benches.
 
 Prints ``name,us_per_call,derived`` CSV rows (and tees to results/bench.csv).
+A module's ``run`` may also return a JSON-serializable payload, written to
+``results/BENCH_<name>.json`` — machine-readable perf tracked across PRs
+(the CI uploads them as artifacts).
 
   bench_mcmc     paper Table 1 (task-farm MCMC)
   bench_dmc      paper Table 2 (DMC + dynamic load balancing, scaled-size)
@@ -8,8 +11,10 @@ Prints ``name,us_per_call,derived`` CSV rows (and tees to results/bench.csv).
   bench_overhead paper §1/§5 (function-centric layer overhead)
   bench_runtime  executor runtime (farm speedup + cross-tier parity)
   bench_kernels  Pallas kernel suite (traffic-saving ratios)
-  bench_serve    continuous-batching engine throughput
+  bench_serve    paged continuous-batching engine (tokens/s, slot scaling,
+                 pages-in-use high-water, chunked-prefill anti-stall)
 """
+import json
 import os
 import sys
 import traceback
@@ -24,19 +29,32 @@ def main() -> None:
             "overhead": bench_overhead, "runtime": bench_runtime,
             "kernels": bench_kernels, "serve": bench_serve}
     rows = ["name,us_per_call,derived"]
+    payloads: dict[str, object] = {}
+    failed: list[str] = []
     for name, mod in mods.items():
         if only and name != only:
             continue
         try:
-            mod.run(rows)
+            payload = mod.run(rows)
+            if payload is not None:
+                payloads[name] = payload
         except Exception as e:
             traceback.print_exc()
+            failed.append(name)
             rows.append(f"{name},FAILED,{type(e).__name__}: {e}")
     out = "\n".join(rows)
     print(out)
     os.makedirs("results", exist_ok=True)
     with open("results/bench.csv", "w") as f:
         f.write(out + "\n")
+    for name, payload in payloads.items():
+        path = f"results/BENCH_{name}.json"
+        with open(path, "w") as f:
+            json.dump(payload, f, indent=2, sort_keys=True)
+        print(f"[bench] wrote {path}")
+    if only and failed:
+        # a specifically requested bench must not fail green (CI gates on it)
+        sys.exit(1)
 
 
 if __name__ == '__main__':

@@ -12,6 +12,7 @@ import functools
 import jax
 
 from repro.kernels import flash_attention as _fa
+from repro.kernels import paged_attention as _pa
 from repro.kernels import rmsnorm as _rn
 from repro.kernels import rwkv6_scan as _rw
 from repro.kernels import ssd_scan as _ssd
@@ -27,6 +28,12 @@ def flash_attention(q, k, v, *, causal: bool = True, window=None,
                     q_blk: int = 256, kv_blk: int = 256):
     return _fa.flash_attention(q, k, v, causal=causal, window=window,
                                q_blk=q_blk, kv_blk=kv_blk,
+                               interpret=_interpret())
+
+
+@jax.jit
+def paged_attention(q, k_pages, v_pages, tables, lengths):
+    return _pa.paged_attention(q, k_pages, v_pages, tables, lengths,
                                interpret=_interpret())
 
 

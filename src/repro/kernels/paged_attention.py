@@ -1,0 +1,117 @@
+"""Paged decode attention: gather K/V through a page table, on-chip.
+
+One decode query per sequence attends to a KV prefix that lives in
+non-contiguous fixed-size pages (:mod:`repro.serve.pages`).  Instead of
+materializing the gathered (B, S, Hkv, D) cache in HBM — the jnp fallback in
+:mod:`repro.models.attention` — the kernel streams each sequence's pages
+HBM->VMEM directly via a scalar-prefetched page table: BlockSpec index maps
+read ``table[b, p]`` to pick the page, so the DMA engine performs the gather
+and the online-softmax state (acc, m, l) never leaves VMEM scratch.
+
+Grid = (B, Hkv, pages_per_seq) with pages innermost: one (G, page_size)
+score tile per step (G = grouped q heads per KV head).  Pages past a
+sequence's length are skipped with ``pl.when`` — cost is O(lengths), not
+O(pages_per_seq), which is the whole point of paging.  Dead slots
+(length 0) produce zero outputs.
+
+``lengths`` counts valid KV entries *including* the current token (whose
+K/V must be written to its page before the call); causality is implicit —
+every cached position is <= the query position.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+import jax.experimental.pallas.tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _paged_kernel(tbl_ref, len_ref, q_ref, k_ref, v_ref, o_ref,
+                  acc_ref, m_ref, l_ref, *, scale: float, page_size: int,
+                  n_pages: int):
+    b = pl.program_id(0)
+    p = pl.program_id(2)
+    length = len_ref[b]
+
+    @pl.when(p == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    @pl.when(p * page_size < length)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32) * scale       # (G, D)
+        k = k_ref[0, :, 0, :].astype(jnp.float32)         # (page_size, D)
+        v = v_ref[0, :, 0, :].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+        k_pos = p * page_size + jax.lax.broadcasted_iota(
+            jnp.int32, s.shape, 1)
+        s = jnp.where(k_pos < length, s, NEG_INF)
+
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=-1))
+        pr = jnp.exp(s - m_new[:, None])
+        corr = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * corr + pr.sum(axis=-1)
+        acc_ref[...] = (acc_ref[...] * corr[:, None]
+                        + jax.lax.dot_general(pr, v, (((1,), (0,)), ((), ())),
+                                              preferred_element_type=jnp.float32))
+        m_ref[...] = m_new
+
+    @pl.when(p == n_pages - 1)
+    def _finish():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0, 0] = (acc_ref[...] / l[:, None]).astype(o_ref.dtype)
+
+
+def paged_attention(q, k_pages, v_pages, tables, lengths, *,
+                    interpret: bool = False):
+    """q: (B, Hq, D); k_pages/v_pages: (N, page_size, Hkv, D);
+    tables: (B, P) int32 page ids; lengths: (B,) int32 -> (B, Hq, D)."""
+    B, Hq, D = q.shape
+    N, page_size, Hkv, _ = k_pages.shape
+    P = tables.shape[1]
+    G = Hq // Hkv
+    assert Hq % Hkv == 0, (Hq, Hkv)
+    scale = D ** -0.5
+
+    qg = q.reshape(B, Hkv, G, D)
+    tables = tables.astype(jnp.int32)
+    lengths = lengths.astype(jnp.int32)
+
+    def q_index(b, h, p, tbl, ln):
+        return (b, h, 0, 0)
+
+    def kv_index(b, h, p, tbl, ln):
+        return (tbl[b, p], 0, h, 0)
+
+    kernel = functools.partial(_paged_kernel, scale=scale,
+                               page_size=page_size, n_pages=P)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(B, Hkv, P),
+        in_specs=[
+            pl.BlockSpec((1, 1, G, D), q_index),
+            pl.BlockSpec((1, page_size, 1, D), kv_index),
+            pl.BlockSpec((1, page_size, 1, D), kv_index),
+        ],
+        out_specs=pl.BlockSpec((1, 1, G, D), q_index),
+        scratch_shapes=[
+            pltpu.VMEM((G, D), jnp.float32),
+            pltpu.VMEM((G,), jnp.float32),
+            pltpu.VMEM((G,), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, Hkv, G, D), q.dtype),
+        interpret=interpret,
+    )(tables, lengths, qg, k_pages, v_pages)
+    return out.reshape(B, Hq, D)

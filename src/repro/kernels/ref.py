@@ -38,6 +38,29 @@ def flash_attention(q, k, v, *, causal: bool = True, window=None):
     return o.reshape(B, Sq, Hq, D).astype(q.dtype)
 
 
+def paged_attention(q, k_pages, v_pages, tables, lengths):
+    """Paged decode attention by explicit gather (the kernel's ground truth).
+
+    q: (B, Hq, D); k_pages/v_pages: (N, page_size, Hkv, D);
+    tables: (B, P) int32; lengths: (B,) int32 valid-KV counts (including the
+    current token).  Returns (B, Hq, D); length-0 rows are zero.
+    """
+    B, Hq, D = q.shape
+    N, ps, Hkv, _ = k_pages.shape
+    P = tables.shape[1]
+    G = Hq // Hkv
+    k = k_pages[tables].reshape(B, P * ps, Hkv, D).astype(jnp.float32)
+    v = v_pages[tables].reshape(B, P * ps, Hkv, D).astype(jnp.float32)
+    qg = q.reshape(B, Hkv, G, D).astype(jnp.float32) * D ** -0.5
+    s = jnp.einsum("bhgd,bkhd->bhgk", qg, k)
+    ok = jnp.arange(P * ps)[None, :] < lengths[:, None]          # (B, Sk)
+    s = jnp.where(ok[:, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgk,bkhd->bhgd", p, v)
+    o = jnp.where((lengths > 0)[:, None, None, None], o, 0.0)
+    return o.reshape(B, Hq, D).astype(q.dtype)
+
+
 def rwkv6_scan(r, k, v, w, u, state0=None):
     """RWKV-6 time mixing recurrence.
 

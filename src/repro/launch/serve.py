@@ -24,6 +24,12 @@ def main():
     ap.add_argument("--max-new", type=int, default=24)
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--max-len", type=int, default=256)
+    ap.add_argument("--dense", action="store_true",
+                    help="force the dense per-slot cache path")
+    ap.add_argument("--page-size", type=int, default=16)
+    ap.add_argument("--num-pages", type=int, default=None,
+                    help="pool size (default: dense-equivalent budget)")
+    ap.add_argument("--prefill-chunk", type=int, default=64)
     args = ap.parse_args()
 
     cfg = smoke_config(args.arch) if args.smoke else get_config(args.arch)
@@ -33,7 +39,10 @@ def main():
     model = build_model(cfg)
     params = model.init(jax.random.PRNGKey(0))
     eng = ServeEngine(model, params, max_slots=args.slots,
-                      max_len=args.max_len)
+                      max_len=args.max_len,
+                      paged=False if args.dense else None,
+                      page_size=args.page_size, num_pages=args.num_pages,
+                      prefill_chunk=args.prefill_chunk)
 
     rng = np.random.default_rng(0)
     t0 = time.perf_counter()
@@ -44,8 +53,13 @@ def main():
     dt = time.perf_counter() - t0
     toks = sum(len(r.output) for r in done)
     ttfts = [r.first_token_at - r.submitted_at for r in done]
+    mode = "dense" if not eng.paged else (
+        f"paged(ps={eng.pool.page_size}, "
+        f"hw={eng.pool.high_water}/{eng.pool.num_pages} pages)")
     print(f"[serve] {len(done)} requests, {toks} tokens in {dt:.2f}s "
           f"({toks/dt:.1f} tok/s); ticks={eng.stats['ticks']} "
+          f"chunks={eng.stats['chunk_prefills']} "
+          f"preempt={eng.stats['preemptions']} [{mode}] "
           f"mean TTFT {np.mean(ttfts)*1e3:.0f}ms")
 
 

@@ -107,6 +107,44 @@ class Model:
         """tokens (B,1) -> (new_state, logits (B,1,V))."""
         raise NotImplementedError
 
+    # -- paged serving (stacked-cache families only) -------------------------
+    # Recurrent-state families (rwkv6, mamba2/zamba) keep their O(1)
+    # per-slot state path: there is no per-token KV to page.
+
+    def supports_paged_decode(self) -> bool:
+        return False
+
+    def paged_leaf_specs(self):
+        """Pytree of :class:`repro.serve.pages.PagedLeafSpec` describing the
+        per-token KV leaves around the pool's (num_pages, page_size) axes."""
+        raise NotImplementedError(f"{self.cfg.family} has no paged KV cache")
+
+    def paged_state_specs(self, num_pages: int, page_size: int):
+        """Pytree of ArraySpec matching the PagePool storage (incl. the
+        trash page at index ``num_pages``).  Derived from
+        :meth:`paged_leaf_specs` so the pool layout has one source of
+        truth; unsupported families raise through it."""
+        from repro.serve import pages as PG
+
+        def leaf(s):
+            shape = s.storage_shape(num_pages + PG.N_TRASH, page_size)
+            return ArraySpec(shape, s.dtype, P(*([None] * len(shape))))
+
+        return jax.tree_util.tree_map(
+            leaf, self.paged_leaf_specs(),
+            is_leaf=lambda x: isinstance(x, PG.PagedLeafSpec))
+
+    def paged_prefill_chunk(self, params, storage, table_row, pages_chunk,
+                            start, tokens, rules):
+        """Prefill tokens (1, C) at positions [start, start+C) into pages."""
+        raise NotImplementedError(f"{self.cfg.family} has no paged KV cache")
+
+    def paged_decode_step(self, params, storage, tables, lengths, tokens,
+                          write_pages, write_offs, rules, *,
+                          use_pallas: bool = False):
+        """tokens (B,1) -> (new_storage, logits (B,1,V)) through the pool."""
+        raise NotImplementedError(f"{self.cfg.family} has no paged KV cache")
+
     def lm_head(self, params, hidden, rules):
         return T.lm_logits(params, hidden, self.cfg, rules)
 
@@ -159,6 +197,34 @@ class DecoderLM(Model):
 
     def decode_step(self, params, state, tokens, pos, rules):
         return T.decode_step(params, self.cfg, rules, state, tokens, pos)
+
+    # -- paged serving -------------------------------------------------------
+    # Shared by dense, MoE and (token-prompt) VLM: the stacked (L, ·, ·,
+    # Hkv, D) cache pages identically; only gemma3-style mixed window/ring
+    # caches stay on the dense path.
+
+    def supports_paged_decode(self) -> bool:
+        return not T.uses_window_cache(self.cfg)
+
+    def paged_leaf_specs(self):
+        from repro.serve.pages import PagedLeafSpec
+        cfg = self.cfg
+        leaf = PagedLeafSpec((cfg.n_layers,),
+                             (cfg.padded_kv_heads, cfg.head_dim),
+                             jnp.dtype(cfg.dtype))
+        return {"k": leaf, "v": leaf}
+
+    def paged_prefill_chunk(self, params, storage, table_row, pages_chunk,
+                            start, tokens, rules):
+        return T.paged_prefill_chunk(params, self.cfg, rules, storage,
+                                     table_row, pages_chunk, start, tokens)
+
+    def paged_decode_step(self, params, storage, tables, lengths, tokens,
+                          write_pages, write_offs, rules, *,
+                          use_pallas: bool = False):
+        return T.paged_decode_step(params, self.cfg, rules, storage, tables,
+                                   lengths, tokens, write_pages, write_offs,
+                                   use_pallas=use_pallas)
 
 
 class VLM(DecoderLM):

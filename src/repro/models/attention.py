@@ -104,6 +104,31 @@ def _mask_bias(q_pos, k_pos, *, causal: bool, window: Optional[int],
     return mask
 
 
+def paged_decode_attention(q, k_pages, v_pages, tables, lengths, *,
+                           use_pallas: bool = False):
+    """Decode attention against paged KV storage (one query per sequence).
+
+    q: (B, 1, Hq, D); k_pages/v_pages: (N, page_size, Hkv, D);
+    tables: (B, P) int32 page ids; lengths: (B,) int32 valid-KV counts
+    *including* the current token (already written to its page).
+
+    ``use_pallas`` routes through the Pallas kernel
+    (:mod:`repro.kernels.paged_attention`), which gathers pages on-chip via
+    scalar-prefetched index maps; the fallback gathers the pages with jnp
+    advanced indexing and reuses :func:`gqa_attention`'s masked path —
+    identical math, HBM-materialized gather.
+    """
+    if use_pallas:
+        from repro.kernels import ops as kops
+        return kops.paged_attention(q[:, 0], k_pages, v_pages, tables,
+                                    lengths)[:, None]
+    from repro.serve import pages as PG
+    k = PG.gather_pages(k_pages, tables)            # (B, P*page_size, Hkv, D)
+    v = PG.gather_pages(v_pages, tables)
+    return gqa_attention(q, k, v, causal=True, q_offset=lengths - 1,
+                         kv_valid_len=lengths, kv_chunk=max(k.shape[1], 1))
+
+
 def gqa_attention(q, k, v, *, causal: bool = True,
                   window: Optional[int] = None,
                   q_offset=0,

@@ -323,6 +323,117 @@ def prefill(params, cfg, rules, tokens=None, inputs_embeds=None,
             "k_loc": jnp.pad(k_loc, pad), "v_loc": jnp.pad(v_loc, pad)}, x
 
 
+# ---------------------------------------------------------------------------
+# Serving: paged KV cache (pool storage instead of per-slot dense buffers)
+# ---------------------------------------------------------------------------
+
+def _paged_block(p, x, cfg, rules, *, positions, k_pages, v_pages, tables,
+                 q_offset, kv_valid, write, use_pallas=False):
+    """One decoder block against paged KV storage (per-layer page slices).
+
+    ``write(sk, sv, k, v) -> (sk, sv)`` commits the fresh K/V into pages —
+    a whole-chunk scatter during prefill, a per-slot token scatter during
+    decode — so this block stays agnostic of which phase it runs in.
+    """
+    from repro.serve import pages as PG
+
+    h = L.rmsnorm(p["ln1"], x, use_pallas=cfg.use_pallas)
+    q, k, v = A.qkv_project(p["attn"], h, cfg, positions, rules=rules)
+    k_pages, v_pages = write(k_pages, v_pages, k, v)
+    if use_pallas and q.shape[1] == 1:
+        o = A.paged_decode_attention(q, k_pages, v_pages, tables, kv_valid,
+                                     use_pallas=True)
+    else:
+        kg = PG.gather_pages(k_pages, tables)
+        vg = PG.gather_pages(v_pages, tables)
+        o = A.gqa_attention(q, kg, vg, causal=True, q_offset=q_offset,
+                            kv_valid_len=kv_valid,
+                            kv_chunk=max(kg.shape[1], 1))
+    x = x + A.out_project(p["attn"], o)
+
+    h = L.rmsnorm(p["ln2"], x, use_pallas=cfg.use_pallas)
+    if cfg.n_experts:
+        y, _ = M.moe_apply(p["moe"], h, cfg, rules)
+        if cfg.dense_residual:
+            y = y + L.mlp(p["mlp"], h)
+    else:
+        y = L.mlp(p["mlp"], h)
+    return x + y, k_pages, v_pages
+
+
+def paged_prefill_chunk(params, cfg, rules, storage, table_row, pages_chunk,
+                        start, tokens):
+    """Prefill one page-aligned prompt chunk into paged storage.
+
+    storage: {"k","v"} of (L, N, page_size, Hkv, D);  table_row: (P,) the
+    slot's page table;  pages_chunk: (C // page_size,) pages covering
+    positions [start, start + C);  tokens: (1, C) (right-padded — the
+    validity length masks pad garbage, exactly like bucketed dense prefill).
+    Returns (storage, hidden (1, C, d)).  Chunks attend causally to every
+    previously prefilled page, which is what lets long prompts prefill
+    incrementally between decode ticks.
+    """
+    from repro.serve import pages as PG
+    assert not uses_window_cache(cfg), "paged decode is global-attention only"
+    page_size = storage["k"].shape[2]
+    x = embed_tokens(params, tokens, cfg, rules)
+    C = x.shape[1]
+    positions = start + jnp.arange(C)
+    tables = table_row[None]                                    # (1, P)
+
+    def write(sk, sv, k, v):
+        sk = PG.scatter_chunk(sk, pages_chunk, k[0], page_size=page_size)
+        sv = PG.scatter_chunk(sv, pages_chunk, v[0], page_size=page_size)
+        return sk, sv
+
+    def body(x, xs):
+        p, sk, sv = xs
+        x, sk, sv = _paged_block(p, x, cfg, rules, positions=positions,
+                                 k_pages=sk, v_pages=sv, tables=tables,
+                                 q_offset=start, kv_valid=start + C,
+                                 write=write)
+        return x, (sk, sv)
+
+    x, (ks, vs) = jax.lax.scan(body, x, (params["blocks"], storage["k"],
+                                         storage["v"]))
+    x = L.rmsnorm(params["final_norm"], x, use_pallas=cfg.use_pallas)
+    return {"k": ks, "v": vs}, x
+
+
+def paged_decode_step(params, cfg, rules, storage, tables, lengths, tokens,
+                      write_pages, write_offs, use_pallas=False):
+    """One token for every slot against paged storage.
+
+    tokens: (B, 1);  tables: (B, P);  lengths: (B,) tokens already cached
+    (= the current token's position);  write_pages/write_offs: (B,) where
+    each slot's new K/V lands (dead slots point at the pool's trash page).
+    Returns (storage, logits (B, 1, V)).
+    """
+    from repro.serve import pages as PG
+    assert not uses_window_cache(cfg), "paged decode is global-attention only"
+    x = embed_tokens(params, tokens, cfg, rules)
+    positions = lengths[:, None]                                # (B, 1)
+
+    def write(sk, sv, k, v):
+        sk = PG.scatter_token(sk, write_pages, write_offs, k[:, 0])
+        sv = PG.scatter_token(sv, write_pages, write_offs, v[:, 0])
+        return sk, sv
+
+    def body(x, xs):
+        p, sk, sv = xs
+        x, sk, sv = _paged_block(p, x, cfg, rules, positions=positions,
+                                 k_pages=sk, v_pages=sv, tables=tables,
+                                 q_offset=lengths, kv_valid=lengths + 1,
+                                 write=write, use_pallas=use_pallas)
+        return x, (sk, sv)
+
+    x, (ks, vs) = jax.lax.scan(body, x, (params["blocks"], storage["k"],
+                                         storage["v"]))
+    x = L.rmsnorm(params["final_norm"], x, use_pallas=cfg.use_pallas)
+    logits = lm_logits(params, x, cfg, rules)
+    return {"k": ks, "v": vs}, logits
+
+
 def _window_decode_step(params, cfg, rules, cache, tokens, pos):
     """Decode with mixed caches: full KV for global layers, ring buffers of
     size W for sliding-window layers (aligned decode only: scalar ``pos``)."""

@@ -1,2 +1,5 @@
-from repro.serve.sampling import greedy, sample_top_k
+from repro.serve.pages import PagePool, PagedLeafSpec
+from repro.serve.sampling import (greedy, sample_temperature, sample_top_k,
+                                  sample_top_p)
+from repro.serve.scheduler import Scheduler
 from repro.serve.engine import ServeEngine, Request

@@ -1,32 +1,40 @@
-"""Continuous-batching serving engine.
+"""Continuous-batching serving engine over a paged KV cache.
 
-This is the paper's §3.2 *dynamic population* pattern applied to inference:
-decode **slots** are the processors' capacity, **requests** are walkers that
-enter (prefill), live (decode steps), and leave (EOS / length) — the
-engine's admission loop is ``do_timestep`` plus the append/delete walker
-operations, and the host-side queue bookkeeping is the ``finalize_timestep``
-analogue.
+This is the paper's §3.2 *dynamic population* pattern applied to inference
+twice over: requests are walkers that enter (prefill), live (decode steps),
+and leave (EOS / length), and — since this engine went paged — **memory** is
+a population too: fixed-size KV pages are allocated as requests enter and
+grow, and freed as they leave, so the device footprint is ``pages_in_use``
+instead of ``max_slots x max_len``.
 
-Mechanics:
+Layering (see README "Serving architecture"):
 
-* One fixed-capacity batched decode state (``B = max_slots``) lives on
-  device; slots are admitted/retired with masked writes (static shapes — the
-  TPU constraint that rules out Python list surgery on device data).
-* Prefill runs per request (shape-bucketed to limit recompilation) through
-  the :class:`repro.core.runtime.ThreadFarmExecutor`, so prefills for
-  different admitted requests overlap on the host instead of running
-  one-by-one; each resulting cache is spliced into the slot's rows of the
-  batched cache in deterministic slot order.
-* Every engine tick decodes ONE token for ALL live slots in a single SPMD
-  step with **ragged positions** — slot i attends to its own ``pos[i]``-long
-  prefix (the per-batch kv_valid_len path in :mod:`repro.models.attention`).
-* Retired slots are immediately refillable: walkers deleted, capacity
-  reclaimed — the population stays balanced exactly like the DMC rebalancer
-  keeps walker counts balanced.
+* :mod:`repro.serve.pages`   — `PagePool` storage + pure scatter/gather
+  device ops; model-agnostic (parameterized by each model's cache leaf
+  specs).
+* :mod:`repro.serve.scheduler` — host-side policy: FIFO admission with
+  all-or-nothing page reservation, **chunked prefill** (long prompts
+  prefill in page-aligned chunks interleaved with decode ticks, so one 2k
+  prompt never stalls token emission for live slots), and preemption of
+  the youngest request when the pool runs dry (recompute-style: generated
+  tokens are re-prefilled on re-admission, preserving greedy streams).
+* this module — pure execution: jitted device calls driven by the
+  scheduler's plan.  ``paged_decode_step`` writes each slot's token K/V
+  through (page, offset) targets and attends through the page table
+  (Pallas kernel :mod:`repro.kernels.paged_attention` or jnp gather
+  fallback); dead slots write to the pool's trash page so the SPMD tick
+  keeps static shapes.
 
-The engine is family-generic for models whose decode state has the batch on
-a known axis (axis 1 for the stacked dense/MoE/VLM caches; declared by
-``state_batch_axes``).
+Families whose decode state is per-token KV (dense / MoE / VLM stacked
+caches) run paged; recurrent-state families (rwkv6, mamba2/zamba) and
+mixed window/ring caches (gemma3) keep the dense per-slot path — their
+state is O(1) or ring-shaped, so there is nothing to page.  Both paths
+share the scheduler; the dense path prefills whole prompts concurrently on
+the :class:`repro.core.runtime.ThreadFarmExecutor`.
+
+A failed prefill retires its request with ``req.error`` set and never
+aborts the tick (pass ``strict=True`` to re-raise after the tick's healthy
+work is committed).
 """
 from __future__ import annotations
 
@@ -41,7 +49,10 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.runtime import ThreadFarmExecutor
+from repro.serve import pages as PG
+from repro.serve.pages import PagePool
 from repro.serve.sampling import greedy
+from repro.serve.scheduler import Scheduler
 
 
 @dataclasses.dataclass
@@ -50,6 +61,7 @@ class Request:
     prompt: np.ndarray                     # (prompt_len,) int32
     max_new_tokens: int = 32
     eos_id: Optional[int] = None
+    sampler: Optional[Callable] = None     # per-request (key, logits) -> tok
     # filled by the engine:
     output: list = dataclasses.field(default_factory=list)
     submitted_at: float = 0.0
@@ -68,170 +80,314 @@ def _bucket(n: int, buckets=(32, 64, 128, 256, 512, 1024, 2048, 4096)) -> int:
 class ServeEngine:
     def __init__(self, model, params, *, max_slots: int = 8,
                  max_len: int = 512, rules=None, sampler: Callable = None,
-                 prefill_workers: int = 4):
+                 prefill_workers: int = 4, paged: Optional[bool] = None,
+                 page_size: int = 16, num_pages: Optional[int] = None,
+                 prefill_chunk: int = 64, chunks_per_tick: int = 2,
+                 strict: bool = False, use_pallas_attention: bool = False):
         self.model, self.params, self.rules = model, params, rules
         self.max_slots, self.max_len = max_slots, max_len
+        self.strict = strict
+        if paged is None:
+            paged = model.supports_paged_decode()
+        elif paged and not model.supports_paged_decode():
+            raise ValueError(
+                f"{model.cfg.name} ({model.cfg.family}) has no paged KV "
+                "cache; construct with paged=False")
+        self.paged = bool(paged)
         self._prefill_farm = ThreadFarmExecutor(
             num_workers=max(1, prefill_workers))
         self.sampler = sampler or (lambda key, logits: greedy(
             logits, true_vocab=model.cfg.vocab))
-        self.state = model.init_decode_state(max_slots, max_len)
-        self.pos = np.zeros(max_slots, np.int32)        # per-slot lengths
-        self.live = np.zeros(max_slots, bool)
-        self.slot_req: list[Optional[Request]] = [None] * max_slots
         self.last_token = np.zeros(max_slots, np.int32)
-        self.queue: list[Request] = []
         self.finished: list[Request] = []
         self._rid = itertools.count()
         self._key = jax.random.PRNGKey(0)
-        self.stats = {"ticks": 0, "tokens": 0, "prefills": 0}
+        self.stats = {"ticks": 0, "tokens": 0, "prefills": 0,
+                      "chunk_prefills": 0, "preemptions": 0}
 
-        self._decode = jax.jit(
-            lambda p, s, t, pos: model.decode_step(p, s, t, pos, rules))
-        self._prefill = jax.jit(
-            lambda p, b: model.prefill(p, b, rules, max_len),
-            static_argnames=())
+        # donate the state/storage argument so XLA updates the KV buffers in
+        # place (no full-pool copy per tick); CPU has no donation support
+        # and would only warn
+        donate = () if jax.default_backend() == "cpu" else (1,)
+        if self.paged:
+            if num_pages is None:       # dense-equivalent budget by default
+                num_pages = -(-max_slots * max_len // page_size)
+            self.pool = PagePool(model.paged_leaf_specs(),
+                                 num_pages=num_pages, page_size=page_size)
+            self.sched = Scheduler(max_slots=max_slots, max_len=max_len,
+                                   pool=self.pool,
+                                   prefill_chunk=prefill_chunk,
+                                   chunks_per_tick=chunks_per_tick)
+            self._decode_paged = jax.jit(
+                lambda p, st, tb, ln, t, wp, wo: model.paged_decode_step(
+                    p, st, tb, ln, t, wp, wo, rules,
+                    use_pallas=use_pallas_attention),
+                donate_argnums=donate)
+            self._prefill_chunk = jax.jit(
+                lambda p, st, row, pg, s0, t: model.paged_prefill_chunk(
+                    p, st, row, pg, s0, t, rules),
+                donate_argnums=donate)
+        else:
+            self.pool = None
+            self.sched = Scheduler(max_slots=max_slots, max_len=max_len)
+            self.state = model.init_decode_state(max_slots, max_len)
+            self._decode = jax.jit(
+                lambda p, s, t, pos: model.decode_step(p, s, t, pos, rules),
+                donate_argnums=donate)
+            self._prefill = jax.jit(
+                lambda p, b: model.prefill(p, b, rules, max_len))
+
+    # -- compat views --------------------------------------------------------
+
+    @property
+    def queue(self) -> list:
+        return self.sched.queue
+
+    @property
+    def slot_req(self) -> list:
+        return self.sched.slot_req
+
+    @property
+    def storage(self):
+        """The paged KV storage pytree (lives on the pool — there is only
+        one copy; every tick writes its functional update back)."""
+        return self.pool.storage if self.pool is not None else None
 
     # -- request lifecycle ---------------------------------------------------
 
     def submit(self, prompt, max_new_tokens: int = 32,
-               eos_id: Optional[int] = None) -> int:
+               eos_id: Optional[int] = None,
+               sampler: Optional[Callable] = None) -> int:
         prompt = np.asarray(prompt, np.int32)
         if len(prompt) >= self.max_len:
             # reject at the source: an oversized prompt can never decode
             raise ValueError(
                 f"prompt length {len(prompt)} >= max_len {self.max_len}")
-        req = Request(next(self._rid), prompt, max_new_tokens, eos_id)
+        req = Request(next(self._rid), prompt, max_new_tokens, eos_id,
+                      sampler)
         req.submitted_at = time.perf_counter()
-        self.queue.append(req)
+        self.sched.submit(req)
         return req.rid
 
-    def _prefill_one(self, req: Request, key):
-        """One request's prefill + first token — a self-contained farm task
-        (pure device work; jitted dispatch releases the GIL, so bucketed
-        prefills for different requests overlap)."""
-        L = len(req.prompt)
+    # -- sampling ------------------------------------------------------------
+
+    def _sample_batch(self, logits_last, slots) -> np.ndarray:
+        """Sample every live slot: one batched draw with the engine default,
+        overridden row-wise for requests carrying their own sampler."""
+        self._key, sub = jax.random.split(self._key)
+        nxt = np.array(jax.device_get(self.sampler(sub, logits_last)))
+        for slot in slots:
+            req = self.sched.slot_req[slot]
+            if req is not None and req.sampler is not None:
+                k = jax.random.fold_in(sub, slot)
+                nxt[slot] = int(jax.device_get(req.sampler(
+                    k, logits_last[slot])))
+        return nxt
+
+    def _sample_one(self, req: Request, logits_row) -> int:
+        self._key, sub = jax.random.split(self._key)
+        fn = req.sampler or self.sampler
+        return int(jax.device_get(fn(sub, logits_row)))
+
+    # -- retirement ----------------------------------------------------------
+
+    def _retire(self, slot: int):
+        """Walker ``delete``: slot capacity (and its pages) return to the
+        pool."""
+        req = self.sched.slot_req[slot]
+        req.done_at = time.perf_counter()
+        self.finished.append(req)
+        self.sched.release(slot)
+
+    def _check_retire(self, slot: int, tok: int) -> bool:
+        req = self.sched.slot_req[slot]
+        hit_eos = req.eos_id is not None and tok == req.eos_id
+        if (hit_eos or len(req.output) >= req.max_new_tokens
+                or self.sched.lengths[slot] >= self.max_len - 1):
+            self._retire(slot)
+            return True
+        return False
+
+    def _emit_first_token(self, slot: int, tok: int):
+        """Bookkeeping for the token sampled off a completed prefill
+        (EOS / budget checked immediately — a request may finish here)."""
+        req = self.sched.slot_req[slot]
+        if req.first_token_at is None:
+            req.first_token_at = time.perf_counter()
+        req.output.append(tok)
+        self.last_token[slot] = tok
+        self.stats["tokens"] += 1
+        self.stats["prefills"] += 1
+        self._check_retire(slot, tok)
+
+    def _retire_error(self, req: Request, err: BaseException):
+        req.error = err
+        req.done_at = time.perf_counter()
+        self.finished.append(req)
+
+    def _reject_errors(self, rejects) -> list:
+        def why(r):
+            if len(r.prompt) == 0:
+                return "empty prompt has nothing to prefill"
+            return f"prompt length {len(r.prompt)} >= max_len {self.max_len}"
+        return [(r, ValueError(why(r))) for r in rejects]
+
+    def _commit_decode(self, live, logits) -> None:
+        """Sample + book one decoded token for every live slot."""
+        self.stats["ticks"] += 1
+        nxt = self._sample_batch(logits[:, -1], live)
+        for slot in live:
+            req = self.sched.slot_req[slot]
+            tok = int(nxt[slot])
+            req.output.append(tok)
+            self.last_token[slot] = tok
+            self.sched.lengths[slot] += 1
+            self.stats["tokens"] += 1
+            self._check_retire(slot, tok)
+
+    def _raise_or_record(self, errors):
+        """Errored requests are always retired with ``req.error`` set; under
+        ``strict=True`` the tick then raises (healthy work is already
+        committed)."""
+        for req, err in errors:
+            self._retire_error(req, err)
+        if errors and self.strict:
+            rids = [req.rid for req, _ in errors]
+            raise RuntimeError(
+                f"prefill failed for request(s) {rids}; each request's "
+                f".error holds its exception") from errors[0][1]
+
+    # -- paged tick ----------------------------------------------------------
+
+    def _tick_paged(self) -> bool:
+        _, rejects = self.sched.admit()
+        errors = self._reject_errors(rejects)
+
+        failed = set()
+        for job in self.sched.next_chunks():
+            if job.slot in failed:
+                continue
+            try:
+                storage, hidden = self._prefill_chunk(
+                    self.params, self.pool.storage,
+                    jnp.asarray(self.sched.table[job.slot]),
+                    jnp.asarray(job.pages), np.int32(job.start),
+                    jnp.asarray(job.tokens[None]))
+            except BaseException as e:                      # noqa: BLE001
+                failed.add(job.slot)
+                self.sched.release(job.slot)
+                errors.append((job.req, e))
+                continue
+            self.pool.storage = storage
+            self.sched.chunk_done(job)
+            self.stats["chunk_prefills"] += 1
+            if job.is_last:
+                i = job.n_valid - 1
+                logits = self.model.lm_head(self.params, hidden[:, i:i + 1],
+                                            self.rules)
+                tok = self._sample_one(job.req, logits[0, -1])
+                self._emit_first_token(job.slot, tok)
+
+        live = self.sched.live_slots()
+        if live:
+            self.sched.ensure_decode_pages()    # may preempt the youngest
+            self.stats["preemptions"] = self.sched.preemptions
+            live = self.sched.live_slots()
+        if live:
+            ps = self.pool.page_size
+            B = self.max_slots
+            wpages = np.full(B, self.pool.trash_page, np.int32)
+            woffs = np.zeros(B, np.int32)
+            lens = np.zeros(B, np.int32)
+            toks = np.zeros((B, 1), np.int32)
+            for slot in live:
+                ln = int(self.sched.lengths[slot])
+                wpages[slot] = self.sched.table[slot, ln // ps]
+                woffs[slot] = ln % ps
+                lens[slot] = ln
+                toks[slot, 0] = self.last_token[slot]
+            self.pool.storage, logits = self._decode_paged(
+                self.params, self.pool.storage,
+                jnp.asarray(self.sched.table), jnp.asarray(lens),
+                jnp.asarray(toks), jnp.asarray(wpages), jnp.asarray(woffs))
+            self._commit_decode(live, logits)
+
+        self._raise_or_record(errors)
+        return bool(live) or self.sched.has_work()
+
+    # -- dense tick (recurrent / window-cache families) ----------------------
+
+    def _prefill_one(self, job, key):
+        """One request's whole-prompt prefill + first token — a
+        self-contained farm task (pure device work; jitted dispatch releases
+        the GIL, so bucketed prefills for different requests overlap)."""
+        L = job.n_valid
         bucket = min(_bucket(L), self.max_len)
         toks = np.zeros((1, bucket), np.int32)
-        toks[0, :L] = req.prompt                      # right-pad into bucket
+        toks[0, :L] = job.tokens[:L]                 # right-pad into bucket
         cache, hidden = self._prefill(self.params,
                                       {"tokens": jnp.asarray(toks)})
         # right-padding: cache rows beyond L hold pad garbage, but
-        # pos[slot] = L masks them out (kv_valid_len) and later decode
+        # lengths[slot] = L masks them out (kv_valid_len) and later decode
         # tokens overwrite them in order.
         logits = self.model.lm_head(self.params, hidden[:, L - 1:L],
                                     self.rules)
-        tok = int(jax.device_get(self.sampler(key, logits[0, -1])))
+        fn = job.req.sampler or self.sampler
+        tok = int(jax.device_get(fn(key, logits[0, -1])))
         return cache, tok
 
-    def _admit(self):
-        """Fill free slots from the queue (walker ``append``).
+    def _tick_dense(self) -> bool:
+        _, rejects = self.sched.admit()
+        errors = self._reject_errors(rejects)
 
-        Prefills for all admitted requests run concurrently on the thread
-        farm; state mutation (cache splice + slot bookkeeping) stays on this
-        thread, in slot order, so admission is deterministic.
-        """
-        admits: list[tuple[int, Request]] = []
-        for slot in range(self.max_slots):
-            if self.live[slot] or not self.queue:
-                continue
-            admits.append((slot, self.queue.pop(0)))
-        if not admits:
-            return
-        keys = []
-        for _ in admits:                    # keys drawn in slot order
-            self._key, sub = jax.random.split(self._key)
-            keys.append(sub)
+        jobs = self.sched.next_chunks()          # dense: whole-prompt jobs
+        if jobs:
+            keys = []
+            for _ in jobs:                       # keys drawn in slot order
+                self._key, sub = jax.random.split(self._key)
+                keys.append(sub)
 
-        def guarded(req, key):
-            # isolate failures so one bad request (e.g. prompt > max_len)
-            # cannot drop the other concurrently admitted requests
-            try:
-                return self._prefill_one(req, key)
-            except BaseException as e:                  # noqa: BLE001
-                return e
+            def guarded(job, key):
+                # isolate failures so one bad request cannot drop the
+                # other concurrently admitted requests
+                try:
+                    return self._prefill_one(job, key)
+                except BaseException as e:                  # noqa: BLE001
+                    return e
 
-        results, _ = self._prefill_farm.map_callables(
-            [functools.partial(guarded, req, key)
-             for (_, req), key in zip(admits, keys)])
-        errors = []
-        for (slot, req), res in zip(admits, results):
-            if isinstance(res, BaseException):
-                # retire the failed request with its error so clients
-                # tracking the rid see a terminal state, not a black hole
-                req.error = res
-                req.done_at = time.perf_counter()
-                self.finished.append(req)
-                errors.append((req.rid, res))
-                continue
-            cache, tok = res
-            self._splice(cache, slot)
-            self.pos[slot] = len(req.prompt)
-            self.live[slot] = True
-            self.slot_req[slot] = req
-            self.last_token[slot] = tok
-            req.first_token_at = time.perf_counter()
-            req.output.append(tok)
-            self.stats["prefills"] += 1
-        if errors:
-            rids = [rid for rid, _ in errors]
-            raise RuntimeError(
-                f"prefill failed for request(s) {rids} "
-                f"({len(errors)} of {len(admits)} admitted); "
-                f"each request's .error holds its exception") from errors[0][1]
+            results, _ = self._prefill_farm.map_callables(
+                [functools.partial(guarded, job, key)
+                 for job, key in zip(jobs, keys)])
+            for job, res in zip(jobs, results):
+                if isinstance(res, BaseException):
+                    self.sched.release(job.slot)
+                    errors.append((job.req, res))
+                    continue
+                cache, tok = res
+                self.state = PG.write_slot(self.state, cache, job.slot)
+                self.sched.chunk_done(job)
+                self._emit_first_token(job.slot, tok)
 
-    def _splice(self, cache, slot: int):
-        """Write a (B=1) prefill cache into the batched state's slot rows."""
-        def splice_leaf(dst, src):
-            # dst (..., B, S, ...), src (..., 1, S', ...): batch axis = 1
-            # for every stacked family cache in this repo.
-            pad = [(0, 0)] * src.ndim
-            pad[2] = (0, dst.shape[2] - src.shape[2])
-            src = jnp.pad(src, pad)
-            return jax.lax.dynamic_update_slice_in_dim(
-                dst, src.astype(dst.dtype), slot, axis=1)
+        live = self.sched.live_slots()
+        if live:
+            toks = jnp.asarray(self.last_token.reshape(-1, 1))
+            pos = jnp.asarray(self.sched.lengths.astype(np.int32))
+            self.state, logits = self._decode(self.params, self.state, toks,
+                                              pos)
+            self._commit_decode(live, logits)
 
-        self.state = jax.tree_util.tree_map(splice_leaf, self.state, cache)
-
-    def _retire(self, slot: int):
-        """Walker ``delete``: slot capacity returns to the pool."""
-        req = self.slot_req[slot]
-        req.done_at = time.perf_counter()
-        self.finished.append(req)
-        self.live[slot] = False
-        self.slot_req[slot] = None
+        self._raise_or_record(errors)
+        return bool(live) or self.sched.has_work()
 
     # -- the tick: one SPMD decode step for all live slots --------------------
 
-    def tick(self):
-        self._admit()
-        if not self.live.any():
-            return False
-        toks = jnp.asarray(self.last_token.reshape(-1, 1))
-        pos = jnp.asarray(self.pos)
-        self.state, logits = self._decode(self.params, self.state, toks, pos)
-        self._key, sub = jax.random.split(self._key)
-        nxt = np.asarray(jax.device_get(self.sampler(sub, logits[:, -1])))
-        self.stats["ticks"] += 1
-        for slot in range(self.max_slots):
-            if not self.live[slot]:
-                continue
-            req = self.slot_req[slot]
-            tok = int(nxt[slot])
-            req.output.append(tok)
-            self.pos[slot] += 1
-            self.last_token[slot] = tok
-            self.stats["tokens"] += 1
-            hit_eos = req.eos_id is not None and tok == req.eos_id
-            if (hit_eos or len(req.output) >= req.max_new_tokens
-                    or self.pos[slot] >= self.max_len - 1):
-                self._retire(slot)
-        return True
+    def tick(self) -> bool:
+        return self._tick_paged() if self.paged else self._tick_dense()
 
     def run_until_drained(self, max_ticks: int = 10_000):
         for _ in range(max_ticks):
             busy = self.tick()
-            if not busy and not self.queue:
+            if not busy and not self.sched.has_work():
                 break
         return self.finished
 

@@ -1,0 +1,177 @@
+"""Paged KV-cache storage: a model-agnostic page pool + per-slot page tables.
+
+This is the paper's dynamic-population append/delete applied to *memory*
+instead of walkers: the pool's pages are the capacity, requests allocate
+pages as they enter and grow, and free them as they leave.  The engine's
+footprint becomes ``pages_in_use x page_size`` tokens instead of
+``max_slots x max_len`` — short requests stop paying for the longest one.
+
+Layering contract (function-centric): this module never looks inside a
+model.  A model describes each decode-cache leaf with a
+:class:`PagedLeafSpec` (leading dims / trailing dims / dtype around the
+token axis) and the pool materializes storage of shape
+``prefix + (num_pages, page_size) + suffix`` per leaf.  The pure functions
+:func:`scatter_chunk`, :func:`scatter_token` and :func:`gather_pages` are
+the only ways device code touches that storage, so the same pool serves the
+dense, MoE and VLM cache families unchanged.
+
+Host-side bookkeeping (the free list) is deterministic: pages are handed
+out FIFO, so identical request streams produce identical page tables —
+which is what makes paged-vs-dense token parity testable.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class PagedLeafSpec:
+    """One decode-cache leaf, described around its token axis.
+
+    A dense cache leaf ``(L, B, S, H, D)`` becomes
+    ``prefix=(L,), suffix=(H, D)`` — batch and sequence axes are replaced
+    by the pool's ``(num_pages, page_size)`` pair.
+    """
+    prefix: tuple
+    suffix: tuple
+    dtype: Any
+
+    def storage_shape(self, num_pages: int, page_size: int) -> tuple:
+        return tuple(self.prefix) + (num_pages, page_size) + tuple(self.suffix)
+
+
+def _is_spec(x) -> bool:
+    return isinstance(x, PagedLeafSpec)
+
+
+# extra never-allocated page absorbing dead-slot decode writes; storage is
+# always materialized with ``num_pages + N_TRASH`` pages
+N_TRASH = 1
+
+
+class PagePool:
+    """Fixed-size KV pages with a FIFO free list and a high-water stat.
+
+    One extra *trash* page (index ``num_pages``) is always allocated so
+    batched decode can keep dead slots in the SPMD step: their token writes
+    land in the trash page instead of corrupting a live one.
+    """
+
+    def __init__(self, leaf_specs, *, num_pages: int, page_size: int):
+        assert num_pages >= 1 and page_size >= 1
+        self.leaf_specs = leaf_specs
+        self.num_pages = num_pages
+        self.page_size = page_size
+        self.trash_page = num_pages            # valid index, never allocated
+        self.storage = jax.tree_util.tree_map(
+            lambda s: jnp.zeros(
+                s.storage_shape(num_pages + N_TRASH, page_size), s.dtype),
+            leaf_specs, is_leaf=_is_spec)
+        self._free: deque[int] = deque(range(num_pages))
+        self._high_water = 0
+
+    # -- host-side accounting -------------------------------------------------
+
+    @property
+    def pages_free(self) -> int:
+        return len(self._free)
+
+    @property
+    def pages_in_use(self) -> int:
+        return self.num_pages - len(self._free)
+
+    @property
+    def high_water(self) -> int:
+        """Max pages simultaneously in use since construction."""
+        return self._high_water
+
+    def alloc(self, n: int) -> Optional[list[int]]:
+        """Pop ``n`` pages, or None (allocate-all-or-nothing) if exhausted."""
+        if n < 0 or len(self._free) < n:
+            return None
+        pages = [self._free.popleft() for _ in range(n)]
+        self._high_water = max(self._high_water, self.pages_in_use)
+        return pages
+
+    def free(self, pages) -> None:
+        for p in pages:
+            assert 0 <= p < self.num_pages, p
+            self._free.append(int(p))
+
+    def tokens_capacity(self) -> int:
+        return self.num_pages * self.page_size
+
+
+# ---------------------------------------------------------------------------
+# Pure device ops (jit-safe; storage in, storage out)
+# ---------------------------------------------------------------------------
+
+def _pfx(n_prefix: int) -> tuple:
+    return (slice(None),) * n_prefix
+
+
+def scatter_chunk(storage, pages, chunk, *, page_size: int, n_prefix: int = 0):
+    """Write a page-aligned token chunk into its pages.
+
+    storage: (prefix..., N, page_size, suffix...)
+    pages:   (n,) int32 page ids
+    chunk:   (prefix..., n * page_size, suffix...)
+    """
+    n = pages.shape[0]
+    pre = chunk.shape[:n_prefix]
+    suf = chunk.shape[n_prefix + 1:]
+    blk = chunk.reshape(pre + (n, page_size) + suf)
+    idx = _pfx(n_prefix) + (pages,)
+    return storage.at[idx].set(blk.astype(storage.dtype))
+
+
+def scatter_token(storage, pages, offs, vals, *, n_prefix: int = 0):
+    """Write one token per slot at (page, offset) — the decode-step write.
+
+    storage: (prefix..., N, page_size, suffix...)
+    pages, offs: (B,) int32;   vals: (prefix..., B, suffix...)
+    """
+    idx = _pfx(n_prefix) + (pages, offs)
+    return storage.at[idx].set(vals.astype(storage.dtype))
+
+
+def gather_pages(storage, tables, *, n_prefix: int = 0):
+    """Gather each slot's pages back into a contiguous view.
+
+    storage: (prefix..., N, page_size, suffix...);  tables: (B, P) int32
+    -> (prefix..., B, P * page_size, suffix...)
+    """
+    B, P = tables.shape
+    idx = _pfx(n_prefix) + (tables,)
+    g = storage[idx]                  # (prefix..., B, P, page_size, suffix...)
+    pre = g.shape[:n_prefix]
+    suf = g.shape[n_prefix + 3:]
+    return g.reshape(pre + (B, P * storage.shape[n_prefix + 1]) + suf)
+
+
+# ---------------------------------------------------------------------------
+# Dense per-slot state store (the degenerate "one page per slot" layout)
+# ---------------------------------------------------------------------------
+
+def write_slot(state, slot_state, slot: int):
+    """Write a (B=1) prefill state into slot ``slot`` of the batched state.
+
+    The dense-path replacement for splice-by-``dynamic_update_slice``: every
+    leaf has batch on axis 1 (stacked caches and recurrent O(1) states
+    alike); a leaf with a sequence axis (axis 2) shorter than the slot's
+    is zero-padded — the validity length masks the tail.
+    """
+    def leaf(dst, src):
+        if src.ndim >= 3 and src.shape[2] < dst.shape[2]:
+            pad = [(0, 0)] * src.ndim
+            pad[2] = (0, dst.shape[2] - src.shape[2])
+            src = jnp.pad(src, pad)
+        return dst.at[:, slot].set(src[:, 0].astype(dst.dtype))
+
+    return jax.tree_util.tree_map(leaf, state, slot_state)

@@ -26,3 +26,33 @@ def sample_top_k(key, logits, *, k: int = 40, temperature: float = 1.0,
     gs = jax.random.categorical(key, top_v / temperature)
     return jnp.take_along_axis(top_i, gs[..., None], axis=-1)[..., 0].astype(
         jnp.int32)
+
+
+def sample_temperature(key, logits, *, temperature: float = 1.0,
+                       true_vocab=None):
+    """Plain categorical sampling at a temperature (0 -> greedy)."""
+    logits = _mask_pad(logits, true_vocab).astype(jnp.float32)
+    if temperature <= 0:
+        return greedy(logits)
+    return jax.random.categorical(key, logits / temperature).astype(jnp.int32)
+
+
+def sample_top_p(key, logits, *, p: float = 0.9, temperature: float = 1.0,
+                 true_vocab=None):
+    """Nucleus sampling: keep the smallest prefix of the sorted distribution
+    whose mass reaches ``p`` (the top token always survives), renormalize,
+    sample.  0 temperature -> greedy."""
+    logits = _mask_pad(logits, true_vocab).astype(jnp.float32)
+    if temperature <= 0:
+        return greedy(logits)
+    scaled = logits / temperature
+    order = jnp.argsort(-scaled, axis=-1)
+    sorted_logits = jnp.take_along_axis(scaled, order, axis=-1)
+    probs = jax.nn.softmax(sorted_logits, axis=-1)
+    # cumulative mass *before* each token: token i survives iff the nucleus
+    # isn't already full without it — keeps the top token unconditionally
+    before = jnp.cumsum(probs, axis=-1) - probs
+    sorted_logits = jnp.where(before < p, sorted_logits, -1e30)
+    gs = jax.random.categorical(key, sorted_logits)
+    return jnp.take_along_axis(order, gs[..., None], axis=-1)[..., 0].astype(
+        jnp.int32)

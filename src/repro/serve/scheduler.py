@@ -1,0 +1,265 @@
+"""Serving policy: admission, chunked prefill, and preemption.
+
+Split out of :class:`repro.serve.engine.ServeEngine` so the engine is pure
+*execution* (jitted device calls) and this module is pure *policy* (host
+bookkeeping) — the same function-centric cut the runtime makes between task
+functions and farm machinery.  The scheduler never touches device arrays;
+it hands the engine a plan (admissions, prefill chunk jobs, page/offset
+targets) and the engine reports back what actually ran.
+
+Three mechanisms:
+
+* **Admission** — FIFO from the queue into free slots.  In paged mode a
+  request is admitted only when the pool can cover its whole prompt plus
+  the first decode token (allocate-all-or-nothing keeps admission
+  deterministic and starvation-free: the queue head blocks until pages
+  drain).
+* **Chunked prefill** — prompts prefill in fixed-size, page-aligned chunks
+  interleaved with decode ticks, so a 2k-token prompt no longer stalls
+  token emission for live slots.  ``chunks_per_tick`` bounds prefill
+  compute per tick; chunks round-robin across prefilling slots.
+* **Preemption on page exhaustion** — when a live slot needs a fresh page
+  and the pool is dry, the youngest-admitted request is evicted
+  (vLLM-style recompute: its pages are freed and it re-enters the queue
+  head; on re-admission it re-prefills prompt *plus* tokens generated so
+  far, which preserves greedy token streams exactly).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import numpy as np
+
+from repro.serve.pages import PagePool
+
+FREE, PREFILL, LIVE = "free", "prefill", "live"
+
+
+def prefill_tokens(req) -> np.ndarray:
+    """The token sequence a (possibly resumed) request must prefill:
+    prompt plus anything generated before a preemption."""
+    toks = np.asarray(req.prompt, np.int32)
+    if req.output:
+        toks = np.concatenate([toks, np.asarray(req.output, np.int32)])
+    return toks
+
+
+@dataclasses.dataclass
+class ChunkJob:
+    """One page-aligned prefill chunk for one slot."""
+    slot: int
+    req: object
+    tokens: np.ndarray          # (C,) int32, right-padded to the chunk size
+    start: int                  # absolute position of tokens[0]
+    n_valid: int                # real (non-pad) tokens in this chunk
+    pages: Optional[np.ndarray]  # (C // page_size,) page ids; None = dense
+    is_last: bool
+    total: int                  # full prefill length of the request
+
+
+class Scheduler:
+    def __init__(self, *, max_slots: int, max_len: int,
+                 pool: Optional[PagePool] = None, prefill_chunk: int = 64,
+                 chunks_per_tick: int = 2):
+        self.max_slots, self.max_len = max_slots, max_len
+        self.pool = pool
+        self.queue: list = []
+        self.status = [FREE] * max_slots
+        self.slot_req: list = [None] * max_slots
+        self.lengths = np.zeros(max_slots, np.int64)
+        self.prefill_done = np.zeros(max_slots, np.int64)
+        self.prefill_total = np.zeros(max_slots, np.int64)
+        self.admitted_at = np.zeros(max_slots, np.int64)
+        self._admit_seq = 0
+        self._rr = 0
+        self.preemptions = 0
+        self.chunks_per_tick = max(1, chunks_per_tick)
+        if pool is not None:
+            ps = pool.page_size
+            self.page_size = ps
+            self.prefill_chunk = max(ps, ((prefill_chunk + ps - 1) // ps) * ps)
+            self.pages_per_slot = (max_len + ps - 1) // ps
+            if pool.num_pages < self.pages_per_slot:
+                raise ValueError(
+                    f"pool of {pool.num_pages} pages cannot hold one "
+                    f"max_len={max_len} request ({self.pages_per_slot} pages)")
+            self.table = np.zeros((max_slots, self.pages_per_slot), np.int32)
+            self.n_pages = np.zeros(max_slots, np.int64)
+        else:
+            self.page_size = None
+            self.prefill_chunk = prefill_chunk
+            self.table = None
+            self.n_pages = None
+
+    # -- queries -------------------------------------------------------------
+
+    def live_slots(self) -> list[int]:
+        return [s for s in range(self.max_slots) if self.status[s] == LIVE]
+
+    def prefilling_slots(self) -> list[int]:
+        return [s for s in range(self.max_slots) if self.status[s] == PREFILL]
+
+    def has_work(self) -> bool:
+        return bool(self.queue) or any(s != FREE for s in self.status)
+
+    # -- admission -----------------------------------------------------------
+
+    def submit(self, req) -> None:
+        self.queue.append(req)
+
+    def admit(self) -> tuple[list[tuple[int, object]], list[object]]:
+        """Fill free slots FIFO.  Returns (admitted (slot, req) pairs,
+        rejected requests whose prefill can never fit ``max_len`` — these
+        bypassed submit()'s validation and must be retired by the caller)."""
+        admits, rejects = [], []
+        for slot in range(self.max_slots):
+            if not self.queue:
+                break
+            if self.status[slot] != FREE:
+                continue
+            req = self.queue[0]
+            total = len(prefill_tokens(req))
+            if total == 0 or total >= self.max_len:
+                # can never prefill: nothing to chunk / no room to decode
+                self.queue.pop(0)
+                rejects.append(req)
+                continue
+            if self.pool is not None:
+                # pages for every prefill position (padded to page_size)
+                # plus the first decode token: ceil((total + 1) / page_size)
+                need = (total + self.page_size) // self.page_size
+                pages = self.pool.alloc(need)
+                if pages is None:
+                    break                       # queue head waits for pages
+                self.table[slot, :need] = pages
+                self.n_pages[slot] = need
+            self.queue.pop(0)
+            self.status[slot] = PREFILL
+            self.slot_req[slot] = req
+            self.lengths[slot] = 0
+            self.prefill_done[slot] = 0
+            self.prefill_total[slot] = total
+            self.admitted_at[slot] = self._admit_seq
+            self._admit_seq += 1
+            admits.append((slot, req))
+        return admits, rejects
+
+    # -- chunked prefill -----------------------------------------------------
+
+    def _padded_total(self, slot: int) -> int:
+        if self.pool is None:
+            return int(self.prefill_total[slot])
+        ps = self.page_size
+        return (int(self.prefill_total[slot]) + ps - 1) // ps * ps
+
+    def _make_job(self, slot: int, start: int) -> ChunkJob:
+        req = self.slot_req[slot]
+        total = int(self.prefill_total[slot])
+        padded = self._padded_total(slot)
+        C = min(self.prefill_chunk, padded - start) if self.pool is not None \
+            else total
+        toks = np.zeros(C, np.int32)
+        valid = max(0, min(C, total - start))
+        toks[:valid] = prefill_tokens(req)[start:start + valid]
+        pages = None
+        if self.pool is not None:
+            ps = self.page_size
+            pages = self.table[slot, start // ps:(start + C) // ps].copy()
+        return ChunkJob(slot=slot, req=req, tokens=toks, start=start,
+                        n_valid=valid, pages=pages,
+                        is_last=start + C >= padded, total=total)
+
+    def next_chunks(self) -> list[ChunkJob]:
+        """Plan this tick's prefill work.  Dense mode: every prefilling slot
+        gets its whole prompt as one job (they run concurrently on the
+        engine's farm).  Paged mode: up to ``chunks_per_tick`` page-aligned
+        chunks, round-robin across prefilling slots."""
+        slots = self.prefilling_slots()
+        if not slots:
+            return []
+        if self.pool is None:
+            return [self._make_job(s, 0) for s in slots]
+        jobs: list[ChunkJob] = []
+        planned = {s: int(self.prefill_done[s]) for s in slots}
+        order = sorted(slots, key=lambda s: (s - self._rr) % self.max_slots)
+        i = 0
+        while len(jobs) < self.chunks_per_tick:
+            ready = [s for s in order if planned[s] < self._padded_total(s)]
+            if not ready:
+                break
+            slot = ready[i % len(ready)]
+            job = self._make_job(slot, planned[slot])
+            planned[slot] += len(job.tokens)
+            jobs.append(job)
+            i += 1
+        if jobs:
+            self._rr = (jobs[-1].slot + 1) % self.max_slots
+        return jobs
+
+    def chunk_done(self, job: ChunkJob) -> None:
+        slot = job.slot
+        self.prefill_done[slot] = job.start + len(job.tokens)
+        if job.is_last:
+            self.status[slot] = LIVE
+            self.lengths[slot] = job.total
+
+    # -- decode page accounting + preemption ---------------------------------
+
+    def ensure_decode_pages(self) -> list[tuple[int, object]]:
+        """Guarantee every live slot owns the page for its next token,
+        preempting the youngest-admitted request when the pool runs dry.
+        Returns the preempted (slot, req) pairs."""
+        if self.pool is None:
+            return []
+        preempted: list[tuple[int, object]] = []
+        order = sorted(self.live_slots(), key=lambda s: self.admitted_at[s])
+        for slot in order:
+            if self.status[slot] != LIVE:       # preempted earlier this pass
+                continue
+            idx = int(self.lengths[slot]) // self.page_size
+            if idx < int(self.n_pages[slot]):
+                continue
+            page = self.pool.alloc(1)
+            while page is None:
+                victim = self._youngest_victim(exclude=slot)
+                if victim is None:
+                    raise RuntimeError(
+                        "page pool exhausted with a single request resident; "
+                        "num_pages is too small for max_len")
+                preempted.append((victim, self.preempt(victim)))
+                page = self.pool.alloc(1)
+            self.table[slot, idx] = page[0]
+            self.n_pages[slot] += 1
+        return preempted
+
+    def _youngest_victim(self, exclude: int) -> Optional[int]:
+        cands = [s for s in range(self.max_slots)
+                 if s != exclude and self.status[s] in (PREFILL, LIVE)]
+        if not cands:
+            return None
+        return max(cands, key=lambda s: self.admitted_at[s])
+
+    def preempt(self, slot: int):
+        """Evict a request (recompute flavor): free its pages, requeue it at
+        the head.  Generated tokens stay on ``req.output`` and are
+        re-prefilled on re-admission, so its token stream continues
+        exactly where it stopped."""
+        req = self.slot_req[slot]
+        self.release(slot)
+        self.queue.insert(0, req)
+        self.preemptions += 1
+        return req
+
+    def release(self, slot: int) -> None:
+        """Walker ``delete``: the slot's capacity returns to the pool."""
+        if self.pool is not None and self.n_pages[slot]:
+            n = int(self.n_pages[slot])
+            self.pool.free(self.table[slot, :n].tolist())
+            self.table[slot, :n] = 0
+            self.n_pages[slot] = 0
+        self.status[slot] = FREE
+        self.slot_req[slot] = None
+        self.lengths[slot] = 0
+        self.prefill_done[slot] = 0
+        self.prefill_total[slot] = 0

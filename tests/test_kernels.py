@@ -153,3 +153,76 @@ def test_rwkv_kernel_matches_model_time_mix_recurrence():
     np.testing.assert_allclose(y_kernel, ys.swapaxes(0, 1), rtol=1e-4,
                                atol=1e-4)
     np.testing.assert_allclose(fin_kernel, fin, rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# paged attention (decode through a page table)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("B,Hq,Hkv,D,ps,N,P", [
+    (3, 4, 2, 16, 8, 12, 4),      # GQA
+    (2, 4, 1, 32, 16, 6, 3),      # MQA
+    (1, 8, 8, 64, 8, 4, 2),       # MHA
+    (4, 2, 2, 16, 4, 20, 8),      # many small pages
+])
+def test_paged_attention_vs_ref(B, Hq, Hkv, D, ps, N, P):
+    q = _arr((B, Hq, D))
+    kp = _arr((N, ps, Hkv, D))
+    vp = _arr((N, ps, Hkv, D))
+    tables = jnp.asarray(RNG.integers(0, N, size=(B, P)), jnp.int32)
+    # ragged validity lengths, incl. a full table and a partial last page
+    lens = RNG.integers(1, P * ps + 1, size=B)
+    lens[0] = P * ps
+    lengths = jnp.asarray(lens, jnp.int32)
+    got = ops.paged_attention(q, kp, vp, tables, lengths)
+    want = ref.paged_attention(q, kp, vp, tables, lengths)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_paged_attention_dead_slot_is_zero():
+    """length-0 rows (retired decode slots) must emit exact zeros, not a
+    softmax over garbage."""
+    q = _arr((2, 4, 16))
+    kp = _arr((6, 8, 2, 16))
+    vp = _arr((6, 8, 2, 16))
+    tables = jnp.zeros((2, 3), jnp.int32)
+    lengths = jnp.asarray([0, 5], jnp.int32)
+    got = np.asarray(ops.paged_attention(q, kp, vp, tables, lengths))
+    assert np.all(got[0] == 0.0)
+    assert np.any(got[1] != 0.0)
+
+
+def test_paged_attention_matches_contiguous_flash():
+    """A page table laid out contiguously must reproduce plain decode
+    attention on the equivalent dense cache."""
+    B, Hq, Hkv, D, ps = 2, 4, 2, 16, 8
+    P = 4
+    S = P * ps
+    k = _arr((B, S, Hkv, D))
+    v = _arr((B, S, Hkv, D))
+    q = _arr((B, 1, Hq, D))
+    lengths = jnp.asarray([S, 19], jnp.int32)
+    # scatter the dense cache into per-sequence pages
+    kp = k.reshape(B * P, ps, Hkv, D)
+    vp = v.reshape(B * P, ps, Hkv, D)
+    tables = jnp.arange(B * P, dtype=jnp.int32).reshape(B, P)
+    got = ops.paged_attention(q[:, 0], kp, vp, tables, lengths)
+    from repro.models.attention import gqa_attention
+    want = gqa_attention(q, k, v, causal=True, q_offset=lengths - 1,
+                         kv_valid_len=lengths, kv_chunk=S)[:, 0]
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_paged_attention_bf16():
+    q = _arr((2, 4, 16), jnp.bfloat16)
+    kp = _arr((8, 8, 2, 16), jnp.bfloat16)
+    vp = _arr((8, 8, 2, 16), jnp.bfloat16)
+    tables = jnp.asarray(RNG.integers(0, 8, size=(2, 3)), jnp.int32)
+    lengths = jnp.asarray([24, 7], jnp.int32)
+    got = ops.paged_attention(q, kp, vp, tables, lengths)
+    want = ref.paged_attention(q, kp, vp, tables, lengths)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=2e-2, atol=2e-2)

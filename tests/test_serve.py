@@ -1,4 +1,5 @@
-"""Serving tests: continuous-batching engine correctness vs aligned decode."""
+"""Serving tests: continuous-batching engine correctness vs aligned decode,
+scheduler edge cases, and the sampling heads."""
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -7,7 +8,9 @@ import pytest
 from repro.configs import smoke_config
 from repro.models.api import build_model
 from repro.serve import ServeEngine
-from repro.serve.sampling import greedy, sample_top_k
+from repro.serve.engine import _bucket
+from repro.serve.sampling import (greedy, sample_temperature, sample_top_k,
+                                  sample_top_p)
 
 
 @pytest.fixture(scope="module")
@@ -35,13 +38,16 @@ def _reference_generate(model, params, prompt, n_new, max_len=128):
     return out
 
 
-def test_engine_matches_aligned_reference(dense):
-    """Ragged continuous batching == one-request-at-a-time decoding."""
+@pytest.mark.parametrize("paged", [False, True])
+def test_engine_matches_aligned_reference(dense, paged):
+    """Ragged continuous batching == one-request-at-a-time decoding, on both
+    the dense-cache path and the paged (pool + chunked prefill) path."""
     model, params = dense
     prompts = [[5, 17, 33, 2, 9], [100, 200, 300], [7] * 11,
                [42, 41, 40, 39, 38, 37, 36]]
     want = [_reference_generate(model, params, p, 8) for p in prompts]
-    eng = ServeEngine(model, params, max_slots=3, max_len=128)
+    eng = ServeEngine(model, params, max_slots=3, max_len=128, paged=paged,
+                      prefill_chunk=16)
     for p in prompts:
         eng.submit(p, max_new_tokens=8)
     done = eng.run_until_drained()
@@ -63,6 +69,18 @@ def test_engine_eos_stops_early(dense):
     assert len(done[0].output) == 4
 
 
+def test_engine_eos_on_first_token(dense):
+    """A request whose very first sampled token is EOS retires right after
+    prefill — no decode tick is spent on it."""
+    model, params = dense
+    ref = _reference_generate(model, params, [5, 6, 7], 2)
+    eng = ServeEngine(model, params, max_slots=2, max_len=128)
+    eng.submit([5, 6, 7], max_new_tokens=16, eos_id=ref[0])
+    done = eng.run_until_drained()
+    assert done[0].output == [ref[0]]
+    assert eng.stats["ticks"] == 0
+
+
 def test_engine_latency_stats(dense):
     model, params = dense
     eng = ServeEngine(model, params, max_slots=2, max_len=128)
@@ -81,13 +99,64 @@ def test_engine_rejects_oversized_prompt_at_submit(dense):
     assert eng.queue == []                 # nothing was enqueued
 
 
-def test_engine_bad_request_does_not_drop_concurrent_admits(dense):
-    """One failing prefill must not lose the requests admitted concurrently
-    with it (an unforeseen failure — submit()'s validation is bypassed)."""
+def test_engine_slot_exhaustion_queues_requests(dense):
+    """More requests than slots: the overflow waits in the queue and every
+    request still completes once capacity frees up."""
+    model, params = dense
+    eng = ServeEngine(model, params, max_slots=2, max_len=128)
+    for i in range(5):
+        eng.submit([1 + i, 2, 3], max_new_tokens=3)
+    eng.tick()
+    assert len(eng.queue) == 3             # two admitted, three waiting
+    done = eng.run_until_drained()
+    assert sorted(r.rid for r in done) == [0, 1, 2, 3, 4]
+    assert all(len(r.output) == 3 for r in done)
+    assert eng.stats["prefills"] == 5
+
+
+@pytest.mark.parametrize("paged", [False, True])
+def test_engine_bad_request_retires_with_error(dense, paged):
+    """A request that can never prefill (oversized, bypassing submit()'s
+    validation) is retired with ``req.error`` set; concurrently admitted
+    requests are unaffected and the engine keeps draining (strict=False)."""
     import numpy as _np
     from repro.serve.engine import Request
     model, params = dense
-    eng = ServeEngine(model, params, max_slots=3, max_len=128)
+    eng = ServeEngine(model, params, max_slots=3, max_len=128, paged=paged)
+    eng.submit([5, 17, 33], max_new_tokens=4)
+    eng.queue.append(Request(1000, _np.arange(200, dtype=_np.int32), 4))
+    eng.submit([7, 8, 9], max_new_tokens=4)
+    done = eng.run_until_drained()
+    failed = [r for r in done if r.error is not None]
+    assert [r.rid for r in failed] == [1000] and failed[0].done_at is not None
+    assert isinstance(failed[0].error, ValueError)
+    ok = sorted(r.rid for r in done if r.error is None)
+    assert ok == [0, 1]
+    assert all(len(r.output) == 4 for r in done if r.error is None)
+
+
+@pytest.mark.parametrize("paged", [False, True])
+def test_engine_empty_prompt_retires_with_error(dense, paged):
+    """A zero-length prompt can never prefill: it must retire with
+    ``req.error`` instead of hanging in the prefill state forever."""
+    from repro.serve.engine import Request
+    model, params = dense
+    eng = ServeEngine(model, params, max_slots=2, max_len=128, paged=paged)
+    eng.queue.append(Request(7, np.zeros(0, np.int32), 4))
+    eng.submit([5, 6, 7], max_new_tokens=3)
+    done = eng.run_until_drained(max_ticks=50)
+    by_rid = {r.rid: r for r in done}
+    assert isinstance(by_rid[7].error, ValueError)
+    assert by_rid[0].error is None and len(by_rid[0].output) == 3
+    if paged:
+        assert eng.pool.pages_in_use == 0      # nothing leaked
+
+
+def test_engine_strict_raises_on_bad_request(dense):
+    import numpy as _np
+    from repro.serve.engine import Request
+    model, params = dense
+    eng = ServeEngine(model, params, max_slots=3, max_len=128, strict=True)
     eng.submit([5, 17, 33], max_new_tokens=4)
     eng.queue.append(Request(1000, _np.arange(200, dtype=_np.int32), 4))
     eng.submit([7, 8, 9], max_new_tokens=4)
@@ -96,17 +165,16 @@ def test_engine_bad_request_does_not_drop_concurrent_admits(dense):
         eng.run_until_drained()
     # the failed request is retired with its error recorded, not lost
     failed = [r for r in eng.finished if r.error is not None]
-    assert [r.rid for r in failed] == [1000] and failed[0].done_at is not None
-    # the two good requests were admitted and can finish
+    assert [r.rid for r in failed] == [1000]
+    # healthy work was committed before the raise; draining completes it
     done = eng.run_until_drained()
-    ok = sorted(r.rid for r in done if r.error is None)
-    assert ok == [0, 1]
-    assert all(len(r.output) == 4 for r in done if r.error is None)
+    assert sorted(r.rid for r in done if r.error is None) == [0, 1]
 
 
 def test_engine_close_releases_prefill_pool(dense):
     model, params = dense
-    with ServeEngine(model, params, max_slots=2, max_len=128) as eng:
+    with ServeEngine(model, params, max_slots=2, max_len=128,
+                     paged=False) as eng:
         eng.submit([1, 2, 3], max_new_tokens=2)
         eng.run_until_drained()
         assert eng._prefill_farm._pool is not None
@@ -116,6 +184,35 @@ def test_engine_close_releases_prefill_pool(dense):
     done = eng.run_until_drained()
     assert len(done) == 2
 
+
+def test_bucket_boundaries():
+    assert _bucket(1) == 32
+    assert _bucket(32) == 32
+    assert _bucket(33) == 64
+    assert _bucket(512) == 512
+    assert _bucket(4096) == 4096
+    assert _bucket(4097) == 8192
+    assert _bucket(8193) == 12288          # beyond the table: 4096 multiples
+
+
+def test_per_request_sampler_override(dense):
+    """A request carrying its own sampler is sampled with it while the rest
+    of the batch keeps the engine default (greedy here)."""
+    model, params = dense
+    v = model.cfg.vocab
+    const = lambda key, logits: jnp.asarray(7, jnp.int32)
+    eng = ServeEngine(model, params, max_slots=2, max_len=128)
+    eng.submit([5, 6, 7], max_new_tokens=4, sampler=const)
+    eng.submit([9, 8, 7], max_new_tokens=4)
+    done = eng.run_until_drained()
+    by_rid = {r.rid: r.output for r in done}
+    assert by_rid[0] == [7, 7, 7, 7]
+    assert by_rid[1] == _reference_generate(model, params, [9, 8, 7], 4)
+
+
+# ---------------------------------------------------------------------------
+# sampling heads
+# ---------------------------------------------------------------------------
 
 def test_sampling_greedy_masks_padded_vocab():
     logits = jnp.zeros((1, 10)).at[0, 9].set(5.0)   # argmax in padded tail
@@ -134,3 +231,44 @@ def test_sample_top_k_distribution():
     draws = np.asarray([int(sample_top_k(k, logits, k=3)[0]) for k in keys])
     freq = np.bincount(draws, minlength=3) / 300
     assert abs(freq[0] - 0.7) < 0.1
+
+
+def test_sample_temperature_zero_is_greedy():
+    logits = jnp.asarray([[0.0, 3.0, 1.0]])
+    out = sample_temperature(jax.random.PRNGKey(0), logits, temperature=0.0)
+    assert int(out[0]) == 1
+
+
+def test_sample_temperature_distribution():
+    logits = jnp.log(jnp.asarray([[0.6, 0.3, 0.1]]))
+    keys = jax.random.split(jax.random.PRNGKey(1), 300)
+    draws = np.asarray([int(sample_temperature(k, logits)[0]) for k in keys])
+    freq = np.bincount(draws, minlength=3) / 300
+    assert abs(freq[0] - 0.6) < 0.1
+
+
+def test_sample_top_p_truncates_tail():
+    """With p=0.5 only the 0.6-mass top token survives the nucleus."""
+    logits = jnp.log(jnp.asarray([[0.6, 0.25, 0.15]]))
+    keys = jax.random.split(jax.random.PRNGKey(2), 100)
+    draws = {int(sample_top_p(k, logits, p=0.5)[0]) for k in keys}
+    assert draws == {0}
+
+
+def test_sample_top_p_keeps_nucleus():
+    """p=0.8 keeps {0.6, 0.25} (the smallest prefix reaching 0.8) and drops
+    the 0.15 tail token."""
+    logits = jnp.log(jnp.asarray([[0.6, 0.25, 0.15]]))
+    keys = jax.random.split(jax.random.PRNGKey(3), 200)
+    draws = np.asarray([int(sample_top_p(k, logits, p=0.8)[0]) for k in keys])
+    assert set(draws) == {0, 1}
+    freq = np.bincount(draws, minlength=3) / 200
+    assert abs(freq[0] - 0.6 / 0.85) < 0.12
+
+
+def test_sample_top_p_masks_padded_vocab():
+    logits = jnp.zeros((1, 8)).at[0, 7].set(9.0)
+    keys = jax.random.split(jax.random.PRNGKey(4), 50)
+    draws = {int(sample_top_p(k, logits, p=0.9, true_vocab=6)[0])
+             for k in keys}
+    assert all(d < 6 for d in draws)
