@@ -1,6 +1,6 @@
 """Serving throughput + the paged KV-cache scaling win.
 
-Three comparisons on the smoke dense model:
+Four comparisons on the smoke models:
 
 1. Continuous batching vs sequential request handling (dense path): the
    tick ratio is the real batching speedup on memory-bound accelerators.
@@ -10,6 +10,12 @@ Three comparisons on the smoke dense model:
    pages-in-use high-water mark stays far below the dense reservation.
 3. **Chunked prefill anti-stall**: while a long prompt prefills in chunks,
    an already-live request keeps emitting a token every tick.
+4. **Tensor-parallel decode scaling** (subprocess with 8 forced host
+   devices): the MoE smoke config scaled to serving size, decoded by the
+   tp=1 engine vs the tp=8 sharded engine.  The speedup tracks the host's
+   free cores — 8 sharded device programs overlap on whatever cores exist,
+   so a 2-core container shows ~1.2-1.7x while an 8-core host has 8x of
+   expert-GEMM headroom.
 
 ``run`` returns a machine-readable payload that ``benchmarks.run`` writes
 to ``results/BENCH_serve.json`` so the perf trajectory is tracked across
@@ -17,6 +23,10 @@ PRs.
 """
 from __future__ import annotations
 
+import json
+import os
+import subprocess
+import sys
 import time
 
 import jax
@@ -28,6 +38,62 @@ from repro.serve import ServeEngine
 
 MAX_LEN = 128
 PAGE = 16
+
+# run in a subprocess: the host device count must be forced before jax
+# initializes, and the parent bench process keeps 1 device
+_TP_SCRIPT = """
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import warnings; warnings.filterwarnings("ignore")
+import json, time
+import jax, numpy as np
+from repro.configs import smoke_config
+from repro.models.api import build_model
+from repro.serve import ServeEngine
+
+cfg = smoke_config("qwen3-moe-235b-a22b").replace(
+    remat="none", d_model=256, n_heads=8, n_kv_heads=8, head_dim=32,
+    expert_d_ff=1024)
+model = build_model(cfg)
+params = model.init(jax.random.PRNGKey(0))
+
+def decode_tput(mesh):
+    eng = ServeEngine(model, params, max_slots=8, max_len=128, paged=True,
+                      page_size=16, prefill_chunk=64, mesh=mesh)
+    rng = np.random.default_rng(0)
+    eng.submit(rng.integers(0, cfg.vocab, 8), max_new_tokens=2)
+    eng.run_until_drained()                    # warm: compile both paths
+    eng.finished.clear()
+    warm_ticks = eng.stats["ticks"]
+    for _ in range(8):
+        eng.submit(rng.integers(0, cfg.vocab, 8), max_new_tokens=32)
+    t0 = time.perf_counter()
+    done = eng.run_until_drained()
+    dt = time.perf_counter() - t0
+    toks = sum(len(r.output) for r in done)
+    eng.close()
+    return {"tok_per_s": toks / dt, "tokens": toks,
+            "ticks": eng.stats["ticks"] - warm_ticks}
+
+tp1 = decode_tput(None)
+tp8 = decode_tput(jax.make_mesh((8,), ("model",)))
+speedup = tp8["tok_per_s"] / tp1["tok_per_s"]
+# the 2x target needs real cores behind the 8 virtual devices; record the
+# verdict explicitly so the tracked artifact states its own validity
+print(json.dumps({"tp1": tp1, "tp8": tp8, "speedup_x": speedup,
+                  "target_2x_met": speedup >= 2.0,
+                  "host_cores": os.cpu_count()}))
+"""
+
+
+def _tp_scaling() -> dict:
+    env = dict(os.environ)
+    env.pop("XLA_FLAGS", None)
+    out = subprocess.run([sys.executable, "-c", _TP_SCRIPT],
+                         capture_output=True, text=True, timeout=900,
+                         env=env)
+    assert out.returncode == 0, f"tp bench failed:\n{out.stderr[-2000:]}"
+    return json.loads(out.stdout.strip().splitlines()[-1])
 
 
 def _drain_tracking_peak(eng):
@@ -120,6 +186,13 @@ def run(csv_rows: list):
         f"short_tokens_during_96tok_prefill="
         f"{stall['short_tokens_during_prefill']}")
 
+    tp = _tp_scaling()
+    csv_rows.append(
+        f"serve_tp8_moe_decode,{1e6/tp['tp8']['tok_per_s']:.0f},"
+        f"tok_per_s={tp['tp8']['tok_per_s']:.1f};"
+        f"tp1={tp['tp1']['tok_per_s']:.1f};"
+        f"speedup={tp['speedup_x']:.2f}x_on_{os.cpu_count()}cores")
+
     return {
         "sequential": seq, "continuous4": cb,
         "dense_equal_budget": dense, "paged_equal_budget": paged,
@@ -127,4 +200,5 @@ def run(csv_rows: list):
         "budget_tokens": budget_tokens,
         "chunked_prefill": stall,
         "slot_scaling_x": paged["peak_slots"] / max(dense["peak_slots"], 1),
+        "tp_scaling": tp,
     }

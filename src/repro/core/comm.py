@@ -49,8 +49,11 @@ class Comm:
         return int(_axis_size(self.axis))
 
     # -- collectives --------------------------------------------------------
-    def all_gather(self, x, *, tiled: bool = False):
-        return jax.lax.all_gather(x, self.axis, tiled=tiled)
+    def all_gather(self, x, *, axis: int = 0, tiled: bool = False):
+        """``axis`` selects where shards land (tiled: concat dim; untiled:
+        the inserted stack dim) — e.g. ``axis=-1, tiled=True`` reassembles a
+        vocab-sharded logits row, the serving TP head's single gather."""
+        return jax.lax.all_gather(x, self.axis, axis=axis, tiled=tiled)
 
     def all_reduce_sum(self, x):
         return jax.lax.psum(x, self.axis)
@@ -103,8 +106,8 @@ class SerialComm:
     def size(self):
         return 1
 
-    def all_gather(self, x, *, tiled: bool = False):
-        return x if tiled else jnp.expand_dims(x, 0)
+    def all_gather(self, x, *, axis: int = 0, tiled: bool = False):
+        return x if tiled else jnp.expand_dims(x, axis)
 
     def all_reduce_sum(self, x):
         return x

@@ -17,6 +17,12 @@ O(pages_per_seq), which is the whole point of paging.  Dead slots
 ``lengths`` counts valid KV entries *including* the current token (whose
 K/V must be written to its page before the call); causality is implicit —
 every cached position is <= the query position.
+
+Tensor-parallel serving runs this kernel INSIDE a ``shard_map`` body: q and
+the page storage arrive head-sharded (Hq/tp, Hkv/tp local heads), the page
+table and lengths replicated, and the grid's Hkv extent is the local head
+count — each device streams only its own head shard's pages, which is what
+makes the paged decode step's HBM traffic scale 1/tp.
 """
 from __future__ import annotations
 

@@ -2,6 +2,15 @@
 
     PYTHONPATH=src python -m repro.launch.serve --arch qwen2-7b --smoke \
         --requests 16 --max-new 24
+
+Tensor-parallel serving over a device mesh (shards attention heads, MLP ff,
+experts, the vocab and the paged-KV head axis over ``tp`` devices; the
+scheduler and page tables stay on the host).  On CPU, prefix with
+``XLA_FLAGS=--xla_force_host_platform_device_count=8`` to fake the devices:
+
+    XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+    PYTHONPATH=src python -m repro.launch.serve --arch qwen3-moe-235b-a22b \
+        --smoke --mesh tp=8 --requests 8 --max-new 16
 """
 from __future__ import annotations
 
@@ -14,6 +23,22 @@ import numpy as np
 from repro.configs import get_config, list_archs, smoke_config
 from repro.models.api import build_model
 from repro.serve import ServeEngine
+
+
+def parse_mesh(spec: str | None):
+    """``"tp=N"`` -> a 1-D ("model",) mesh of N devices (None -> no mesh)."""
+    if not spec:
+        return None
+    key, _, val = spec.partition("=")
+    if key != "tp" or not val.isdigit() or int(val) < 1:
+        raise SystemExit(f"--mesh expects tp=N (N >= 1), got {spec!r}")
+    tp = int(val)
+    n = len(jax.devices())
+    if tp > n:
+        raise SystemExit(f"--mesh tp={tp} but only {n} devices visible "
+                         "(set XLA_FLAGS=--xla_force_host_platform_"
+                         "device_count=N on CPU)")
+    return jax.make_mesh((tp,), ("model",))
 
 
 def main():
@@ -30,6 +55,9 @@ def main():
     ap.add_argument("--num-pages", type=int, default=None,
                     help="pool size (default: dense-equivalent budget)")
     ap.add_argument("--prefill-chunk", type=int, default=64)
+    ap.add_argument("--mesh", default=None, metavar="tp=N",
+                    help="serve tensor-parallel over an N-device "
+                    "('model',) mesh")
     args = ap.parse_args()
 
     cfg = smoke_config(args.arch) if args.smoke else get_config(args.arch)
@@ -38,11 +66,12 @@ def main():
                          "zamba uses aligned decode (see tests)")
     model = build_model(cfg)
     params = model.init(jax.random.PRNGKey(0))
+    mesh = parse_mesh(args.mesh)
     eng = ServeEngine(model, params, max_slots=args.slots,
                       max_len=args.max_len,
                       paged=False if args.dense else None,
                       page_size=args.page_size, num_pages=args.num_pages,
-                      prefill_chunk=args.prefill_chunk)
+                      prefill_chunk=args.prefill_chunk, mesh=mesh)
 
     rng = np.random.default_rng(0)
     t0 = time.perf_counter()
@@ -56,6 +85,8 @@ def main():
     mode = "dense" if not eng.paged else (
         f"paged(ps={eng.pool.page_size}, "
         f"hw={eng.pool.high_water}/{eng.pool.num_pages} pages)")
+    if mesh is not None:
+        mode += f" tp={eng.tp}"
     print(f"[serve] {len(done)} requests, {toks} tokens in {dt:.2f}s "
           f"({toks/dt:.1f} tok/s); ticks={eng.stats['ticks']} "
           f"chunks={eng.stats['chunk_prefills']} "

@@ -48,6 +48,31 @@ class ArraySpec:
             sharding=logical_to_sharding(self.spec, mesh, rules))
 
 
+# -- serving-mesh sharding rules (1-D ("model",) tensor-parallel mesh) -------
+#
+# The serving engine's device mesh has a single "model" axis.  Families with
+# a per-token KV cache run Megatron-style TP: attention heads, MLP ff, the
+# vocab and the experts shard over "model"; everything else (norm scales,
+# router, the embedding table — its lookup needs every row) is replicated.
+# Families without paged KV (recurrent / window caches) run slot-parallel
+# instead: params replicated, decode-state batch axis sharded over "model".
+SERVE_TP_AXES: dict = {
+    "q_heads": "model",
+    "kv_heads": "model",
+    "mlp": "model",
+    "vocab": "model",
+    "experts": "model",
+}
+
+
+def _map_param_spec(spec: P, table) -> P:
+    return P(*(table.get(ax) for ax in spec))
+
+
+def _is_param(x) -> bool:
+    return isinstance(x, Param)
+
+
 def _tokens(B, S):
     return ArraySpec((B, S), jnp.int32, P("batch", "seq"))
 
@@ -135,15 +160,71 @@ class Model:
             is_leaf=lambda x: isinstance(x, PG.PagedLeafSpec))
 
     def paged_prefill_chunk(self, params, storage, table_row, pages_chunk,
-                            start, tokens, rules):
+                            start, tokens, rules, comm=None):
         """Prefill tokens (1, C) at positions [start, start+C) into pages."""
         raise NotImplementedError(f"{self.cfg.family} has no paged KV cache")
 
     def paged_decode_step(self, params, storage, tables, lengths, tokens,
                           write_pages, write_offs, rules, *,
-                          use_pallas: bool = False):
+                          use_pallas: bool = False, comm=None):
         """tokens (B,1) -> (new_storage, logits (B,1,V)) through the pool."""
         raise NotImplementedError(f"{self.cfg.family} has no paged KV cache")
+
+    # -- serving-mesh sharding rules -----------------------------------------
+
+    def serve_param_specs(self):
+        """Pytree of mesh ``PartitionSpec`` (1-D ("model",) mesh) for the
+        params during tensor-parallel PAGED serving — part of the paged
+        protocol, like :meth:`paged_leaf_specs`.  Families without a paged
+        KV cache never need this: the engine's slot-parallel fallback
+        replicates params directly from the array tree."""
+        raise NotImplementedError(
+            f"{self.cfg.family} has no TP serving specs (engine "
+            "slot-parallel mode replicates params instead)")
+
+    def serve_state_specs(self, batch: int, max_len: int):
+        """Mesh specs for the dense decode state under slot-parallel mesh
+        serving: every leaf's logical "batch" axis shards over "model",
+        everything else is replicated — each device decodes its own slots
+        with the unchanged serial step function."""
+        def leaf(a: ArraySpec) -> P:
+            return P(*("model" if ax == "batch" else None for ax in a.spec))
+        return jax.tree_util.tree_map(
+            leaf, self.decode_state_specs(batch, max_len),
+            is_leaf=lambda x: isinstance(x, ArraySpec))
+
+    def paged_storage_specs(self):
+        """Mesh specs for the PagePool storage under TP serving: the leading
+        suffix axis of every :meth:`paged_leaf_specs` leaf (the KV-head axis
+        by convention) shards over "model"."""
+        from repro.serve import pages as PG
+
+        def leaf(s: PG.PagedLeafSpec) -> P:
+            n_pre = len(s.prefix)
+            return P(*([None] * (n_pre + 2) + ["model"]
+                       + [None] * (len(s.suffix) - 1)))
+        return jax.tree_util.tree_map(
+            leaf, self.paged_leaf_specs(),
+            is_leaf=lambda x: isinstance(x, PG.PagedLeafSpec))
+
+    def validate_serve_tp(self, tp: int) -> None:
+        """Raise with every dimension that does not divide by ``tp``."""
+        if tp <= 1:
+            return
+        cfg = self.cfg
+        bad = []
+        if self.supports_paged_decode():
+            dims = {"padded_q_heads": cfg.padded_q_heads,
+                    "padded_kv_heads": cfg.padded_kv_heads,
+                    "padded_vocab": cfg.padded_vocab}
+            if cfg.n_experts:
+                dims["n_experts"] = cfg.n_experts
+            if not cfg.n_experts or cfg.dense_residual:
+                dims["d_ff"] = cfg.d_ff
+            bad = [f"{k}={v}" for k, v in dims.items() if v % tp]
+        if bad:
+            raise ValueError(
+                f"{cfg.name}: tp={tp} does not divide " + ", ".join(bad))
 
     def lm_head(self, params, hidden, rules):
         return T.lm_logits(params, hidden, self.cfg, rules)
@@ -215,16 +296,27 @@ class DecoderLM(Model):
         return {"k": leaf, "v": leaf}
 
     def paged_prefill_chunk(self, params, storage, table_row, pages_chunk,
-                            start, tokens, rules):
+                            start, tokens, rules, comm=None):
         return T.paged_prefill_chunk(params, self.cfg, rules, storage,
-                                     table_row, pages_chunk, start, tokens)
+                                     table_row, pages_chunk, start, tokens,
+                                     comm=comm)
 
     def paged_decode_step(self, params, storage, tables, lengths, tokens,
                           write_pages, write_offs, rules, *,
-                          use_pallas: bool = False):
+                          use_pallas: bool = False, comm=None):
         return T.paged_decode_step(params, self.cfg, rules, storage, tables,
                                    lengths, tokens, write_pages, write_offs,
-                                   use_pallas=use_pallas)
+                                   use_pallas=use_pallas, comm=comm)
+
+    def serve_param_specs(self):
+        """Megatron TP over the 1-D serving mesh: attention heads, MLP ff,
+        experts and the unembed vocab shard over "model"; norms, router and
+        the embedding table (gathered row lookup) stay replicated."""
+        specs = jax.tree_util.tree_map(
+            lambda p: _map_param_spec(p.spec, SERVE_TP_AXES),
+            self.param_defs(), is_leaf=_is_param)
+        specs["embed"]["table"] = P(None, None)
+        return specs
 
 
 class VLM(DecoderLM):

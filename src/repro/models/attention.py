@@ -117,7 +117,19 @@ def paged_decode_attention(q, k_pages, v_pages, tables, lengths, *,
     scalar-prefetched index maps; the fallback gathers the pages with jnp
     advanced indexing and reuses :func:`gqa_attention`'s masked path —
     identical math, HBM-materialized gather.
+
+    Head counts are whatever the caller holds: under tensor-parallel serving
+    this runs inside a ``shard_map`` body where Hq/Hkv are the LOCAL shard
+    (Hq_global/tp, Hkv_global/tp) and the pages carry only local KV heads —
+    attention is embarrassingly parallel across the head axis, so no
+    collective appears here.
     """
+    Hq, Hkv = q.shape[2], k_pages.shape[2]
+    if Hkv == 0 or Hq % Hkv:
+        raise ValueError(
+            f"Hq={Hq} must be a positive multiple of Hkv={Hkv}; under "
+            "serving TP both must divide by tp so each shard keeps whole "
+            "GQA groups")
     if use_pallas:
         from repro.kernels import ops as kops
         return kops.paged_attention(q[:, 0], k_pages, v_pages, tables,

@@ -49,11 +49,20 @@ def capacity(tokens_local: int, top_k: int, n_experts: int, cf: float) -> int:
     return max(4, ((c + 3) // 4) * 4)
 
 
-def _dispatch_compute_combine(x2d, wr, wg, wu, wd, cfg, comm, tp_comm=None):
+def _dispatch_compute_combine(x2d, wr, wg, wu, wd, cfg, comm, tp_comm=None,
+                              shard_comm=None):
     """Core routed computation on one shard.  x2d: (T_l, d).
 
     ``tp_comm``: expert-TP mode — the expert ff dim is sharded over this
-    axis; the down projection's partial sums are psum'd across it."""
+    axis; the down projection's partial sums are psum'd across it.
+
+    ``shard_comm``: serving-TP mode (activations replicated, expert weights
+    sharded over this axis).  Routing, capacity dropping and the combine all
+    run replicated — identical to the serial path — and only the expert
+    GEMMs are sharded: each rank computes its expert slice of the
+    (replicated) dispatch buffer and one ``all_gather`` restores the full
+    buffer, so each per-expert contraction happens on exactly one rank and
+    the result is bitwise equal to the serial dispatch."""
     T_l, d = x2d.shape
     E, k = cfg.n_experts, cfg.top_k
     ep = comm.size()
@@ -92,6 +101,12 @@ def _dispatch_compute_combine(x2d, wr, wg, wu, wd, cfg, comm, tp_comm=None):
 
     # --- EP exchange: redistribute_work on the torus ------------------------
     buf = comm.all_to_all(buf, split_axis=0, concat_axis=1)          # (E_loc, C*ep, d)
+    if shard_comm is not None:
+        # serving TP: buf is replicated; take my expert rows only
+        n_sh = shard_comm.size()
+        assert wg.shape[0] * n_sh == E_loc, (wg.shape, n_sh, E_loc)
+        buf = jax.lax.dynamic_slice_in_dim(
+            buf, shard_comm.rank() * wg.shape[0], wg.shape[0], axis=0)
 
     # --- expert GEMMs (the only matmul FLOPs in the block) -------------------
     g = jnp.einsum("ecd,edf->ecf", buf, wg.astype(buf.dtype))
@@ -101,6 +116,9 @@ def _dispatch_compute_combine(x2d, wr, wg, wu, wd, cfg, comm, tp_comm=None):
     if tp_comm is not None:
         # expert-TP: ff dim sharded; sum the down-projection partials
         out = tp_comm.all_reduce_sum(out.astype(jnp.float32)).astype(out.dtype)
+    if shard_comm is not None:
+        # rank order == expert order, so the gather is the identity layout
+        out = shard_comm.all_gather(out, axis=0, tiled=True)         # (E_loc, C, d)
 
     # --- return + combine ----------------------------------------------------
     out = comm.all_to_all(out, split_axis=1, concat_axis=0)          # (E, C, d)
@@ -110,6 +128,24 @@ def _dispatch_compute_combine(x2d, wr, wg, wu, wd, cfg, comm, tp_comm=None):
     contrib = gathered * w_sorted[:, None].astype(gathered.dtype)
     y = jnp.zeros((T_l, d), x2d.dtype).at[sorted_tok].add(contrib)
     return y, aux
+
+
+def moe_apply_serve_tp(params, x, cfg, shard_comm: Comm):
+    """MoE block INSIDE a serving-TP ``shard_map`` body.
+
+    Activations are replicated over the ``model`` axis and the expert
+    weights arrive expert-sharded (``gate``/``up``/``down``: (E/tp, ...) per
+    rank; ``router`` replicated).  Routing and the capacity-bounded dispatch
+    replicate the serial ``moe_apply`` math exactly; only the expert GEMMs
+    run sharded (see ``shard_comm`` in :func:`_dispatch_compute_combine`),
+    which keeps greedy token streams bit-identical to the tp=1 engine while
+    cutting per-rank expert FLOPs by tp.
+    """
+    y2d, aux = _dispatch_compute_combine(
+        x.reshape(-1, x.shape[-1]), params["router"], params["gate"],
+        params["up"], params["down"], cfg, SerialComm(),
+        shard_comm=shard_comm)
+    return y2d.reshape(x.shape), aux
 
 
 def moe_apply(params, x, cfg, rules: AxisRules | None):

@@ -15,6 +15,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro.core.comm import SerialComm
 from repro.mesh.axes import AxisRules, constrain
 from repro.models import layers as L
 from repro.models import attention as A
@@ -22,6 +23,11 @@ from repro.models import moe as M
 from repro.models.module import Param
 
 BIG_WINDOW = 1 << 30
+
+# Serving-TP transport default: the serial transport makes every collective
+# the identity, so the single-device paged path below is byte-for-byte the
+# code that ran before the mesh existed (the paper's serial/parallel duality).
+_SERIAL = SerialComm()
 
 
 # ---------------------------------------------------------------------------
@@ -328,12 +334,19 @@ def prefill(params, cfg, rules, tokens=None, inputs_embeds=None,
 # ---------------------------------------------------------------------------
 
 def _paged_block(p, x, cfg, rules, *, positions, k_pages, v_pages, tables,
-                 q_offset, kv_valid, write, use_pallas=False):
+                 q_offset, kv_valid, write, use_pallas=False, comm=_SERIAL):
     """One decoder block against paged KV storage (per-layer page slices).
 
     ``write(sk, sv, k, v) -> (sk, sv)`` commits the fresh K/V into pages —
     a whole-chunk scatter during prefill, a per-slot token scatter during
     decode — so this block stays agnostic of which phase it runs in.
+
+    ``comm`` is the serving-TP transport (Megatron attention/MLP TP inside a
+    ``shard_map`` body): the block then sees its local head / ff / expert
+    shard of the weights and the KV pages, computes attention entirely on
+    local heads, and reassembles the residual stream with one ``psum`` after
+    each of the two projections back to d_model.  The serial transport makes
+    both psums the identity, so this is one code path for both worlds.
     """
     from repro.serve import pages as PG
 
@@ -349,20 +362,24 @@ def _paged_block(p, x, cfg, rules, *, positions, k_pages, v_pages, tables,
         o = A.gqa_attention(q, kg, vg, causal=True, q_offset=q_offset,
                             kv_valid_len=kv_valid,
                             kv_chunk=max(kg.shape[1], 1))
-    x = x + A.out_project(p["attn"], o)
+    x = x + comm.all_reduce_sum(A.out_project(p["attn"], o))
 
     h = L.rmsnorm(p["ln2"], x, use_pallas=cfg.use_pallas)
     if cfg.n_experts:
-        y, _ = M.moe_apply(p["moe"], h, cfg, rules)
+        if comm.axis is not None:
+            # expert-sharded, replicated activations; output already combined
+            y, _ = M.moe_apply_serve_tp(p["moe"], h, cfg, comm)
+        else:
+            y, _ = M.moe_apply(p["moe"], h, cfg, rules)
         if cfg.dense_residual:
-            y = y + L.mlp(p["mlp"], h)
+            y = y + comm.all_reduce_sum(L.mlp(p["mlp"], h))
     else:
-        y = L.mlp(p["mlp"], h)
+        y = comm.all_reduce_sum(L.mlp(p["mlp"], h))
     return x + y, k_pages, v_pages
 
 
 def paged_prefill_chunk(params, cfg, rules, storage, table_row, pages_chunk,
-                        start, tokens):
+                        start, tokens, comm=None):
     """Prefill one page-aligned prompt chunk into paged storage.
 
     storage: {"k","v"} of (L, N, page_size, Hkv, D);  table_row: (P,) the
@@ -372,9 +389,13 @@ def paged_prefill_chunk(params, cfg, rules, storage, table_row, pages_chunk,
     Returns (storage, hidden (1, C, d)).  Chunks attend causally to every
     previously prefilled page, which is what lets long prompts prefill
     incrementally between decode ticks.
+
+    With a mesh ``comm`` (inside ``shard_map``): params/storage arrive
+    head-sharded, hidden stays replicated (see :func:`_paged_block`).
     """
     from repro.serve import pages as PG
     assert not uses_window_cache(cfg), "paged decode is global-attention only"
+    comm = _SERIAL if comm is None else comm
     page_size = storage["k"].shape[2]
     x = embed_tokens(params, tokens, cfg, rules)
     C = x.shape[1]
@@ -391,7 +412,7 @@ def paged_prefill_chunk(params, cfg, rules, storage, table_row, pages_chunk,
         x, sk, sv = _paged_block(p, x, cfg, rules, positions=positions,
                                  k_pages=sk, v_pages=sv, tables=tables,
                                  q_offset=start, kv_valid=start + C,
-                                 write=write)
+                                 write=write, comm=comm)
         return x, (sk, sv)
 
     x, (ks, vs) = jax.lax.scan(body, x, (params["blocks"], storage["k"],
@@ -401,16 +422,22 @@ def paged_prefill_chunk(params, cfg, rules, storage, table_row, pages_chunk,
 
 
 def paged_decode_step(params, cfg, rules, storage, tables, lengths, tokens,
-                      write_pages, write_offs, use_pallas=False):
+                      write_pages, write_offs, use_pallas=False,
+                      comm=None):
     """One token for every slot against paged storage.
 
     tokens: (B, 1);  tables: (B, P);  lengths: (B,) tokens already cached
     (= the current token's position);  write_pages/write_offs: (B,) where
     each slot's new K/V lands (dead slots point at the pool's trash page).
     Returns (storage, logits (B, 1, V)).
+
+    With a mesh ``comm`` (inside ``shard_map``) the unembed arrives
+    vocab-sharded and the local logits are reassembled with a single tiled
+    ``all_gather`` — the one collective at the logits head.
     """
     from repro.serve import pages as PG
     assert not uses_window_cache(cfg), "paged decode is global-attention only"
+    comm = _SERIAL if comm is None else comm
     x = embed_tokens(params, tokens, cfg, rules)
     positions = lengths[:, None]                                # (B, 1)
 
@@ -424,13 +451,15 @@ def paged_decode_step(params, cfg, rules, storage, tables, lengths, tokens,
         x, sk, sv = _paged_block(p, x, cfg, rules, positions=positions,
                                  k_pages=sk, v_pages=sv, tables=tables,
                                  q_offset=lengths, kv_valid=lengths + 1,
-                                 write=write, use_pallas=use_pallas)
+                                 write=write, use_pallas=use_pallas,
+                                 comm=comm)
         return x, (sk, sv)
 
     x, (ks, vs) = jax.lax.scan(body, x, (params["blocks"], storage["k"],
                                          storage["v"]))
     x = L.rmsnorm(params["final_norm"], x, use_pallas=cfg.use_pallas)
-    logits = lm_logits(params, x, cfg, rules)
+    logits = comm.all_gather(lm_logits(params, x, cfg, rules),
+                             axis=-1, tiled=True)
     return {"k": ks, "v": vs}, logits
 
 

@@ -47,7 +47,10 @@ from typing import Callable, Optional
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
 
+from repro.core import comm as CC
+from repro.core.comm import Comm
 from repro.core.runtime import ThreadFarmExecutor
 from repro.serve import pages as PG
 from repro.serve.pages import PagePool
@@ -83,7 +86,8 @@ class ServeEngine:
                  prefill_workers: int = 4, paged: Optional[bool] = None,
                  page_size: int = 16, num_pages: Optional[int] = None,
                  prefill_chunk: int = 64, chunks_per_tick: int = 2,
-                 strict: bool = False, use_pallas_attention: bool = False):
+                 strict: bool = False, use_pallas_attention: bool = False,
+                 mesh=None):
         self.model, self.params, self.rules = model, params, rules
         self.max_slots, self.max_len = max_slots, max_len
         self.strict = strict
@@ -94,6 +98,40 @@ class ServeEngine:
                 f"{model.cfg.name} ({model.cfg.family}) has no paged KV "
                 "cache; construct with paged=False")
         self.paged = bool(paged)
+
+        # -- device mesh (tensor-parallel serving) ---------------------------
+        # ``mesh=None`` keeps every code path byte-identical to the
+        # single-device engine.  With a 1-D ("model",) mesh, paged families
+        # run head-sharded TP under shard_map (params + KV pages partitioned
+        # per ``model.serve_param_specs()`` / ``paged_storage_specs()``);
+        # dense-state families run slot-parallel (params replicated, decode
+        # batch sharded).  The scheduler and page tables stay host-side and
+        # replicated either way.
+        self.mesh = mesh
+        if mesh is not None:
+            if rules is not None:
+                raise ValueError(
+                    "pass either mesh= (serving TP) or rules=, not both")
+            if "model" not in mesh.axis_names:
+                raise ValueError(
+                    f"serving mesh needs a 'model' axis, got {mesh.axis_names}")
+            self.tp = int(mesh.shape["model"])
+            if self.paged:
+                # head-sharded TP: the family's Megatron specs
+                model.validate_serve_tp(self.tp)
+                pspecs = model.serve_param_specs()
+            else:
+                # slot-parallel: the step fn runs unchanged per shard, so
+                # params must be REPLICATED whatever the family's TP specs
+                # would say (a dense-forced DecoderLM included)
+                pspecs = jax.tree_util.tree_map(
+                    lambda a: P(*([None] * jnp.ndim(a))), params)
+            self.params = params = jax.device_put(
+                params, jax.tree_util.tree_map(
+                    lambda s: NamedSharding(mesh, s), pspecs))
+        else:
+            self.tp = 1
+
         self._prefill_farm = ThreadFarmExecutor(
             num_workers=max(1, prefill_workers))
         self.sampler = sampler or (lambda key, logits: greedy(
@@ -109,31 +147,81 @@ class ServeEngine:
         # place (no full-pool copy per tick); CPU has no donation support
         # and would only warn
         donate = () if jax.default_backend() == "cpu" else (1,)
+        rep = P()
         if self.paged:
             if num_pages is None:       # dense-equivalent budget by default
                 num_pages = -(-max_slots * max_len // page_size)
-            self.pool = PagePool(model.paged_leaf_specs(),
-                                 num_pages=num_pages, page_size=page_size)
+            if mesh is None:
+                self.pool = PagePool(model.paged_leaf_specs(),
+                                     num_pages=num_pages, page_size=page_size)
+                self._decode_paged = jax.jit(
+                    lambda p, st, tb, ln, t, wp, wo: model.paged_decode_step(
+                        p, st, tb, ln, t, wp, wo, rules,
+                        use_pallas=use_pallas_attention),
+                    donate_argnums=donate)
+                self._prefill_chunk = jax.jit(
+                    lambda p, st, row, pg, s0, t: model.paged_prefill_chunk(
+                        p, st, row, pg, s0, t, rules),
+                    donate_argnums=donate)
+            else:
+                sspecs = model.paged_storage_specs()
+                self.pool = PagePool(
+                    model.paged_leaf_specs(), num_pages=num_pages,
+                    page_size=page_size,
+                    shardings=jax.tree_util.tree_map(
+                        lambda s: NamedSharding(mesh, s), sspecs,
+                        is_leaf=lambda x: isinstance(x, P)))
+                comm = Comm("model")
+                self._decode_paged = jax.jit(CC.shard_map(
+                    lambda p, st, tb, ln, t, wp, wo: model.paged_decode_step(
+                        p, st, tb, ln, t, wp, wo, None,
+                        use_pallas=use_pallas_attention, comm=comm),
+                    mesh=mesh,
+                    in_specs=(pspecs, sspecs, rep, rep, rep, rep, rep),
+                    out_specs=(sspecs, rep), check_vma=False),
+                    donate_argnums=donate)
+                self._prefill_chunk = jax.jit(CC.shard_map(
+                    lambda p, st, row, pg, s0, t: model.paged_prefill_chunk(
+                        p, st, row, pg, s0, t, None, comm=comm),
+                    mesh=mesh,
+                    in_specs=(pspecs, sspecs, rep, rep, rep, rep),
+                    out_specs=(sspecs, rep), check_vma=False),
+                    donate_argnums=donate)
             self.sched = Scheduler(max_slots=max_slots, max_len=max_len,
                                    pool=self.pool,
                                    prefill_chunk=prefill_chunk,
                                    chunks_per_tick=chunks_per_tick)
-            self._decode_paged = jax.jit(
-                lambda p, st, tb, ln, t, wp, wo: model.paged_decode_step(
-                    p, st, tb, ln, t, wp, wo, rules,
-                    use_pallas=use_pallas_attention),
-                donate_argnums=donate)
-            self._prefill_chunk = jax.jit(
-                lambda p, st, row, pg, s0, t: model.paged_prefill_chunk(
-                    p, st, row, pg, s0, t, rules),
-                donate_argnums=donate)
         else:
             self.pool = None
             self.sched = Scheduler(max_slots=max_slots, max_len=max_len)
-            self.state = model.init_decode_state(max_slots, max_len)
-            self._decode = jax.jit(
-                lambda p, s, t, pos: model.decode_step(p, s, t, pos, rules),
-                donate_argnums=donate)
+            if mesh is None:
+                self._fresh_state = lambda: model.init_decode_state(
+                    max_slots, max_len)
+                self.state = self._fresh_state()
+                self._decode = jax.jit(
+                    lambda p, s, t, pos: model.decode_step(p, s, t, pos,
+                                                           rules),
+                    donate_argnums=donate)
+            else:
+                if max_slots % self.tp:
+                    raise ValueError(
+                        f"slot-parallel serving shards slots over the mesh: "
+                        f"max_slots={max_slots} must divide by tp={self.tp}")
+                st_specs = model.serve_state_specs(max_slots, max_len)
+                st_sh = jax.tree_util.tree_map(
+                    lambda s: NamedSharding(mesh, s), st_specs,
+                    is_leaf=lambda x: isinstance(x, P))
+                self._fresh_state = lambda: jax.device_put(
+                    model.init_decode_state(max_slots, max_len), st_sh)
+                self.state = self._fresh_state()
+                self._decode = jax.jit(CC.shard_map(
+                    lambda p, s, t, pos: model.decode_step(p, s, t, pos,
+                                                           None),
+                    mesh=mesh,
+                    in_specs=(pspecs, st_specs, P("model", None), P("model")),
+                    out_specs=(st_specs, P("model", None, None)),
+                    check_vma=False),
+                    donate_argnums=donate)
             self._prefill = jax.jit(
                 lambda p, b: model.prefill(p, b, rules, max_len))
 
@@ -171,18 +259,24 @@ class ServeEngine:
 
     # -- sampling ------------------------------------------------------------
 
-    def _sample_batch(self, logits_last, slots) -> np.ndarray:
+    def _sample_batch(self, logits_last, slots):
         """Sample every live slot: one batched draw with the engine default,
-        overridden row-wise for requests carrying their own sampler."""
+        overridden row-wise for requests carrying their own sampler.  A
+        per-request sampler that raises is isolated — returns (tokens,
+        [(slot, error), ...]); the engine's own sampler failing raises."""
         self._key, sub = jax.random.split(self._key)
         nxt = np.array(jax.device_get(self.sampler(sub, logits_last)))
+        errors = []
         for slot in slots:
             req = self.sched.slot_req[slot]
             if req is not None and req.sampler is not None:
                 k = jax.random.fold_in(sub, slot)
-                nxt[slot] = int(jax.device_get(req.sampler(
-                    k, logits_last[slot])))
-        return nxt
+                try:
+                    nxt[slot] = int(jax.device_get(req.sampler(
+                        k, logits_last[slot])))
+                except BaseException as e:              # noqa: BLE001
+                    errors.append((slot, e))
+        return nxt, errors
 
     def _sample_one(self, req: Request, logits_row) -> int:
         self._key, sub = jax.random.split(self._key)
@@ -232,11 +326,16 @@ class ServeEngine:
             return f"prompt length {len(r.prompt)} >= max_len {self.max_len}"
         return [(r, ValueError(why(r))) for r in rejects]
 
-    def _commit_decode(self, live, logits) -> None:
-        """Sample + book one decoded token for every live slot."""
+    def _commit_decode(self, live, logits) -> list:
+        """Sample + book one decoded token for every live slot.  Slots
+        whose per-request sampler raised are retired instead (their pages
+        return to the pool); returns their (req, error) pairs."""
         self.stats["ticks"] += 1
-        nxt = self._sample_batch(logits[:, -1], live)
+        nxt, sample_errors = self._sample_batch(logits[:, -1], live)
+        bad = {slot for slot, _ in sample_errors}
         for slot in live:
+            if slot in bad:
+                continue
             req = self.sched.slot_req[slot]
             tok = int(nxt[slot])
             req.output.append(tok)
@@ -244,6 +343,43 @@ class ServeEngine:
             self.sched.lengths[slot] += 1
             self.stats["tokens"] += 1
             self._check_retire(slot, tok)
+        errors = []
+        for slot, e in sample_errors:
+            req = self.sched.slot_req[slot]
+            self.sched.release(slot)
+            errors.append((req, e))
+        return errors
+
+    def _evict_residents(self):
+        """Preempt every resident request — youngest first, so the OLDEST
+        lands back at the queue head and FIFO order resumes intact."""
+        resident = [s for s in range(self.max_slots)
+                    if self.sched.slot_req[s] is not None]
+        for slot in sorted(resident,
+                           key=lambda s: -int(self.sched.admitted_at[s])):
+            self.sched.preempt(slot)
+
+    def _recover_donated_storage(self):
+        """A raising jitted call may already have CONSUMED the donated
+        storage buffers (non-CPU backends donate them for in-place KV
+        updates).  The KV contents are unrecoverable, so evict every
+        resident request — recompute flavor: their generated tokens
+        re-prefill on re-admission, so greedy streams survive — and rebuild
+        zeroed storage with the original shapes/shardings.  On CPU
+        (donation disabled) this is a no-op and the healthy slots keep
+        their caches."""
+        if self.pool is None or not self.pool.storage_deleted():
+            return
+        self._evict_residents()
+        self.pool.reset_storage()
+
+    def _recover_donated_state(self):
+        """Dense-path twin of :meth:`_recover_donated_storage`: a raising
+        donated decode call may have consumed the per-slot state buffers."""
+        if not PG.tree_deleted(self.state):
+            return
+        self._evict_residents()
+        self.state = self._fresh_state()
 
     def _raise_or_record(self, errors):
         """Errored requests are always retired with ``req.error`` set; under
@@ -265,34 +401,42 @@ class ServeEngine:
 
         failed = set()
         for job in self.sched.next_chunks():
-            if job.slot in failed:
+            # skip slots that failed earlier this tick — or whose request
+            # was evicted by a storage recovery (slot freed or re-assigned)
+            if job.slot in failed or self.sched.slot_req[job.slot] is not job.req:
                 continue
+            # the WHOLE per-job path is error-isolated: a request that dies
+            # mid-chunked-prefill — in the device call, the lm head or its
+            # own sampler — must hand every reserved page back to the pool
+            # (release) instead of aborting the tick holding them
             try:
                 storage, hidden = self._prefill_chunk(
                     self.params, self.pool.storage,
                     jnp.asarray(self.sched.table[job.slot]),
                     jnp.asarray(job.pages), np.int32(job.start),
                     jnp.asarray(job.tokens[None]))
+                self.pool.storage = storage
+                self.sched.chunk_done(job)
+                self.stats["chunk_prefills"] += 1
+                if job.is_last:
+                    i = job.n_valid - 1
+                    logits = self.model.lm_head(
+                        self.params, hidden[:, i:i + 1], self.rules)
+                    tok = self._sample_one(job.req, logits[0, -1])
             except BaseException as e:                      # noqa: BLE001
                 failed.add(job.slot)
                 self.sched.release(job.slot)
                 errors.append((job.req, e))
+                self._recover_donated_storage()
                 continue
-            self.pool.storage = storage
-            self.sched.chunk_done(job)
-            self.stats["chunk_prefills"] += 1
             if job.is_last:
-                i = job.n_valid - 1
-                logits = self.model.lm_head(self.params, hidden[:, i:i + 1],
-                                            self.rules)
-                tok = self._sample_one(job.req, logits[0, -1])
                 self._emit_first_token(job.slot, tok)
 
         live = self.sched.live_slots()
         if live:
             self.sched.ensure_decode_pages()    # may preempt the youngest
-            self.stats["preemptions"] = self.sched.preemptions
             live = self.sched.live_slots()
+        self.stats["preemptions"] = self.sched.preemptions
         if live:
             ps = self.pool.page_size
             B = self.max_slots
@@ -306,11 +450,24 @@ class ServeEngine:
                 woffs[slot] = ln % ps
                 lens[slot] = ln
                 toks[slot, 0] = self.last_token[slot]
-            self.pool.storage, logits = self._decode_paged(
-                self.params, self.pool.storage,
-                jnp.asarray(self.sched.table), jnp.asarray(lens),
-                jnp.asarray(toks), jnp.asarray(wpages), jnp.asarray(woffs))
-            self._commit_decode(live, logits)
+            try:
+                self.pool.storage, logits = self._decode_paged(
+                    self.params, self.pool.storage,
+                    jnp.asarray(self.sched.table), jnp.asarray(lens),
+                    jnp.asarray(toks), jnp.asarray(wpages),
+                    jnp.asarray(woffs))
+                errors += self._commit_decode(live, logits)
+            except BaseException:
+                # a decode/commit failure still raises (engine-level, not
+                # one request's fault) — but first un-brick the engine if
+                # the raising call consumed the donated storage (evicted
+                # residents resume recompute-style on the next tick), and
+                # retire this tick's already-released prefill failures so
+                # their clients see req.error instead of a vanished request
+                self._recover_donated_storage()
+                for req, err in errors:
+                    self._retire_error(req, err)
+                raise
 
         self._raise_or_record(errors)
         return bool(live) or self.sched.has_work()
@@ -372,9 +529,15 @@ class ServeEngine:
         if live:
             toks = jnp.asarray(self.last_token.reshape(-1, 1))
             pos = jnp.asarray(self.sched.lengths.astype(np.int32))
-            self.state, logits = self._decode(self.params, self.state, toks,
-                                              pos)
-            self._commit_decode(live, logits)
+            try:
+                self.state, logits = self._decode(self.params, self.state,
+                                                  toks, pos)
+                errors += self._commit_decode(live, logits)
+            except BaseException:
+                self._recover_donated_state()
+                for req, err in errors:
+                    self._retire_error(req, err)
+                raise
 
         self._raise_or_record(errors)
         return bool(live) or self.sched.has_work()

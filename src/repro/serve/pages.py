@@ -50,6 +50,13 @@ def _is_spec(x) -> bool:
     return isinstance(x, PagedLeafSpec)
 
 
+def tree_deleted(tree) -> bool:
+    """True if any array leaf was consumed by a raising donated call
+    (jit donation: the callee took the buffers before failing)."""
+    return any(getattr(leaf, "is_deleted", lambda: False)()
+               for leaf in jax.tree_util.tree_leaves(tree))
+
+
 # extra never-allocated page absorbing dead-slot decode writes; storage is
 # always materialized with ``num_pages + N_TRASH`` pages
 N_TRASH = 1
@@ -63,18 +70,44 @@ class PagePool:
     land in the trash page instead of corrupting a live one.
     """
 
-    def __init__(self, leaf_specs, *, num_pages: int, page_size: int):
+    def __init__(self, leaf_specs, *, num_pages: int, page_size: int,
+                 shardings=None):
+        """``shardings``: optional pytree of ``jax.sharding.Sharding``
+        matching ``leaf_specs`` — mesh serving materializes the KV storage
+        already partitioned (heads over the "model" axis) so no leaf ever
+        exists unsharded on one device."""
         assert num_pages >= 1 and page_size >= 1
         self.leaf_specs = leaf_specs
         self.num_pages = num_pages
         self.page_size = page_size
         self.trash_page = num_pages            # valid index, never allocated
-        self.storage = jax.tree_util.tree_map(
-            lambda s: jnp.zeros(
-                s.storage_shape(num_pages + N_TRASH, page_size), s.dtype),
-            leaf_specs, is_leaf=_is_spec)
+        self._shardings = shardings
+        self.storage = self._fresh_storage()
         self._free: deque[int] = deque(range(num_pages))
         self._high_water = 0
+
+    def _fresh_storage(self):
+        def zeros(s):
+            return jnp.zeros(
+                s.storage_shape(self.num_pages + N_TRASH, self.page_size),
+                s.dtype)
+        if self._shardings is None:
+            return jax.tree_util.tree_map(zeros, self.leaf_specs,
+                                          is_leaf=_is_spec)
+        return jax.tree_util.tree_map(
+            lambda s, sh: jax.device_put(zeros(s), sh),
+            self.leaf_specs, self._shardings, is_leaf=_is_spec)
+
+    def storage_deleted(self) -> bool:
+        """True if any storage buffer was consumed (a jitted call with
+        donation that raised after taking its arguments)."""
+        return tree_deleted(self.storage)
+
+    def reset_storage(self) -> None:
+        """Rebuild zeroed storage with the original shapes/shardings.  The
+        KV *contents* are gone — callers must evict every resident request
+        first (recompute-style re-prefill preserves their streams)."""
+        self.storage = self._fresh_storage()
 
     # -- host-side accounting -------------------------------------------------
 

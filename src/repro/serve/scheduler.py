@@ -103,6 +103,13 @@ class Scheduler:
     def has_work(self) -> bool:
         return bool(self.queue) or any(s != FREE for s in self.status)
 
+    def held_pages(self) -> int:
+        """Pages currently reserved by slots.  The pool conservation
+        invariant — checked by the property tests — is
+        ``pool.pages_free + held_pages() == pool.num_pages`` at every
+        point where control returns to the caller."""
+        return int(self.n_pages.sum()) if self.pool is not None else 0
+
     # -- admission -----------------------------------------------------------
 
     def submit(self, req) -> None:

@@ -237,6 +237,178 @@ def test_chunked_prefill_keeps_decode_flowing():
     assert eng.stats["chunk_prefills"] >= 7
 
 
+# ---------------------------------------------------------------------------
+# Prefill-failure page accounting (regression: a request that errors
+# mid-chunked-prefill must hand every reserved page back to the pool)
+# ---------------------------------------------------------------------------
+
+def _pool_conserved(eng):
+    return (eng.pool.pages_free + eng.sched.held_pages()
+            == eng.pool.num_pages)
+
+
+def test_prefill_sampler_failure_returns_pages():
+    """The last-chunk lm-head/sampler path is error-isolated too: a sampler
+    that raises on the first token retires the request with ``req.error``,
+    frees its pages, and never stalls the other requests."""
+    cfg = smoke_config("qwen2-7b").replace(remat="none")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    eng = ServeEngine(model, params, max_slots=2, max_len=128, paged=True,
+                      page_size=16, prefill_chunk=16)
+
+    def bad_sampler(key, logits):
+        raise RuntimeError("sampler exploded")
+
+    eng.submit(list(range(1, 40)), max_new_tokens=4, sampler=bad_sampler)
+    eng.submit([1, 2, 3], max_new_tokens=3)
+    done = eng.run_until_drained()
+    eng.close()
+    assert _pool_conserved(eng) and eng.pool.pages_free == eng.pool.num_pages
+    bad = [r for r in done if r.error is not None]
+    good = [r for r in done if r.error is None]
+    assert len(bad) == 1 and "sampler exploded" in str(bad[0].error)
+    assert len(good) == 1 and len(good[0].output) == 3
+
+
+def test_prefill_device_failure_mid_chunk_returns_pages():
+    """An error in the Nth prefill chunk's device call releases the slot's
+    whole reservation (pool invariant holds every tick)."""
+    cfg = smoke_config("qwen2-7b").replace(remat="none")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    eng = ServeEngine(model, params, max_slots=2, max_len=128, paged=True,
+                      page_size=16, prefill_chunk=16, chunks_per_tick=1)
+    orig, calls = eng._prefill_chunk, {"n": 0}
+
+    def flaky(*a, **kw):
+        calls["n"] += 1
+        if calls["n"] == 2:
+            raise RuntimeError("injected chunk failure")
+        return orig(*a, **kw)
+
+    eng._prefill_chunk = flaky
+    eng.submit(list(range(1, 50)), max_new_tokens=4)    # 49 tokens: 4 chunks
+    while eng.tick():
+        assert _pool_conserved(eng)
+    eng.close()
+    assert eng.pool.pages_free == eng.pool.num_pages
+    (req,) = eng.finished
+    assert req.error is not None and not req.output
+
+
+def test_prefill_failure_with_donated_storage_recovers():
+    """Non-CPU backends donate the pool storage into the jitted calls, so a
+    call that raises may already have CONSUMED the buffers.  The engine
+    must detect that, evict residents (recompute flavor) and rebuild zeroed
+    storage — the surviving request's greedy stream still matches an
+    unfailed run token for token."""
+    cfg = smoke_config("qwen2-7b").replace(remat="none")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+
+    def run(inject):
+        eng = ServeEngine(model, params, max_slots=2, max_len=128,
+                          paged=True, page_size=16, prefill_chunk=16,
+                          chunks_per_tick=1)
+        if inject:
+            orig, calls = eng._prefill_chunk, {"n": 0}
+
+            def flaky(*a, **kw):
+                calls["n"] += 1
+                if calls["n"] == 3:
+                    for leaf in jax.tree_util.tree_leaves(eng.pool.storage):
+                        leaf.delete()       # simulate consumed donation
+                    raise RuntimeError("injected donated failure")
+                return orig(*a, **kw)
+
+            eng._prefill_chunk = flaky
+        eng.submit([9, 8, 7, 6], max_new_tokens=6)       # resident victim
+        eng.submit(list(range(1, 40)), max_new_tokens=4)  # fails mid-prefill
+        done = eng.run_until_drained()
+        eng.close()
+        assert _pool_conserved(eng)
+        assert eng.pool.pages_free == eng.pool.num_pages
+        assert not eng.pool.storage_deleted()
+        return {len(r.prompt): (r.output, r.error is not None) for r in done}
+
+    want = run(False)
+    got = run(True)
+    assert got[39][1] and not got[39][0]         # failed request, no output
+    assert not want[39][1]
+    assert got[4] == want[4]                     # victim's stream unchanged
+
+
+def test_decode_sampler_failure_is_isolated():
+    """A per-request sampler that works for the first token but raises on a
+    later decode tick retires only that request (req.error set, pages
+    freed); the other live slots keep decoding."""
+    cfg = smoke_config("qwen2-7b").replace(remat="none")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    eng = ServeEngine(model, params, max_slots=2, max_len=128, paged=True,
+                      page_size=16, prefill_chunk=16)
+    calls = {"n": 0}
+
+    def flaky_sampler(key, logits):
+        calls["n"] += 1
+        if calls["n"] >= 3:
+            raise RuntimeError("sampler died mid-decode")
+        return jnp.argmax(logits).astype(jnp.int32)
+
+    eng.submit([5, 17, 33], max_new_tokens=10, sampler=flaky_sampler)
+    eng.submit([1, 2, 3], max_new_tokens=10)
+    done = eng.run_until_drained()
+    eng.close()
+    assert eng.pool.pages_free == eng.pool.num_pages
+    bad = [r for r in done if r.error is not None]
+    good = [r for r in done if r.error is None]
+    assert len(bad) == 1 and "mid-decode" in str(bad[0].error)
+    assert 1 <= len(bad[0].output) < 10          # died after emitting some
+    assert len(good) == 1 and len(good[0].output) == 10
+
+
+def test_decode_failure_with_donated_storage_recovers():
+    """A decode-tick failure still raises (engine-level), but if the
+    raising call consumed the donated storage the engine recovers first:
+    residents are evicted recompute-style, so simply ticking on completes
+    every stream bit-identically to an unfailed run."""
+    cfg = smoke_config("qwen2-7b").replace(remat="none")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+
+    def run(inject):
+        eng = ServeEngine(model, params, max_slots=2, max_len=128,
+                          paged=True, page_size=16, prefill_chunk=16)
+        if inject:
+            orig, calls = eng._decode_paged, {"n": 0}
+
+            def flaky(*a, **kw):
+                calls["n"] += 1
+                if calls["n"] == 2:
+                    for leaf in jax.tree_util.tree_leaves(eng.pool.storage):
+                        leaf.delete()
+                    raise RuntimeError("injected decode failure")
+                return orig(*a, **kw)
+
+            eng._decode_paged = flaky
+        eng.submit([9, 8, 7, 6], max_new_tokens=6)
+        eng.submit([5, 4, 3], max_new_tokens=6)
+        if inject:
+            with pytest.raises(RuntimeError, match="injected"):
+                eng.run_until_drained()
+            assert not eng.pool.storage_deleted()    # recovered already
+        done = eng.run_until_drained()
+        eng.close()
+        assert _pool_conserved(eng)
+        return {len(r.prompt): r.output for r in done}, eng
+
+    want, _ = run(False)
+    got, eng = run(True)
+    assert got == want
+    assert eng.stats["preemptions"] >= 1
+
+
 def test_paged_state_specs_match_pool_storage():
     cfg = smoke_config("qwen2-7b").replace(remat="none")
     model = build_model(cfg)

@@ -1,0 +1,127 @@
+"""Property-based scheduler tests (hypothesis, or the deterministic stub in
+``tests/_hypothesis_stub.py`` when the real package is absent).
+
+Random admit / chunk / decode / preempt / retire interleavings must uphold
+the serving-policy invariants the engine relies on:
+
+* **page conservation** — ``pool.pages_free + held == num_pages`` after
+  every scheduler call, with held/free page ids forming an exact partition
+  of the pool (no page double-held, none lost), including across
+  preemption;
+* **FIFO admission** — a request is never first-admitted before an
+  earlier-submitted request (the queue head blocks, it is never skipped);
+* **free slots hold nothing** — a FREE slot owns zero pages.
+"""
+import numpy as np
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from repro.serve.pages import PagePool, PagedLeafSpec
+from repro.serve.scheduler import FREE, LIVE, Scheduler
+
+NUM_PAGES, PAGE_SIZE, SLOTS, MAX_LEN = 8, 4, 3, 32
+
+
+class _Req:
+    def __init__(self, rid, n):
+        self.rid = rid
+        self.prompt = np.arange(n, dtype=np.int32)
+        self.output: list = []
+
+
+def _make():
+    pool = PagePool({"k": PagedLeafSpec((1,), (1, 1), jnp.float32)},
+                    num_pages=NUM_PAGES, page_size=PAGE_SIZE)
+    sched = Scheduler(max_slots=SLOTS, max_len=MAX_LEN, pool=pool,
+                      prefill_chunk=PAGE_SIZE, chunks_per_tick=2)
+    return pool, sched
+
+
+def _check_invariants(pool, s):
+    held = s.held_pages()
+    assert pool.pages_free + held == pool.num_pages, \
+        f"leak: free={pool.pages_free} held={held} total={pool.num_pages}"
+    held_ids = [int(p) for slot in range(s.max_slots)
+                for p in s.table[slot, :int(s.n_pages[slot])]]
+    assert sorted(held_ids + [int(p) for p in pool._free]) == \
+        list(range(pool.num_pages)), "page ids no longer partition the pool"
+    for slot in range(s.max_slots):
+        if s.status[slot] == FREE:
+            assert int(s.n_pages[slot]) == 0, "FREE slot owns pages"
+
+
+def _drive(actions, plens):
+    """Interpret (action, payload) int streams against a fresh scheduler,
+    checking the invariants after every step.  Returns the first-admission
+    rid sequence for the FIFO property."""
+    pool, s = _make()
+    rid = iter(range(1_000_000))
+    for n in plens:
+        s.submit(_Req(next(rid), n))
+    first_admits, seen = [], set()
+    n_late = 0
+    for a in actions:
+        if a == 0:                      # admit from the queue
+            admits, _ = s.admit()
+            for _slot, req in admits:
+                if req.rid not in seen:
+                    seen.add(req.rid)
+                    first_admits.append(req.rid)
+        elif a == 1:                    # run one tick's prefill chunks
+            for job in s.next_chunks():
+                s.chunk_done(job)
+        elif a == 2:                    # decode tick: grow + take pages
+            for slot in s.live_slots():
+                if int(s.lengths[slot]) < s.max_len - 1:
+                    s.lengths[slot] += 1
+            try:
+                s.ensure_decode_pages()
+            except RuntimeError:
+                pass                    # single-resident pool exhaustion
+        elif a == 3:                    # retire the oldest live request
+            live = s.live_slots()
+            if live:
+                s.release(min(live, key=lambda sl: s.admitted_at[sl]))
+        elif a == 4:                    # forced preemption of the youngest
+            resident = [sl for sl in range(s.max_slots)
+                        if s.status[sl] != FREE]
+            if len(resident) > 1:
+                s.preempt(max(resident, key=lambda sl: s.admitted_at[sl]))
+                _check_invariants(pool, s)   # conservation across preemption
+        else:                           # a == 5: late submission
+            n_late += 1                 # vary lengths across late arrivals
+            s.submit(_Req(next(rid), 1 + (n_late * 7) % (MAX_LEN // 2)))
+        _check_invariants(pool, s)
+    return first_admits, pool, s
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.lists(st.integers(0, 5), min_size=1, max_size=60),
+       st.lists(st.integers(1, 20), min_size=1, max_size=8))
+def test_scheduler_never_leaks_pages(actions, plens):
+    _drive(actions, plens)
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.lists(st.integers(0, 5), min_size=1, max_size=60),
+       st.lists(st.integers(1, 20), min_size=1, max_size=8))
+def test_scheduler_fifo_first_admission(actions, plens):
+    """First admissions happen in submission order: re-admissions of
+    preempted requests may jump the queue (by design — they re-enter at the
+    head), but a NEW request never overtakes an older waiting one."""
+    first_admits, _, _ = _drive(actions, plens)
+    assert first_admits == sorted(first_admits)
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.lists(st.integers(0, 5), min_size=10, max_size=60),
+       st.lists(st.integers(1, 20), min_size=2, max_size=8))
+def test_scheduler_drain_returns_every_page(actions, plens):
+    """Releasing everything that remains resident after a random run
+    restores the full pool — nothing is retained by dead bookkeeping."""
+    _, pool, s = _drive(actions, plens)
+    for slot in range(s.max_slots):
+        if s.status[slot] != FREE:
+            s.release(slot)
+    assert pool.pages_free == pool.num_pages
+    assert s.held_pages() == 0
