@@ -55,6 +55,12 @@ def main():
     ap.add_argument("--num-pages", type=int, default=None,
                     help="pool size (default: dense-equivalent budget)")
     ap.add_argument("--prefill-chunk", type=int, default=64)
+    ap.add_argument("--prefix-cache", choices=("on", "off"), default="on",
+                    help="cross-request KV reuse: refcounted pages + radix "
+                    "prefix index + copy-on-write (paged path only)")
+    ap.add_argument("--shared-prefix", type=int, default=24, metavar="L",
+                    help="prepend an L-token common prefix to every prompt "
+                    "(a shared system prompt; 0 disables)")
     ap.add_argument("--mesh", default=None, metavar="tp=N",
                     help="serve tensor-parallel over an N-device "
                     "('model',) mesh")
@@ -71,20 +77,24 @@ def main():
                       max_len=args.max_len,
                       paged=False if args.dense else None,
                       page_size=args.page_size, num_pages=args.num_pages,
-                      prefill_chunk=args.prefill_chunk, mesh=mesh)
+                      prefill_chunk=args.prefill_chunk,
+                      prefix_cache=args.prefix_cache == "on", mesh=mesh)
 
     rng = np.random.default_rng(0)
+    shared = rng.integers(0, cfg.vocab, args.shared_prefix)
     t0 = time.perf_counter()
     for i in range(args.requests):
         plen = int(rng.integers(4, 48))
-        eng.submit(rng.integers(0, cfg.vocab, plen), max_new_tokens=args.max_new)
+        prompt = np.concatenate([shared, rng.integers(0, cfg.vocab, plen)])
+        eng.submit(prompt, max_new_tokens=args.max_new)
     done = eng.run_until_drained()
     dt = time.perf_counter() - t0
     toks = sum(len(r.output) for r in done)
     ttfts = [r.first_token_at - r.submitted_at for r in done]
     mode = "dense" if not eng.paged else (
         f"paged(ps={eng.pool.page_size}, "
-        f"hw={eng.pool.high_water}/{eng.pool.num_pages} pages)")
+        f"hw={eng.stats['pages_high_water']}/{eng.pool.num_pages} pages, "
+        f"prefix-cache {args.prefix_cache})")
     if mesh is not None:
         mode += f" tp={eng.tp}"
     print(f"[serve] {len(done)} requests, {toks} tokens in {dt:.2f}s "
@@ -92,6 +102,12 @@ def main():
           f"chunks={eng.stats['chunk_prefills']} "
           f"preempt={eng.stats['preemptions']} [{mode}] "
           f"mean TTFT {np.mean(ttfts)*1e3:.0f}ms")
+    if eng.paged:
+        s = eng.stats
+        print(f"[serve] prefix cache: hits={s['prefix_hits']} "
+              f"hit_tokens={s['prefix_hit_tokens']} "
+              f"cow_copies={s['cow_copies']} evictions={s['evictions']} "
+              f"cached_now={eng.pool.pages_cached} pages")
 
 
 if __name__ == "__main__":

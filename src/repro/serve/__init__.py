@@ -1,4 +1,4 @@
-from repro.serve.pages import PagePool, PagedLeafSpec
+from repro.serve.pages import PagePool, PagedLeafSpec, PrefixCache
 from repro.serve.sampling import (greedy, sample_temperature, sample_top_k,
                                   sample_top_p)
 from repro.serve.scheduler import Scheduler

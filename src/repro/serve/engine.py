@@ -9,15 +9,18 @@ instead of ``max_slots x max_len``.
 
 Layering (see README "Serving architecture"):
 
-* :mod:`repro.serve.pages`   — `PagePool` storage + pure scatter/gather
-  device ops; model-agnostic (parameterized by each model's cache leaf
-  specs).
-* :mod:`repro.serve.scheduler` — host-side policy: FIFO admission with
-  all-or-nothing page reservation, **chunked prefill** (long prompts
-  prefill in page-aligned chunks interleaved with decode ticks, so one 2k
-  prompt never stalls token emission for live slots), and preemption of
-  the youngest request when the pool runs dry (recompute-style: generated
-  tokens are re-prefilled on re-admission, preserving greedy streams).
+* :mod:`repro.serve.pages`   — refcounted `PagePool` storage + radix
+  `PrefixCache` + pure scatter/gather/copy device ops; model-agnostic
+  (parameterized by each model's cache leaf specs).
+* :mod:`repro.serve.scheduler` — host-side policy: FIFO admission that
+  matches the longest cached prompt prefix and reserves only the uncached
+  remainder (all-or-nothing), **chunked prefill** starting at the match
+  boundary (long prompts prefill in page-aligned chunks interleaved with
+  decode ticks, so one 2k prompt never stalls token emission for live
+  slots), **copy-on-write** when a decode write targets a shared page,
+  and preemption of the youngest request when the pool runs dry
+  (recompute-style: generated tokens are re-prefilled on re-admission,
+  preserving greedy streams; full clean pages park in the prefix cache).
 * this module — pure execution: jitted device calls driven by the
   scheduler's plan.  ``paged_decode_step`` writes each slot's token K/V
   through (page, offset) targets and attends through the page table
@@ -65,6 +68,11 @@ class Request:
     max_new_tokens: int = 32
     eos_id: Optional[int] = None
     sampler: Optional[Callable] = None     # per-request (key, logits) -> tok
+    seed: Optional[int] = None             # per-request RNG stream: token i
+    #                                        is sampled with
+    #                                        fold_in(PRNGKey(seed), i), so a
+    #                                        sampled stream reproduces
+    #                                        independent of admission order
     # filled by the engine:
     output: list = dataclasses.field(default_factory=list)
     submitted_at: float = 0.0
@@ -86,6 +94,7 @@ class ServeEngine:
                  prefill_workers: int = 4, paged: Optional[bool] = None,
                  page_size: int = 16, num_pages: Optional[int] = None,
                  prefill_chunk: int = 64, chunks_per_tick: int = 2,
+                 prefix_cache: bool = True,
                  strict: bool = False, use_pallas_attention: bool = False,
                  mesh=None):
         self.model, self.params, self.rules = model, params, rules
@@ -98,6 +107,7 @@ class ServeEngine:
                 f"{model.cfg.name} ({model.cfg.family}) has no paged KV "
                 "cache; construct with paged=False")
         self.paged = bool(paged)
+        self.prefix_cache = bool(prefix_cache) and self.paged
 
         # -- device mesh (tensor-parallel serving) ---------------------------
         # ``mesh=None`` keeps every code path byte-identical to the
@@ -141,7 +151,9 @@ class ServeEngine:
         self._rid = itertools.count()
         self._key = jax.random.PRNGKey(0)
         self.stats = {"ticks": 0, "tokens": 0, "prefills": 0,
-                      "chunk_prefills": 0, "preemptions": 0}
+                      "chunk_prefills": 0, "preemptions": 0,
+                      "prefix_hits": 0, "prefix_hit_tokens": 0,
+                      "cow_copies": 0, "evictions": 0, "pages_high_water": 0}
 
         # donate the state/storage argument so XLA updates the KV buffers in
         # place (no full-pool copy per tick); CPU has no donation support
@@ -151,9 +163,15 @@ class ServeEngine:
         if self.paged:
             if num_pages is None:       # dense-equivalent budget by default
                 num_pages = -(-max_slots * max_len // page_size)
+            cow_donate = () if jax.default_backend() == "cpu" else (0,)
             if mesh is None:
                 self.pool = PagePool(model.paged_leaf_specs(),
-                                     num_pages=num_pages, page_size=page_size)
+                                     num_pages=num_pages, page_size=page_size,
+                                     prefix_cache=self.prefix_cache)
+                self._cow_copy = jax.jit(
+                    lambda st, s, d: PG.copy_pages(st, self.pool.leaf_specs,
+                                                   s, d),
+                    donate_argnums=cow_donate)
                 self._decode_paged = jax.jit(
                     lambda p, st, tb, ln, t, wp, wo: model.paged_decode_step(
                         p, st, tb, ln, t, wp, wo, rules,
@@ -170,8 +188,17 @@ class ServeEngine:
                     page_size=page_size,
                     shardings=jax.tree_util.tree_map(
                         lambda s: NamedSharding(mesh, s), sspecs,
-                        is_leaf=lambda x: isinstance(x, P)))
+                        is_leaf=lambda x: isinstance(x, P)),
+                    prefix_cache=self.prefix_cache)
                 comm = Comm("model")
+                # COW copies move whole pages along the (replicated) page
+                # axis — each shard copies its local heads independently
+                self._cow_copy = jax.jit(CC.shard_map(
+                    lambda st, s, d: PG.copy_pages(st, self.pool.leaf_specs,
+                                                   s, d),
+                    mesh=mesh, in_specs=(sspecs, rep, rep),
+                    out_specs=sspecs, check_vma=False),
+                    donate_argnums=cow_donate)
                 self._decode_paged = jax.jit(CC.shard_map(
                     lambda p, st, tb, ln, t, wp, wo: model.paged_decode_step(
                         p, st, tb, ln, t, wp, wo, None,
@@ -245,41 +272,56 @@ class ServeEngine:
 
     def submit(self, prompt, max_new_tokens: int = 32,
                eos_id: Optional[int] = None,
-               sampler: Optional[Callable] = None) -> int:
+               sampler: Optional[Callable] = None,
+               seed: Optional[int] = None) -> int:
         prompt = np.asarray(prompt, np.int32)
         if len(prompt) >= self.max_len:
             # reject at the source: an oversized prompt can never decode
             raise ValueError(
                 f"prompt length {len(prompt)} >= max_len {self.max_len}")
         req = Request(next(self._rid), prompt, max_new_tokens, eos_id,
-                      sampler)
+                      sampler, seed)
         req.submitted_at = time.perf_counter()
         self.sched.submit(req)
         return req.rid
 
     # -- sampling ------------------------------------------------------------
 
+    @staticmethod
+    def _seeded_key(req: Request):
+        """A seeded request's key for its NEXT token depends only on
+        (seed, tokens emitted so far) — never on tick count, slot id or
+        admission order, so sampled streams reproduce run to run."""
+        return jax.random.fold_in(jax.random.PRNGKey(req.seed),
+                                  len(req.output))
+
     def _sample_batch(self, logits_last, slots):
         """Sample every live slot: one batched draw with the engine default,
-        overridden row-wise for requests carrying their own sampler.  A
-        per-request sampler that raises is isolated — returns (tokens,
-        [(slot, error), ...]); the engine's own sampler failing raises."""
+        overridden row-wise for requests carrying their own sampler and/or
+        seed.  A per-row draw that raises is isolated — returns (tokens,
+        [(slot, error), ...]); the engine's own batched sampler failing
+        raises."""
         self._key, sub = jax.random.split(self._key)
         nxt = np.array(jax.device_get(self.sampler(sub, logits_last)))
         errors = []
         for slot in slots:
             req = self.sched.slot_req[slot]
-            if req is not None and req.sampler is not None:
-                k = jax.random.fold_in(sub, slot)
-                try:
-                    nxt[slot] = int(jax.device_get(req.sampler(
-                        k, logits_last[slot])))
-                except BaseException as e:              # noqa: BLE001
-                    errors.append((slot, e))
+            if req is None or (req.sampler is None and req.seed is None):
+                continue
+            k = self._seeded_key(req) if req.seed is not None \
+                else jax.random.fold_in(sub, slot)
+            fn = req.sampler or self.sampler
+            try:
+                nxt[slot] = int(jax.device_get(fn(k, logits_last[slot])))
+            except BaseException as e:              # noqa: BLE001
+                errors.append((slot, e))
         return nxt, errors
 
     def _sample_one(self, req: Request, logits_row) -> int:
-        self._key, sub = jax.random.split(self._key)
+        if req.seed is not None:
+            sub = self._seeded_key(req)
+        else:
+            self._key, sub = jax.random.split(self._key)
         fn = req.sampler or self.sampler
         return int(jax.device_get(fn(sub, logits_row)))
 
@@ -433,9 +475,15 @@ class ServeEngine:
                 self._emit_first_token(job.slot, tok)
 
         live = self.sched.live_slots()
+        cow = []
         if live:
-            self.sched.ensure_decode_pages()    # may preempt the youngest
+            # may preempt the youngest and/or schedule copy-on-write moves
+            _, cow = self.sched.ensure_decode_pages()
             live = self.sched.live_slots()
+            # a COW'd slot preempted later in the same pass already gave
+            # its copy page back — don't write into it
+            cow = [(s, a, b) for s, a, b in cow
+                   if self.sched.slot_req[s] is not None]
         self.stats["preemptions"] = self.sched.preemptions
         if live:
             ps = self.pool.page_size
@@ -451,6 +499,11 @@ class ServeEngine:
                 lens[slot] = ln
                 toks[slot, 0] = self.last_token[slot]
             try:
+                if cow:         # copies strictly before this tick's writes
+                    self.pool.storage = self._cow_copy(
+                        self.pool.storage,
+                        jnp.asarray([a for _, a, _ in cow], jnp.int32),
+                        jnp.asarray([b for _, _, b in cow], jnp.int32))
                 self.pool.storage, logits = self._decode_paged(
                     self.params, self.pool.storage,
                     jnp.asarray(self.sched.table), jnp.asarray(lens),
@@ -469,6 +522,12 @@ class ServeEngine:
                     self._retire_error(req, err)
                 raise
 
+        self.stats.update(
+            prefix_hits=self.sched.prefix_hits,
+            prefix_hit_tokens=self.sched.prefix_hit_tokens,
+            cow_copies=self.sched.cow_copies,
+            evictions=self.pool.evictions,
+            pages_high_water=self.pool.high_water)
         self._raise_or_record(errors)
         return bool(live) or self.sched.has_work()
 

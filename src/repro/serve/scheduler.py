@@ -7,22 +7,33 @@ functions and farm machinery.  The scheduler never touches device arrays;
 it hands the engine a plan (admissions, prefill chunk jobs, page/offset
 targets) and the engine reports back what actually ran.
 
-Three mechanisms:
+Four mechanisms:
 
-* **Admission** — FIFO from the queue into free slots.  In paged mode a
-  request is admitted only when the pool can cover its whole prompt plus
-  the first decode token (allocate-all-or-nothing keeps admission
-  deterministic and starvation-free: the queue head blocks until pages
-  drain).
-* **Chunked prefill** — prompts prefill in fixed-size, page-aligned chunks
-  interleaved with decode ticks, so a 2k-token prompt no longer stalls
-  token emission for live slots.  ``chunks_per_tick`` bounds prefill
-  compute per tick; chunks round-robin across prefilling slots.
+* **Admission with prefix reuse** — FIFO from the queue into free slots.
+  In paged mode the longest cached prefix of the prompt is matched in the
+  pool's radix index first (those pages are incref'd, not copied) and only
+  the *uncached remainder* is allocated all-or-nothing — deterministic and
+  starvation-free: the queue head blocks until pages drain.
+* **Chunked prefill from the match boundary** — prompts prefill in
+  fixed-size, page-aligned chunks interleaved with decode ticks; fully
+  cached pages are skipped entirely (chunking starts where the match
+  ends).  When the WHOLE prompt is cached, one *replay* chunk recomputes
+  the last page's positions with its K/V writes routed to the trash page —
+  attention reads the shared pages, producing the first-token logits
+  without recomputing (or mutating) anything cached.  ``chunks_per_tick``
+  bounds prefill compute per tick; chunks round-robin across slots.
+* **Copy-on-write decode** — a decode write targeting a page with
+  refcount > 1 first copies it into a fresh exclusive page (the sharer
+  keeps the original); targeting a *registered* page this slot holds alone
+  just unregisters it and writes in place.  A shared page is never
+  mutated.
 * **Preemption on page exhaustion** — when a live slot needs a fresh page
-  and the pool is dry, the youngest-admitted request is evicted
-  (vLLM-style recompute: its pages are freed and it re-enters the queue
-  head; on re-admission it re-prefills prompt *plus* tokens generated so
-  far, which preserves greedy token streams exactly).
+  and the pool is dry (after LRU eviction of unreferenced cached pages),
+  the youngest-admitted request is evicted (vLLM-style recompute: its
+  references are dropped — full clean pages park in the prefix cache —
+  and it re-enters the queue head; on re-admission it re-prefills prompt
+  *plus* tokens generated so far, usually re-matching its own parked
+  pages, which preserves greedy token streams exactly).
 """
 from __future__ import annotations
 
@@ -74,6 +85,9 @@ class Scheduler:
         self._admit_seq = 0
         self._rr = 0
         self.preemptions = 0
+        self.prefix_hits = 0
+        self.prefix_hit_tokens = 0
+        self.cow_copies = 0
         self.chunks_per_tick = max(1, chunks_per_tick)
         if pool is not None:
             ps = pool.page_size
@@ -86,6 +100,7 @@ class Scheduler:
                     f"max_len={max_len} request ({self.pages_per_slot} pages)")
             self.table = np.zeros((max_slots, self.pages_per_slot), np.int32)
             self.n_pages = np.zeros(max_slots, np.int64)
+            self.replay = np.zeros(max_slots, bool)
         else:
             self.page_size = None
             self.prefill_chunk = prefill_chunk
@@ -104,9 +119,11 @@ class Scheduler:
         return bool(self.queue) or any(s != FREE for s in self.status)
 
     def held_pages(self) -> int:
-        """Pages currently reserved by slots.  The pool conservation
-        invariant — checked by the property tests — is
-        ``pool.pages_free + held_pages() == pool.num_pages`` at every
+        """Page *references* currently held by slots (a page shared by k
+        slots counts k times — it equals the sum of pool refcounts).  The
+        conservation invariant — checked by the property tests — is
+        ``pool.pages_free + pool.pages_cached + pool.pages_in_use ==
+        pool.num_pages`` with ``held_pages() == sum of refcounts`` at every
         point where control returns to the caller."""
         return int(self.n_pages.sum()) if self.pool is not None else 0
 
@@ -126,26 +143,46 @@ class Scheduler:
             if self.status[slot] != FREE:
                 continue
             req = self.queue[0]
-            total = len(prefill_tokens(req))
+            toks = prefill_tokens(req)
+            total = len(toks)
             if total == 0 or total >= self.max_len:
                 # can never prefill: nothing to chunk / no room to decode
                 self.queue.pop(0)
                 rejects.append(req)
                 continue
+            cached_tok = 0
             if self.pool is not None:
                 # pages for every prefill position (padded to page_size)
                 # plus the first decode token: ceil((total + 1) / page_size)
-                need = (total + self.page_size) // self.page_size
-                pages = self.pool.alloc(need)
-                if pages is None:
+                ps = self.page_size
+                need = (total + ps) // ps
+                cached: list[int] = []
+                if self.pool.prefix is not None:
+                    cached, cached_tok = self.pool.prefix.match(toks)
+                # incref BEFORE allocating the tail so the eviction the
+                # alloc may trigger can never take our matched pages
+                self.pool.incref(cached)
+                tail = self.pool.alloc(need - len(cached))
+                if tail is None:
+                    self.pool.decref(cached)    # back to parked / shared
                     break                       # queue head waits for pages
-                self.table[slot, :need] = pages
+                self.table[slot, :need] = cached + tail
                 self.n_pages[slot] = need
+                self.replay[slot] = cached_tok == total
+                if cached_tok:
+                    self.prefix_hits += 1
+                    self.prefix_hit_tokens += cached_tok
             self.queue.pop(0)
             self.status[slot] = PREFILL
             self.slot_req[slot] = req
             self.lengths[slot] = 0
-            self.prefill_done[slot] = 0
+            # chunking starts at the match boundary (page-aligned); a fully
+            # cached prompt still replays its last page for the first-token
+            # logits (writes routed to the trash page — see _make_job)
+            if self.pool is not None and self.replay[slot]:
+                self.prefill_done[slot] = (total - 1) // ps * ps
+            else:
+                self.prefill_done[slot] = cached_tok
             self.prefill_total[slot] = total
             self.admitted_at[slot] = self._admit_seq
             self._admit_seq += 1
@@ -172,7 +209,14 @@ class Scheduler:
         pages = None
         if self.pool is not None:
             ps = self.page_size
-            pages = self.table[slot, start // ps:(start + C) // ps].copy()
+            if self.replay[slot]:
+                # fully cached prompt: recompute the last page's positions
+                # for their logits but write the (identical) K/V to the
+                # trash page — the shared pages are read-only to us
+                pages = np.full((start + C) // ps - start // ps,
+                                self.pool.trash_page, np.int32)
+            else:
+                pages = self.table[slot, start // ps:(start + C) // ps].copy()
         return ChunkJob(slot=slot, req=req, tokens=toks, start=start,
                         n_valid=valid, pages=pages,
                         is_last=start + C >= padded, total=total)
@@ -204,41 +248,96 @@ class Scheduler:
             self._rr = (jobs[-1].slot + 1) % self.max_slots
         return jobs
 
+    def _register_pages(self, slot: int, valid: int, start: int = 0) -> None:
+        """Insert every FULL page in ``[start, valid)`` whose content is
+        final (all ``page_size`` positions written with known tokens) into
+        the prefix index.  First registration wins.  Callers pass ``start``
+        to cover only newly-written pages — earlier ones were registered
+        when their chunk committed (or came from the cache)."""
+        pool = self.pool
+        if pool is None or pool.prefix is None:
+            return
+        req = self.slot_req[slot]
+        if req is None:
+            return
+        toks = prefill_tokens(req)
+        for i in range(start // self.page_size,
+                       min(valid, len(toks)) // self.page_size):
+            pool.prefix.insert(toks, i, int(self.table[slot, i]))
+
     def chunk_done(self, job: ChunkJob) -> None:
         slot = job.slot
         self.prefill_done[slot] = job.start + len(job.tokens)
+        if self.pool is not None and not self.replay[slot]:
+            self._register_pages(slot, job.start + job.n_valid,
+                                 start=job.start)
         if job.is_last:
             self.status[slot] = LIVE
             self.lengths[slot] = job.total
 
-    # -- decode page accounting + preemption ---------------------------------
+    # -- decode page accounting: growth, COW, preemption ---------------------
 
-    def ensure_decode_pages(self) -> list[tuple[int, object]]:
-        """Guarantee every live slot owns the page for its next token,
-        preempting the youngest-admitted request when the pool runs dry.
-        Returns the preempted (slot, req) pairs."""
+    def _alloc_or_preempt(self, slot: int,
+                          preempted: list) -> Optional[list[int]]:
+        """One page for ``slot``, preempting youngest-admitted requests
+        (never ``slot`` itself) until the pool yields.  Returns None only
+        in the COW retry loop's favor: after a preemption the caller must
+        re-check sharing, since the victim's release may have dropped the
+        refcount that made the copy necessary."""
+        page = self.pool.alloc(1)
+        if page is not None:
+            return page
+        victim = self._youngest_victim(exclude=slot)
+        if victim is None:
+            raise RuntimeError(
+                "page pool exhausted with a single request resident; "
+                "num_pages is too small for max_len")
+        preempted.append((victim, self.preempt(victim)))
+        return None
+
+    def ensure_decode_pages(self) -> tuple[list[tuple[int, object]],
+                                           list[tuple[int, int, int]]]:
+        """Guarantee every live slot owns — *exclusively* — the page its
+        next token writes into, preempting the youngest-admitted request
+        when the pool runs dry.  Three cases per slot: the write crosses
+        into a fresh page (allocate), the write targets a page shared with
+        another holder (copy-on-write: allocate a copy, drop our reference
+        to the original), or it targets a registered page we hold alone
+        (unregister and write in place — no copy needed).  Returns
+        (preempted (slot, req) pairs, COW (slot, src_page, dst_page)
+        triples whose device copies the engine must apply before the
+        decode step)."""
         if self.pool is None:
-            return []
+            return [], []
         preempted: list[tuple[int, object]] = []
+        cow: list[tuple[int, int, int]] = []
         order = sorted(self.live_slots(), key=lambda s: self.admitted_at[s])
         for slot in order:
             if self.status[slot] != LIVE:       # preempted earlier this pass
                 continue
             idx = int(self.lengths[slot]) // self.page_size
-            if idx < int(self.n_pages[slot]):
-                continue
-            page = self.pool.alloc(1)
-            while page is None:
-                victim = self._youngest_victim(exclude=slot)
-                if victim is None:
-                    raise RuntimeError(
-                        "page pool exhausted with a single request resident; "
-                        "num_pages is too small for max_len")
-                preempted.append((victim, self.preempt(victim)))
-                page = self.pool.alloc(1)
-            self.table[slot, idx] = page[0]
-            self.n_pages[slot] += 1
-        return preempted
+            if idx >= int(self.n_pages[slot]):
+                page = None
+                while page is None:
+                    page = self._alloc_or_preempt(slot, preempted)
+                self.table[slot, idx] = page[0]
+                self.n_pages[slot] += 1
+                continue                        # fresh page: exclusive
+            p = int(self.table[slot, idx])
+            while self.pool.ref(p) > 1:         # shared: copy before writing
+                dst = self._alloc_or_preempt(slot, preempted)
+                if dst is None:
+                    continue        # a victim released; re-check the ref
+                cow.append((slot, p, dst[0]))
+                self.pool.decref([p])           # sharers keep the original
+                self.table[slot, idx] = dst[0]
+                self.cow_copies += 1
+                p = dst[0]
+            if self.pool.prefix is not None and p in self.pool.prefix:
+                # sole holder of a registered page: writing would corrupt
+                # future matches — drop it (and descendants) from the index
+                self.pool.unregister(p)
+        return preempted, cow
 
     def _youngest_victim(self, exclude: int) -> Optional[int]:
         cands = [s for s in range(self.max_slots)
@@ -248,10 +347,11 @@ class Scheduler:
         return max(cands, key=lambda s: self.admitted_at[s])
 
     def preempt(self, slot: int):
-        """Evict a request (recompute flavor): free its pages, requeue it at
-        the head.  Generated tokens stay on ``req.output`` and are
-        re-prefilled on re-admission, so its token stream continues
-        exactly where it stopped."""
+        """Evict a request (recompute flavor): drop its page references,
+        requeue it at the head.  Generated tokens stay on ``req.output``
+        and are re-prefilled on re-admission — usually re-matching the
+        pages it just parked — so its token stream continues exactly where
+        it stopped."""
         req = self.slot_req[slot]
         self.release(slot)
         self.queue.insert(0, req)
@@ -259,12 +359,24 @@ class Scheduler:
         return req
 
     def release(self, slot: int) -> None:
-        """Walker ``delete``: the slot's capacity returns to the pool."""
+        """Walker ``delete``: the slot's page references return to the
+        pool.  Full clean pages (every position written with known tokens)
+        are registered first, so decref *parks* them in the prefix cache —
+        a retired request's prompt stays matchable — while partial or
+        shared-elsewhere pages take their usual decref path (free list /
+        still held by the other sharers)."""
         if self.pool is not None and self.n_pages[slot]:
             n = int(self.n_pages[slot])
-            self.pool.free(self.table[slot, :n].tolist())
+            if self.status[slot] == LIVE:
+                valid = int(self.lengths[slot])
+            else:       # mid-prefill: only committed chunks hold real K/V
+                valid = min(int(self.prefill_done[slot]),
+                            int(self.prefill_total[slot]))
+            self._register_pages(slot, valid)
+            self.pool.decref(self.table[slot, :n].tolist())
             self.table[slot, :n] = 0
             self.n_pages[slot] = 0
+            self.replay[slot] = False
         self.status[slot] = FREE
         self.slot_req[slot] = None
         self.lengths[slot] = 0

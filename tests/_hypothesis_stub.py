@@ -42,8 +42,12 @@ def lists(elements, *, min_size=0, max_size=10):
                      lambda: [elements.minimal() for _ in range(min_size)])
 
 
+def booleans():
+    return _Strategy(lambda rng: bool(rng.getrandbits(1)), lambda: False)
+
+
 strategies = types.SimpleNamespace(integers=integers, floats=floats,
-                                   lists=lists)
+                                   lists=lists, booleans=booleans)
 
 
 def settings(max_examples: int = DEFAULT_MAX_EXAMPLES, deadline=None,

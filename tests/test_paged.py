@@ -112,8 +112,9 @@ def test_scheduler_preempts_youngest_on_exhaustion():
             s.chunk_done(j)
     assert s.live_slots() == [0, 1] and pool.pages_in_use == 4
     s.lengths[0] = 16                       # slot 0 crosses a page boundary
-    preempted = s.ensure_decode_pages()
+    preempted, cow = s.ensure_decode_pages()
     assert [slot for slot, _ in preempted] == [1]   # youngest admitted
+    assert cow == []                        # exclusive pages: no copies
     assert s.status[1] == "free" and len(s.queue) == 1
     assert s.queue[0].rid == 1              # requeued at the head
     assert int(s.n_pages[0]) == 3           # slot 0 got its page
@@ -243,8 +244,13 @@ def test_chunked_prefill_keeps_decode_flowing():
 # ---------------------------------------------------------------------------
 
 def _pool_conserved(eng):
-    return (eng.pool.pages_free + eng.sched.held_pages()
-            == eng.pool.num_pages)
+    """free + cached-unreferenced + held partitions the pool, and the
+    slots' table references account for every refcount."""
+    pool = eng.pool
+    return (pool.pages_free + pool.pages_cached + pool.pages_in_use
+            == pool.num_pages
+            and eng.sched.held_pages()
+            == sum(pool.ref(p) for p in range(pool.num_pages)))
 
 
 def test_prefill_sampler_failure_returns_pages():
@@ -264,7 +270,7 @@ def test_prefill_sampler_failure_returns_pages():
     eng.submit([1, 2, 3], max_new_tokens=3)
     done = eng.run_until_drained()
     eng.close()
-    assert _pool_conserved(eng) and eng.pool.pages_free == eng.pool.num_pages
+    assert _pool_conserved(eng) and eng.pool.pages_in_use == 0
     bad = [r for r in done if r.error is not None]
     good = [r for r in done if r.error is None]
     assert len(bad) == 1 and "sampler exploded" in str(bad[0].error)
@@ -292,7 +298,7 @@ def test_prefill_device_failure_mid_chunk_returns_pages():
     while eng.tick():
         assert _pool_conserved(eng)
     eng.close()
-    assert eng.pool.pages_free == eng.pool.num_pages
+    assert eng.pool.pages_in_use == 0
     (req,) = eng.finished
     assert req.error is not None and not req.output
 
@@ -328,7 +334,7 @@ def test_prefill_failure_with_donated_storage_recovers():
         done = eng.run_until_drained()
         eng.close()
         assert _pool_conserved(eng)
-        assert eng.pool.pages_free == eng.pool.num_pages
+        assert eng.pool.pages_in_use == 0
         assert not eng.pool.storage_deleted()
         return {len(r.prompt): (r.output, r.error is not None) for r in done}
 
@@ -360,7 +366,7 @@ def test_decode_sampler_failure_is_isolated():
     eng.submit([1, 2, 3], max_new_tokens=10)
     done = eng.run_until_drained()
     eng.close()
-    assert eng.pool.pages_free == eng.pool.num_pages
+    assert eng.pool.pages_in_use == 0
     bad = [r for r in done if r.error is not None]
     good = [r for r in done if r.error is None]
     assert len(bad) == 1 and "mid-decode" in str(bad[0].error)

@@ -1,0 +1,468 @@
+"""Shared-prefix KV reuse: refcounted pages, radix prefix cache, and
+copy-on-write serving.
+
+Host layer: strict free/decref accounting, radix match/insert/evict/forget,
+admission that reserves only the uncached remainder, replay of fully cached
+prompts, and the COW / unregister-in-place write-safety rules.
+
+Device layer: with the prefix cache enabled, token streams are bit-identical
+to cache-off — shared and disjoint prompt sets, dense and MoE configs,
+under forced preemption, with seeded sampling — because sharing is pure
+host-side policy over the same scatter/gather ops.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import smoke_config
+from repro.models.api import build_model
+from repro.serve import PagePool, PagedLeafSpec, PrefixCache, ServeEngine
+from repro.serve import pages as PG
+from repro.serve.sampling import sample_top_p
+from repro.serve.scheduler import Scheduler
+
+
+def _pool(num_pages=8, page_size=4, prefix_cache=True):
+    specs = {"k": PagedLeafSpec((1,), (1, 1), jnp.float32)}
+    return PagePool(specs, num_pages=num_pages, page_size=page_size,
+                    prefix_cache=prefix_cache)
+
+
+# ---------------------------------------------------------------------------
+# PagePool: strict free/decref (regression: double free must raise)
+# ---------------------------------------------------------------------------
+
+def test_double_free_raises():
+    pool = _pool(prefix_cache=False)
+    (a,) = pool.alloc(1)
+    pool.free([a])
+    with pytest.raises(ValueError, match="double free"):
+        pool.free([a])
+    assert pool.pages_free == pool.num_pages        # free list uncorrupted
+    assert len(set(pool._free)) == len(pool._free)
+
+
+def test_decref_below_zero_raises():
+    pool = _pool(prefix_cache=False)
+    (a,) = pool.alloc(1)
+    pool.decref([a])
+    with pytest.raises(ValueError, match="below zero"):
+        pool.decref([a])
+    with pytest.raises(ValueError, match="invalid page"):
+        pool.decref([pool.num_pages + 3])
+
+
+def test_free_of_shared_page_raises():
+    pool = _pool()
+    (a,) = pool.alloc(1)
+    toks = np.arange(4, dtype=np.int32)
+    pool.prefix.insert(toks, 0, a)
+    pool.incref([a])                                # second holder via match
+    with pytest.raises(ValueError, match="refcount 2"):
+        pool.free([a])
+    pool.decref([a])
+    pool.free([a])                                  # exclusive again: fine
+    assert a not in pool.prefix                     # free drops registration
+
+
+def test_incref_of_unheld_uncached_page_raises():
+    pool = _pool()
+    with pytest.raises(ValueError, match="neither held nor cached"):
+        pool.incref([0])
+
+
+# ---------------------------------------------------------------------------
+# PrefixCache: radix match / insert / park / LRU evict / forget
+# ---------------------------------------------------------------------------
+
+def test_match_full_chain_and_partial_tail():
+    cache = PrefixCache(4)
+    seq = np.arange(12, dtype=np.int32)
+    assert cache.insert(seq, 0, 10) and cache.insert(seq, 1, 11)
+    assert cache.insert(seq, 2, 12)
+    # full-page walk
+    assert cache.match(seq[:8]) == ([10, 11], 8)
+    # partial tail: the cached chunk covers the whole remainder
+    assert cache.match(seq[:10]) == ([10, 11, 12], 10)
+    assert cache.match(seq[:11]) == ([10, 11, 12], 11)
+    # divergence mid-page falls back to the full-page boundary
+    div = np.concatenate([seq[:9], [99, 98, 97]]).astype(np.int32)
+    assert cache.match(div) == ([10, 11], 8)
+    # no match at all
+    assert cache.match(np.asarray([7, 7, 7, 7], np.int32)) == ([], 0)
+
+
+def test_insert_first_wins_and_requires_parent_chain():
+    cache = PrefixCache(4)
+    seq = np.arange(8, dtype=np.int32)
+    assert cache.insert(seq, 0, 10)
+    assert not cache.insert(seq, 0, 20)             # same chunk: keep page 10
+    assert cache.match(seq[:4]) == ([10], 4)
+    other = np.asarray([9, 9, 9, 9, 4, 5, 6, 7], np.int32)
+    assert not cache.insert(other, 1, 21)           # parent chunk missing
+    assert 21 not in cache
+
+
+def test_forget_drops_descendants():
+    cache = PrefixCache(4)
+    seq = np.arange(12, dtype=np.int32)
+    for d, p in enumerate((10, 11, 12)):
+        cache.insert(seq, d, p)
+    assert sorted(cache.forget(11)) == [11, 12]     # subtree goes with it
+    assert 11 not in cache and 12 not in cache
+    assert cache.match(seq) == ([10], 4)            # chain truncated cleanly
+
+
+def test_park_on_decref_and_lru_eviction_on_alloc():
+    pool = _pool(num_pages=4, page_size=4)
+    pages = pool.alloc(3)
+    seq = np.arange(12, dtype=np.int32)
+    for d, p in enumerate(pages):
+        pool.prefix.insert(seq, d, p)
+    pool.decref(pages)                              # all park, none freed
+    assert pool.pages_cached == 3 and pool.pages_free == 1
+    assert pool.pages_in_use == 0
+    # allocation beyond the free list evicts LRU leaves (deepest-first here:
+    # leaf-first keeps surviving chains matchable)
+    got = pool.alloc(2)
+    assert got is not None and pool.evictions == 1
+    assert pages[2] not in pool.prefix              # the leaf went first
+    assert pool.prefix.match(seq)[1] == 8           # shorter chain survives
+    # a parked page a new request matched is protected from eviction
+    keep = pool.prefix.match(seq[:4])[0]
+    pool.incref(keep)
+    assert pool.alloc(2) is None                    # only 1 evictable left
+    assert keep[0] in pool.prefix and pool.ref(keep[0]) == 1
+
+
+def test_reset_storage_flushes_cache():
+    pool = _pool(num_pages=4, page_size=4)
+    pages = pool.alloc(2)
+    seq = np.arange(8, dtype=np.int32)
+    for d, p in enumerate(pages):
+        pool.prefix.insert(seq, d, p)
+    pool.decref(pages)
+    assert pool.pages_cached == 2
+    pool.reset_storage()                            # KV contents are gone
+    assert pool.pages_cached == 0 and pool.pages_free == pool.num_pages
+    assert pool.prefix.match(seq) == ([], 0)
+
+
+# ---------------------------------------------------------------------------
+# Scheduler: prefix-matched admission, replay, COW write safety
+# ---------------------------------------------------------------------------
+
+class _Req:
+    def __init__(self, rid, toks):
+        self.rid = rid
+        self.prompt = np.asarray(toks, np.int32)
+        self.output: list = []
+
+
+def _retire_with_output(s, slot, output, lengths):
+    """Drive a slot to LIVE with ``output`` generated and release it, as the
+    engine would at retirement — full clean pages park in the cache."""
+    s.slot_req[slot].output = list(output)
+    s.lengths[slot] = lengths
+    s.release(slot)
+
+
+def _prefill_all(s):
+    jobs = s.next_chunks()
+    while jobs:
+        for j in jobs:
+            s.chunk_done(j)
+        jobs = s.next_chunks()
+
+
+def _admit_one(s):
+    admits, rejects = s.admit()
+    assert len(admits) == 1 and not rejects
+    return admits[0][0]
+
+
+def test_admission_matches_prefix_and_reserves_only_tail():
+    pool = _pool(num_pages=8, page_size=4)
+    s = Scheduler(max_slots=2, max_len=16, pool=pool, prefill_chunk=4)
+    s.submit(_Req(0, range(6)))                     # 6 toks -> 2 pages
+    a = _admit_one(s)
+    _prefill_all(s)
+    a_pages = s.table[a, :2].tolist()
+    _retire_with_output(s, a, [100, 101, 102], lengths=8)   # both pages full
+    assert pool.pages_cached == 2
+
+    # B shares one full page then diverges: tail allocated, chunking starts
+    # at the match boundary
+    s.submit(_Req(1, [0, 1, 2, 3, 99, 98]))
+    b = _admit_one(s)
+    assert s.table[b, 0] == a_pages[0] and pool.ref(a_pages[0]) == 1
+    assert s.table[b, 1] != a_pages[1]              # diverged: own tail page
+    assert int(s.prefill_done[b]) == 4 and not s.replay[b]
+    assert s.prefix_hits == 1 and s.prefix_hit_tokens == 4
+    (job,) = s.next_chunks()
+    assert job.start == 4 and job.pages.tolist() == [int(s.table[b, 1])]
+    s.chunk_done(job)
+    s.release(b)
+
+    # C's whole prompt is cached (prefix of A's sequence): zero tail pages,
+    # one replay chunk writing to the trash page
+    s.submit(_Req(2, [0, 1, 2, 3, 4, 5, 100]))      # 7 toks, ends mid-page-1
+    c = _admit_one(s)
+    assert s.table[c, :2].tolist() == a_pages       # both shared
+    assert s.replay[c] and s.prefix_hit_tokens == 4 + 7
+    assert int(s.prefill_done[c]) == 4              # replay the last page
+    (job,) = s.next_chunks()
+    assert job.start == 4 and job.is_last and job.n_valid == 3
+    assert job.pages.tolist() == [pool.trash_page]  # shared pages: read-only
+    s.chunk_done(job)
+    assert s.status[c] == "live" and int(s.lengths[c]) == 7
+
+
+def test_cow_on_shared_write_and_unregister_in_place():
+    pool = _pool(num_pages=8, page_size=4)
+    s = Scheduler(max_slots=3, max_len=16, pool=pool, prefill_chunk=4)
+    s.submit(_Req(0, range(6)))
+    a = _admit_one(s)
+    _prefill_all(s)
+    a_pages = s.table[a, :2].tolist()
+    _retire_with_output(s, a, [100, 101, 102], lengths=8)
+
+    # B and C both end inside A's parked page 1 -> they share it (rc=2)
+    for rid in (1, 2):
+        s.submit(_Req(rid, [0, 1, 2, 3, 4, 5, 100]))
+    admits, _ = s.admit()
+    (b, _), (c, _) = admits
+    assert s.table[b, 1] == s.table[c, 1] == a_pages[1]
+    assert pool.ref(a_pages[1]) == 2
+    _prefill_all(s)                                 # replay chunks only
+
+    preempted, cow = s.ensure_decode_pages()
+    assert not preempted
+    # B (older) hit the shared page first: copy-on-write into a fresh page;
+    # C then held the original alone -> unregistered, written in place
+    assert len(cow) == 1 and cow[0][0] == b and cow[0][1] == a_pages[1]
+    assert s.table[b, 1] == cow[0][2] != a_pages[1]
+    assert s.cow_copies == 1
+    assert s.table[c, 1] == a_pages[1]
+    assert a_pages[1] not in pool.prefix            # in-place write is safe
+    for slot in (b, c):
+        p = int(s.table[slot, int(s.lengths[slot]) // 4])
+        assert pool.ref(p) == 1 and p not in pool.prefix
+
+
+def test_admission_blocks_without_stealing_cached_match():
+    """All-or-nothing on the uncached remainder: when the tail cannot be
+    allocated the matched pages go back to parked, not leaked."""
+    pool = _pool(num_pages=4, page_size=4)
+    s = Scheduler(max_slots=2, max_len=16, pool=pool, prefill_chunk=4)
+    s.submit(_Req(0, range(6)))
+    a = _admit_one(s)
+    _prefill_all(s)
+    a_pages = s.table[a, :2].tolist()
+    _retire_with_output(s, a, [100, 101, 102], lengths=8)   # 2 pages parked
+    other = pool.alloc(2)                           # drain the free list
+    # B matches one parked page but needs 2 more; only 1 is evictable —
+    # B's own match is incref'd BEFORE the tail alloc, so the eviction the
+    # alloc triggers can only take the other parked page, never the match
+    s.submit(_Req(1, [0, 1, 2, 3, 9, 9, 9, 9, 9]))  # 9 toks -> 3 pages
+    admits, _ = s.admit()
+    assert admits == [] and len(s.queue) == 1
+    assert a_pages[0] in pool.prefix                # match re-parked, intact
+    assert pool.ref(a_pages[0]) == 0
+    assert pool.pages_in_use == 2 and pool.pages_cached == 1
+    assert pool.evictions == 1                      # the non-matched page
+    pool.free(other)                                # capacity returns
+    assert [sl for sl, _ in s.admit()[0]] == [0]
+    assert s.prefix_hit_tokens == 4
+
+
+# ---------------------------------------------------------------------------
+# Device ops: n_prefix > 0, partial last pages, trash rows, page copies
+# ---------------------------------------------------------------------------
+
+def test_scatter_gather_roundtrip_with_prefix_axes():
+    """The layered layout (L, N, page, H, D): scatter_chunk/gather_pages
+    address the page axis behind n_prefix leading dims."""
+    rng = np.random.default_rng(0)
+    storage = jnp.zeros((2, 5, 4, 3, 2))            # L=2, N=5, ps=4, (3,2)
+    chunk = jnp.asarray(rng.normal(size=(2, 8, 3, 2)), jnp.float32)
+    storage = PG.scatter_chunk(storage, jnp.asarray([4, 2]), chunk,
+                               page_size=4, n_prefix=1)
+    tok = jnp.asarray(rng.normal(size=(2, 1, 3, 2)), jnp.float32)
+    storage = PG.scatter_token(storage, jnp.asarray([2]), jnp.asarray([3]),
+                               tok, n_prefix=1)
+    got = PG.gather_pages(storage, jnp.asarray([[4, 2]]), n_prefix=1)
+    want = np.asarray(chunk).copy()
+    want[:, 4 + 3] = np.asarray(tok[:, 0])
+    np.testing.assert_allclose(np.asarray(got[:, 0]), want)
+
+
+def test_gather_pages_partial_last_page_and_trash_rows():
+    """A slot's table rows beyond its pages point at the trash page; the
+    gathered view yields the trash content there (callers mask by length)
+    and the partial page's tail garbage stays confined past the valid
+    length."""
+    storage = jnp.zeros((3, 4, 2))                  # N=2 pages + trash, ps=4
+    full = jnp.arange(8, dtype=jnp.float32).reshape(4, 2) + 1
+    storage = PG.scatter_chunk(storage, jnp.asarray([0]), full, page_size=4)
+    # partial write: 2 of 4 positions of page 1
+    storage = PG.scatter_token(storage, jnp.asarray([1, 1]),
+                               jnp.asarray([0, 1]),
+                               jnp.full((2, 2), 9.0))
+    got = np.asarray(PG.gather_pages(storage, jnp.asarray([[0, 1, 2]])))[0]
+    np.testing.assert_allclose(got[:4], np.asarray(full))
+    np.testing.assert_allclose(got[4:6], 9.0)
+    np.testing.assert_allclose(got[6:8], 0.0)       # unwritten page tail
+    np.testing.assert_allclose(got[8:], 0.0)        # trash row reads zeros
+
+
+def test_dead_slot_writes_land_in_trash_and_stay_there():
+    storage = jnp.zeros((3, 4, 2))
+    live = jnp.arange(8, dtype=jnp.float32).reshape(4, 2) + 1
+    storage = PG.scatter_chunk(storage, jnp.asarray([1]), live, page_size=4)
+    # dead-slot token write targets the trash page (index 2)
+    storage = PG.scatter_token(storage, jnp.asarray([2]), jnp.asarray([0]),
+                               jnp.full((1, 2), 7.0))
+    got = np.asarray(PG.gather_pages(storage, jnp.asarray([[1]])))[0]
+    np.testing.assert_allclose(got, np.asarray(live))       # live page clean
+
+
+def test_copy_pages_moves_whole_pages_per_leaf():
+    rng = np.random.default_rng(1)
+    specs = {"k": PagedLeafSpec((2,), (3,), jnp.float32),
+             "v": PagedLeafSpec((), (2, 2), jnp.float32)}
+    storage = {
+        "k": jnp.asarray(rng.normal(size=(2, 5, 4, 3)), jnp.float32),
+        "v": jnp.asarray(rng.normal(size=(5, 4, 2, 2)), jnp.float32)}
+    # one source fans out to two destinations (two slots COW'd off the
+    # same shared page in one tick)
+    out = PG.copy_pages(storage, specs,
+                        jnp.asarray([0, 0], jnp.int32),
+                        jnp.asarray([2, 3], jnp.int32))
+    for leaf, n in (("k", 1), ("v", 0)):
+        src = np.asarray(storage[leaf])
+        got = np.asarray(out[leaf])
+        idx = (slice(None),) * n
+        for dst in (2, 3):
+            np.testing.assert_array_equal(got[idx + (dst,)],
+                                          src[idx + (0,)])
+        for untouched in (0, 1, 4):
+            np.testing.assert_array_equal(got[idx + (untouched,)],
+                                          src[idx + (untouched,)])
+
+
+# ---------------------------------------------------------------------------
+# Engine parity: cache-on streams == cache-off streams, bit for bit
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module", params=["qwen2-7b", "qwen3-moe-235b-a22b"])
+def family(request):
+    cfg = smoke_config(request.param).replace(remat="none")
+    model = build_model(cfg)
+    return model, model.init(jax.random.PRNGKey(0))
+
+
+def _run_waves(model, params, waves, *, prefix_cache, seeds=None,
+               max_new=12, **kw):
+    kw.setdefault("max_slots", 2)
+    kw.setdefault("max_len", 128)
+    eng = ServeEngine(model, params, paged=True, page_size=16,
+                      prefill_chunk=16, prefix_cache=prefix_cache, **kw)
+    sampler = None
+    if seeds is not None:
+        sampler = lambda k, l: sample_top_p(k, l, p=0.9,
+                                            true_vocab=model.cfg.vocab)
+    i = 0
+    for wave in waves:
+        for p in wave:
+            eng.submit(p, max_new_tokens=max_new,
+                       seed=None if seeds is None else seeds[i],
+                       sampler=sampler)
+            i += 1
+        eng.run_until_drained()
+    outs = {r.rid: r.output for r in eng.finished}
+    assert all(r.error is None for r in eng.finished)
+    eng.close()
+    return outs, dict(eng.stats)
+
+
+def test_cache_parity_shared_and_disjoint(family):
+    """Greedy streams with the prefix cache on are bit-identical to
+    cache-off: a shared 24-token prefix across waves (full-prompt replay
+    hits included), plus disjoint prompts that never match."""
+    model, params = family
+    P = list(range(1, 25))
+    waves = [[P], [P, P[:20] + [77, 78]], [list(range(50, 71))], [P]]
+    on, s_on = _run_waves(model, params, waves, prefix_cache=True)
+    off, s_off = _run_waves(model, params, waves, prefix_cache=False)
+    assert on == off
+    assert s_on["prefix_hits"] >= 3 and s_on["prefix_hit_tokens"] >= 40
+    assert s_off["prefix_hits"] == 0
+    # sharing lowers the footprint at identical streams
+    assert s_on["pages_high_water"] <= s_off["pages_high_water"]
+
+
+def test_cache_parity_with_cow_under_sampling(family):
+    """Two seeded top-p requests with the SAME prompt share its pages —
+    including the partially-filled last one — then diverge at decode:
+    copy-on-write fires and streams still match cache-off exactly."""
+    model, params = family
+    P = list(range(1, 25))                          # 1 full + 1 partial page
+    waves = [[P], [P, P]]
+    on, s_on = _run_waves(model, params, waves, prefix_cache=True,
+                          seeds=[3, 4, 5])
+    off, _ = _run_waves(model, params, waves, prefix_cache=False,
+                        seeds=[3, 4, 5])
+    assert on == off
+    assert s_on["cow_copies"] >= 1
+    assert s_on["prefix_hit_tokens"] >= 2 * len(P)  # both follow-ups replay
+
+
+def test_cache_parity_under_forced_preemption():
+    """A pool at the single-request minimum forces preemption with sharing
+    in play; recompute + re-matching parked pages keeps streams exact."""
+    cfg = smoke_config("qwen2-7b").replace(remat="none")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    waves = [[[5, 17, 33, 2, 9, 1, 2, 3], [100, 200, 300, 4, 5, 6, 7, 8]],
+             [[5, 17, 33, 2, 9, 1, 2, 3]]]
+    kw = dict(max_len=64, num_pages=4, max_new=30)
+    on, s_on = _run_waves(model, params, waves, prefix_cache=True, **kw)
+    off, s_off = _run_waves(model, params, waves, prefix_cache=False, **kw)
+    assert on == off
+    assert s_off["preemptions"] >= 1
+    assert s_on["prefix_hits"] >= 1                 # wave 2 re-used wave 1
+
+
+def test_seeded_streams_reproduce_across_admission_order():
+    """A request's sampled stream is a function of (seed, prompt) only:
+    submitting in a different order — hence different slots, tick keys and
+    admission times — reproduces every stream exactly."""
+    cfg = smoke_config("qwen2-7b").replace(remat="none")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    pa, pb = list(range(1, 20)), [9, 8, 7, 6, 5]
+    fwd, _ = _run_waves(model, params, [[pa, pb]], prefix_cache=True,
+                        seeds=[11, 22])
+    rev, _ = _run_waves(model, params, [[pb, pa]], prefix_cache=True,
+                        seeds=[22, 11])
+    assert fwd[0] == rev[1] and fwd[1] == rev[0]
+    # unseeded requests keep the legacy engine-key stream (still present)
+    base, _ = _run_waves(model, params, [[pa]], prefix_cache=True,
+                         seeds=None)
+    assert len(base[0]) == 12
+
+
+def test_stats_counters_surface_end_to_end():
+    cfg = smoke_config("qwen2-7b").replace(remat="none")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    P = list(range(1, 25))
+    _, stats = _run_waves(model, params, [[P], [P, P]], prefix_cache=True,
+                          num_pages=8, max_len=64)
+    for key in ("prefix_hits", "prefix_hit_tokens", "cow_copies",
+                "evictions", "pages_high_water"):
+        assert key in stats and stats[key] >= 0
+    assert stats["prefix_hits"] >= 2
+    assert stats["pages_high_water"] <= 8

@@ -1,17 +1,29 @@
 """Property-based scheduler tests (hypothesis, or the deterministic stub in
 ``tests/_hypothesis_stub.py`` when the real package is absent).
 
-Random admit / chunk / decode / preempt / retire interleavings must uphold
-the serving-policy invariants the engine relies on:
+Random admit / chunk / decode / preempt / retire / evict interleavings must
+uphold the serving-policy invariants the engine relies on — with and
+without the prefix cache:
 
-* **page conservation** — ``pool.pages_free + held == num_pages`` after
-  every scheduler call, with held/free page ids forming an exact partition
-  of the pool (no page double-held, none lost), including across
-  preemption;
+* **page conservation under refcounts** — free, cached-unreferenced and
+  held pages partition the pool exactly, and the slots' page-table
+  references account for every refcount (a page shared by k slots appears
+  in k tables and has refcount k) after every scheduler call, including
+  across preemption and LRU eviction;
+* **write safety (COW)** — after ``ensure_decode_pages`` every live slot's
+  decode-write page has refcount 1 and is not registered in the prefix
+  index: a page with refcount > 1 is never mutated (it is copied first),
+  a registered page is unregistered before an in-place write;
 * **FIFO admission** — a request is never first-admitted before an
   earlier-submitted request (the queue head blocks, it is never skipped);
 * **free slots hold nothing** — a FREE slot owns zero pages.
+
+Prompts are ``np.arange(n)``, so two requests with equal lengths share
+content — random interleavings exercise prefix matching, partial-page
+sharing, parking and COW organically.
 """
+from collections import Counter
+
 import numpy as np
 import jax.numpy as jnp
 from hypothesis import given, settings, strategies as st
@@ -29,32 +41,58 @@ class _Req:
         self.output: list = []
 
 
-def _make():
+def _make(prefix_cache=False):
     pool = PagePool({"k": PagedLeafSpec((1,), (1, 1), jnp.float32)},
-                    num_pages=NUM_PAGES, page_size=PAGE_SIZE)
+                    num_pages=NUM_PAGES, page_size=PAGE_SIZE,
+                    prefix_cache=prefix_cache)
     sched = Scheduler(max_slots=SLOTS, max_len=MAX_LEN, pool=pool,
                       prefill_chunk=PAGE_SIZE, chunks_per_tick=2)
     return pool, sched
 
 
 def _check_invariants(pool, s):
-    held = s.held_pages()
-    assert pool.pages_free + held == pool.num_pages, \
-        f"leak: free={pool.pages_free} held={held} total={pool.num_pages}"
-    held_ids = [int(p) for slot in range(s.max_slots)
-                for p in s.table[slot, :int(s.n_pages[slot])]]
-    assert sorted(held_ids + [int(p) for p in pool._free]) == \
-        list(range(pool.num_pages)), "page ids no longer partition the pool"
+    refs = [pool.ref(p) for p in range(pool.num_pages)]
+    # every refcount is accounted for by a page-table reference
+    cnt = Counter(int(p) for slot in range(s.max_slots)
+                  for p in s.table[slot, :int(s.n_pages[slot])])
+    for p in range(pool.num_pages):
+        assert cnt.get(p, 0) == refs[p], \
+            f"page {p}: {cnt.get(p, 0)} table refs vs refcount {refs[p]}"
+    assert s.held_pages() == sum(refs)
+    # free / cached-unreferenced / held partition the pool exactly
+    free = {int(p) for p in pool._free}
+    cached = {p for p in range(pool.num_pages)
+              if pool.prefix is not None and p in pool.prefix
+              and refs[p] == 0}
+    held = {p for p in range(pool.num_pages) if refs[p] > 0}
+    assert len(free) == pool.pages_free, "free list holds duplicates"
+    assert not (free & cached) and not (free & held) and not (cached & held)
+    assert free | cached | held == set(range(pool.num_pages)), \
+        "pages lost: partition incomplete"
+    assert pool.pages_cached == len(cached)
+    assert (pool.pages_free + pool.pages_cached + pool.pages_in_use
+            == pool.num_pages)
     for slot in range(s.max_slots):
         if s.status[slot] == FREE:
             assert int(s.n_pages[slot]) == 0, "FREE slot owns pages"
 
 
-def _drive(actions, plens):
+def _check_write_safety(pool, s):
+    """The COW postcondition: every live slot may write its next token."""
+    for slot in s.live_slots():
+        idx = int(s.lengths[slot]) // s.page_size
+        p = int(s.table[slot, idx])
+        assert pool.ref(p) == 1, \
+            f"slot {slot} would mutate page {p} with refcount {pool.ref(p)}"
+        assert pool.prefix is None or p not in pool.prefix, \
+            f"slot {slot} would mutate registered page {p}"
+
+
+def _drive(actions, plens, prefix_cache=False):
     """Interpret (action, payload) int streams against a fresh scheduler,
     checking the invariants after every step.  Returns the first-admission
     rid sequence for the FIFO property."""
-    pool, s = _make()
+    pool, s = _make(prefix_cache)
     rid = iter(range(1_000_000))
     for n in plens:
         s.submit(_Req(next(rid), n))
@@ -78,6 +116,8 @@ def _drive(actions, plens):
                 s.ensure_decode_pages()
             except RuntimeError:
                 pass                    # single-resident pool exhaustion
+            else:
+                _check_write_safety(pool, s)
         elif a == 3:                    # retire the oldest live request
             live = s.live_slots()
             if live:
@@ -105,6 +145,16 @@ def test_scheduler_never_leaks_pages(actions, plens):
 @settings(max_examples=20, deadline=None)
 @given(st.lists(st.integers(0, 5), min_size=1, max_size=60),
        st.lists(st.integers(1, 20), min_size=1, max_size=8))
+def test_scheduler_never_leaks_pages_with_prefix_cache(actions, plens):
+    """Same conservation laws with sharing in play: duplicate-length
+    prompts (= identical content) match each other's pages, park on
+    release, get LRU-evicted on demand, and copy-on-write on decode."""
+    _drive(actions, plens, prefix_cache=True)
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.lists(st.integers(0, 5), min_size=1, max_size=60),
+       st.lists(st.integers(1, 20), min_size=1, max_size=8))
 def test_scheduler_fifo_first_admission(actions, plens):
     """First admissions happen in submission order: re-admissions of
     preempted requests may jump the queue (by design — they re-enter at the
@@ -114,14 +164,26 @@ def test_scheduler_fifo_first_admission(actions, plens):
 
 
 @settings(max_examples=20, deadline=None)
+@given(st.lists(st.integers(0, 5), min_size=1, max_size=60),
+       st.lists(st.integers(1, 20), min_size=1, max_size=8))
+def test_scheduler_fifo_first_admission_with_prefix_cache(actions, plens):
+    first_admits, _, _ = _drive(actions, plens, prefix_cache=True)
+    assert first_admits == sorted(first_admits)
+
+
+@settings(max_examples=20, deadline=None)
 @given(st.lists(st.integers(0, 5), min_size=10, max_size=60),
-       st.lists(st.integers(1, 20), min_size=2, max_size=8))
-def test_scheduler_drain_returns_every_page(actions, plens):
-    """Releasing everything that remains resident after a random run
-    restores the full pool — nothing is retained by dead bookkeeping."""
-    _, pool, s = _drive(actions, plens)
+       st.lists(st.integers(1, 20), min_size=2, max_size=8),
+       st.booleans())
+def test_scheduler_drain_returns_every_page(actions, plens, prefix_cache):
+    """Releasing everything that remains resident after a random run, then
+    flushing the cache, restores the full pool — nothing is retained by
+    dead bookkeeping."""
+    _, pool, s = _drive(actions, plens, prefix_cache)
     for slot in range(s.max_slots):
         if s.status[slot] != FREE:
             s.release(slot)
-    assert pool.pages_free == pool.num_pages
     assert s.held_pages() == 0
+    assert pool.pages_free + pool.pages_cached == pool.num_pages
+    pool.flush_cache()
+    assert pool.pages_free == pool.num_pages and pool.pages_cached == 0

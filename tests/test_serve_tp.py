@@ -91,6 +91,65 @@ def test_tp_parity_under_preemption_and_pallas():
     """)
 
 
+def test_tp_prefix_cache_parity():
+    """Prefix sharing is host-side page-table policy: the sharded engine
+    reads shared pages through the same gather ops, so cache-on streams at
+    tp=2/4 are bit-identical to the tp=1 cache-off reference — replay
+    (full-prompt hits) and copy-on-write included — and the host-side
+    cache counters are identical at every tp."""
+    run_spmd("""
+    from repro.configs import smoke_config
+    from repro.models.api import build_model
+    from repro.serve import ServeEngine
+
+    cfg = smoke_config("qwen2-7b").replace(remat="none", n_heads=8,
+                                           n_kv_heads=4)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    P = list(range(1, 25))                  # 1 full + 1 partial page
+    # wave 2's twin P-requests share P's parked pages (replay) and then
+    # diverge-proof COW on the partial last page; wave 3 diverges mid-page
+    waves = ([P], [P, P], [P[:20] + [77, 78]])
+
+    def run(mesh, prefix_cache, num_pages=None, max_len=128, max_new=12):
+        eng = ServeEngine(model, params, max_slots=2, max_len=max_len,
+                          paged=True, page_size=16, prefill_chunk=16,
+                          num_pages=num_pages, prefix_cache=prefix_cache,
+                          mesh=mesh)
+        for wave in waves:
+            for p in wave:
+                eng.submit(p, max_new_tokens=max_new)
+            eng.run_until_drained()
+        outs = {r.rid: r.output for r in eng.finished}
+        assert all(r.error is None for r in eng.finished)
+        eng.close()
+        return outs, eng.stats
+
+    want, _ = run(None, False)
+    base, s1 = run(None, True)
+    assert base == want
+    assert s1["prefix_hits"] >= 3 and s1["cow_copies"] >= 1, s1
+    for tp in (2, 4):
+        got, stats = run(jax.make_mesh((tp,), ("model",)), True)
+        assert got == want, tp
+        # the host-side policy is mesh-invariant, counter for counter
+        for k in ("prefix_hits", "prefix_hit_tokens", "cow_copies",
+                  "evictions"):
+            assert stats[k] == s1[k], (tp, k, stats[k], s1[k])
+
+    # forced preemption with sharing in play (pool at the one-request
+    # minimum): parked-page re-matching survives sharding too
+    waves = ([[5, 17, 33, 2, 9, 1, 2, 3], [100, 200, 300, 4, 5, 6, 7, 8]],
+             [[5, 17, 33, 2, 9, 1, 2, 3]])
+    want, s_off = run(None, False, num_pages=4, max_len=64, max_new=30)
+    assert s_off["preemptions"] >= 1
+    got, s_tp = run(jax.make_mesh((2,), ("model",)), True, num_pages=4,
+                    max_len=64, max_new=30)
+    assert got == want and s_tp["prefix_hits"] >= 1
+    print("tp prefix-cache parity OK")
+    """)
+
+
 def test_slot_parallel_recurrent_family():
     """rwkv6 has no KV to shard; the mesh engine shards decode SLOTS over
     the devices instead (params replicated, state batch-sharded) and the
