@@ -1,0 +1,85 @@
+"""CI perf-regression gate: fresh BENCH_serve.json vs the committed baseline.
+
+    python -m benchmarks.perf_gate results/BENCH_serve.json \
+        results/BENCH_baseline.json --tolerance 2.0
+
+Compares the serving throughput numbers that track real engine hot paths
+(decode tokens/s, paged decode at the equal-KV budget, shared-prefix
+prefill tokens/s, speculative decode tokens/s) and fails ONLY when a fresh
+number is more than ``tolerance`` times slower than the baseline — shared
+CI runners are noisy, so the gate is deliberately generous: it catches
+cliffs (an accidentally quadratic scheduler, a jit cache miss per tick),
+not drift.  Missing metrics on either side are reported and skipped, so
+the baseline can trail new benchmarks by one PR.
+
+Refreshing the baseline after an intentional perf change:
+
+    python -m benchmarks.run serve
+    cp results/BENCH_serve.json results/BENCH_baseline.json
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+# (dotted path into the BENCH_serve payload, higher-is-better metric)
+METRICS = [
+    "continuous4.tok_per_s",                 # dense continuous batching
+    "paged_equal_budget.tok_per_s",          # paged decode, equal KV budget
+    "prefix_cache.on.prefill_tok_per_s",     # shared-prefix prefill reuse
+    "spec_decode.on.tok_per_s",              # speculative decode throughput
+]
+
+
+def dig(payload: dict, path: str):
+    cur = payload
+    for part in path.split("."):
+        if not isinstance(cur, dict) or part not in cur:
+            return None
+        cur = cur[part]
+    return cur if isinstance(cur, (int, float)) else None
+
+
+def gate(fresh: dict, baseline: dict, tolerance: float) -> list[str]:
+    """Returns the list of failure messages (empty = gate passes)."""
+    failures = []
+    for path in METRICS:
+        f, b = dig(fresh, path), dig(baseline, path)
+        if f is None or b is None or b <= 0:
+            print(f"[perf-gate] SKIP {path}: fresh={f} baseline={b}")
+            continue
+        ratio = b / f if f > 0 else float("inf")
+        verdict = "FAIL" if ratio > tolerance else "ok"
+        print(f"[perf-gate] {verdict:>4} {path}: fresh={f:.1f} "
+              f"baseline={b:.1f} slowdown={ratio:.2f}x "
+              f"(tolerance {tolerance:.1f}x)")
+        if ratio > tolerance:
+            failures.append(
+                f"{path}: {f:.1f} vs baseline {b:.1f} "
+                f"({ratio:.2f}x slower > {tolerance:.1f}x tolerance)")
+    return failures
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("fresh", help="freshly generated BENCH_serve.json")
+    ap.add_argument("baseline", help="committed BENCH_baseline.json")
+    ap.add_argument("--tolerance", type=float, default=2.0,
+                    help="max allowed slowdown factor (default 2.0)")
+    args = ap.parse_args()
+    with open(args.fresh) as f:
+        fresh = json.load(f)
+    with open(args.baseline) as f:
+        baseline = json.load(f)
+    failures = gate(fresh, baseline, args.tolerance)
+    if failures:
+        print("[perf-gate] throughput regression detected:", file=sys.stderr)
+        for msg in failures:
+            print(f"[perf-gate]   {msg}", file=sys.stderr)
+        sys.exit(1)
+    print("[perf-gate] PASS")
+
+
+if __name__ == "__main__":
+    main()

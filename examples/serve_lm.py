@@ -2,7 +2,14 @@
 through fixed decode slots (the paper's dynamic-population pattern).
 
     PYTHONPATH=src python examples/serve_lm.py
+    PYTHONPATH=src python examples/serve_lm.py --spec-decode ngram
+
+``--spec-decode ngram|self-K`` turns on speculative multi-token decode: a
+drafter *function* proposes continuation tokens and one batched verify
+forward accepts the prefix the target model agrees with — greedy streams
+stay bit-identical, ticks go down.
 """
+import argparse
 import time
 
 import jax
@@ -12,11 +19,21 @@ from repro.configs import smoke_config
 from repro.models.api import build_model
 from repro.serve import ServeEngine
 
+ap = argparse.ArgumentParser()
+ap.add_argument("--spec-decode", default="off", metavar="ngram|self-K|off",
+                help="speculative decode drafter (default off)")
+ap.add_argument("--spec-k", type=int, default=4,
+                help="max draft tokens per verify window")
+args = ap.parse_args()
+
 cfg = smoke_config("qwen2-7b").replace(remat="none")
 model = build_model(cfg)
 params = model.init(jax.random.PRNGKey(0))
 
-eng = ServeEngine(model, params, max_slots=4, max_len=128)
+eng = ServeEngine(model, params, max_slots=4, max_len=128,
+                  spec_decode=None if args.spec_decode == "off"
+                  else args.spec_decode,
+                  spec_k=args.spec_k)
 rng = np.random.default_rng(0)
 
 print("submitting 12 requests with prompt lengths 4..40...")
@@ -37,4 +54,9 @@ print(f"decode ticks: {eng.stats['ticks']} "
       f"(vs {toks} for one-at-a-time decoding)")
 print(f"slots reused across {eng.stats['prefills']} prefills; "
       f"mean TTFT {1e3*np.mean(ttft):.0f}ms")
+if eng.drafter is not None:
+    s = eng.stats
+    print(f"spec decode [{args.spec_decode}]: proposed={s['draft_proposed']} "
+          f"accepted={s['draft_accepted']} "
+          f"acceptance_rate={s['acceptance_rate']:.2f}")
 print("sample output:", done[0].output)

@@ -61,6 +61,13 @@ def main():
     ap.add_argument("--shared-prefix", type=int, default=24, metavar="L",
                     help="prepend an L-token common prefix to every prompt "
                     "(a shared system prompt; 0 disables)")
+    ap.add_argument("--spec-decode", default="off", metavar="ngram|self-K|off",
+                    help="speculative multi-token decode: a drafter proposes "
+                    "tokens, one batched verify accepts the prefix the "
+                    "target agrees with (paged families only; 'ngram' = "
+                    "prompt-lookup, 'self-2' = first-2-layer self-draft)")
+    ap.add_argument("--spec-k", type=int, default=4,
+                    help="max draft tokens per verify window")
     ap.add_argument("--mesh", default=None, metavar="tp=N",
                     help="serve tensor-parallel over an N-device "
                     "('model',) mesh")
@@ -78,7 +85,10 @@ def main():
                       paged=False if args.dense else None,
                       page_size=args.page_size, num_pages=args.num_pages,
                       prefill_chunk=args.prefill_chunk,
-                      prefix_cache=args.prefix_cache == "on", mesh=mesh)
+                      prefix_cache=args.prefix_cache == "on",
+                      spec_decode=None if args.spec_decode == "off"
+                      else args.spec_decode,
+                      spec_k=args.spec_k, mesh=mesh)
 
     rng = np.random.default_rng(0)
     shared = rng.integers(0, cfg.vocab, args.shared_prefix)
@@ -95,6 +105,8 @@ def main():
         f"paged(ps={eng.pool.page_size}, "
         f"hw={eng.stats['pages_high_water']}/{eng.pool.num_pages} pages, "
         f"prefix-cache {args.prefix_cache})")
+    if eng.drafter is not None:
+        mode += f" spec={args.spec_decode}(k={eng.spec_k})"
     if mesh is not None:
         mode += f" tp={eng.tp}"
     print(f"[serve] {len(done)} requests, {toks} tokens in {dt:.2f}s "
@@ -108,6 +120,10 @@ def main():
               f"hit_tokens={s['prefix_hit_tokens']} "
               f"cow_copies={s['cow_copies']} evictions={s['evictions']} "
               f"cached_now={eng.pool.pages_cached} pages")
+        if eng.drafter is not None:
+            print(f"[serve] spec decode: proposed={s['draft_proposed']} "
+                  f"accepted={s['draft_accepted']} "
+                  f"acceptance_rate={s['acceptance_rate']:.2f}")
 
 
 if __name__ == "__main__":

@@ -170,6 +170,17 @@ class Model:
         """tokens (B,1) -> (new_storage, logits (B,1,V)) through the pool."""
         raise NotImplementedError(f"{self.cfg.family} has no paged KV cache")
 
+    def paged_verify(self, params, storage, tables, lengths, tokens,
+                     write_pages, write_offs, rules, *, comm=None):
+        """Speculative-decode verify: score a (B, C) window of candidate
+        tokens per slot in one batched forward (position 0 = the next
+        input, 1..C-1 = drafts).  ``write_pages``/``write_offs`` are
+        (B, C) per-position K/V targets (pads -> trash page).  Returns
+        (new_storage, logits (B, C, V)).  Families without a paged KV
+        cache fall back to per-token decode (the engine never calls this
+        for them)."""
+        raise NotImplementedError(f"{self.cfg.family} has no paged KV cache")
+
     # -- serving-mesh sharding rules -----------------------------------------
 
     def serve_param_specs(self):
@@ -307,6 +318,12 @@ class DecoderLM(Model):
         return T.paged_decode_step(params, self.cfg, rules, storage, tables,
                                    lengths, tokens, write_pages, write_offs,
                                    use_pallas=use_pallas, comm=comm)
+
+    def paged_verify(self, params, storage, tables, lengths, tokens,
+                     write_pages, write_offs, rules, *, comm=None):
+        return T.paged_verify_chunk(params, self.cfg, rules, storage, tables,
+                                    lengths, tokens, write_pages, write_offs,
+                                    comm=comm)
 
     def serve_param_specs(self):
         """Megatron TP over the 1-D serving mesh: attention heads, MLP ff,

@@ -463,6 +463,62 @@ def paged_decode_step(params, cfg, rules, storage, tables, lengths, tokens,
     return {"k": ks, "v": vs}, logits
 
 
+def paged_verify_chunk(params, cfg, rules, storage, tables, lengths, tokens,
+                       write_pages, write_offs, comm=None):
+    """Score a per-slot window of candidate tokens in ONE batched forward —
+    the speculative-decode verify step.
+
+    tokens: (B, C) — position 0 is each slot's next input token (its K/V is
+    not yet cached), positions 1..C-1 are draft continuations (right-padded
+    for slots with shorter windows); tables: (B, P); lengths: (B,) tokens
+    already cached (= the absolute position of tokens[:, 0]);
+    write_pages/write_offs: (B, C) per-position K/V targets — pad and
+    dead-slot positions point at the pool's trash page, so the SPMD call
+    keeps static shapes while rejected/padded K/V never lands in a live
+    page it wasn't meant for.
+
+    Returns (storage, logits (B, C, V)): logits[:, i] is the target
+    distribution for the token FOLLOWING tokens[:, i] — what the
+    speculative acceptance rule scores draft i+1 against (and the
+    correction/bonus is sampled from).  C == 1 is exactly a decode step.
+
+    Causality makes padding safe: query i attends keys <= lengths + i, and
+    every real position's K/V is written (to its real page) before
+    attention runs, while pad positions can only influence pad logits.
+
+    With a mesh ``comm`` (inside ``shard_map``) this is sharded exactly
+    like :func:`paged_decode_step`: params/storage head-sharded, one psum
+    after each residual projection, one tiled all_gather at the logits
+    head.
+    """
+    from repro.serve import pages as PG
+    assert not uses_window_cache(cfg), "paged decode is global-attention only"
+    comm = _SERIAL if comm is None else comm
+    x = embed_tokens(params, tokens, cfg, rules)
+    C = x.shape[1]
+    positions = lengths[:, None] + jnp.arange(C)                # (B, C)
+
+    def write(sk, sv, k, v):
+        sk = PG.scatter_window(sk, write_pages, write_offs, k)
+        sv = PG.scatter_window(sv, write_pages, write_offs, v)
+        return sk, sv
+
+    def body(x, xs):
+        p, sk, sv = xs
+        x, sk, sv = _paged_block(p, x, cfg, rules, positions=positions,
+                                 k_pages=sk, v_pages=sv, tables=tables,
+                                 q_offset=lengths, kv_valid=lengths + C,
+                                 write=write, comm=comm)
+        return x, (sk, sv)
+
+    x, (ks, vs) = jax.lax.scan(body, x, (params["blocks"], storage["k"],
+                                         storage["v"]))
+    x = L.rmsnorm(params["final_norm"], x, use_pallas=cfg.use_pallas)
+    logits = comm.all_gather(lm_logits(params, x, cfg, rules),
+                             axis=-1, tiled=True)
+    return {"k": ks, "v": vs}, logits
+
+
 def _window_decode_step(params, cfg, rules, cache, tokens, pos):
     """Decode with mixed caches: full KV for global layers, ring buffers of
     size W for sliding-window layers (aligned decode only: scalar ``pos``)."""

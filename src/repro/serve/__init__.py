@@ -1,5 +1,8 @@
 from repro.serve.pages import PagePool, PagedLeafSpec, PrefixCache
 from repro.serve.sampling import (greedy, sample_temperature, sample_top_k,
-                                  sample_top_p)
+                                  sample_top_p, spec_rejection_sample,
+                                  spec_verify_greedy)
 from repro.serve.scheduler import Scheduler
+from repro.serve.spec import (Drafter, NgramDrafter, TruncatedSelfDrafter,
+                              make_drafter)
 from repro.serve.engine import ServeEngine, Request

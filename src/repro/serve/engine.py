@@ -21,6 +21,14 @@ Layering (see README "Serving architecture"):
   and preemption of the youngest request when the pool runs dry
   (recompute-style: generated tokens are re-prefilled on re-admission,
   preserving greedy streams; full clean pages park in the prefix cache).
+* :mod:`repro.serve.spec`  — speculative decode drafters: plain functions
+  ``propose(tokens, k)`` guessing continuation tokens.  When a drafter is
+  configured, decode ticks with proposals run ONE batched verify forward
+  (``paged_verify``) scoring every slot's window, emit the accepted
+  prefix + one correction/bonus token each (greedy acceptance keeps
+  streams bit-identical to per-token decode; ``spec_temperature > 0``
+  rejection-samples without changing the target distribution), and roll
+  over-reserved pages back to the pool.
 * this module — pure execution: jitted device calls driven by the
   scheduler's plan.  ``paged_decode_step`` writes each slot's token K/V
   through (page, offset) targets and attends through the page table
@@ -56,9 +64,11 @@ from repro.core import comm as CC
 from repro.core.comm import Comm
 from repro.core.runtime import ThreadFarmExecutor
 from repro.serve import pages as PG
+from repro.serve import spec as SP
 from repro.serve.pages import PagePool
-from repro.serve.sampling import greedy
-from repro.serve.scheduler import Scheduler
+from repro.serve.sampling import (greedy, spec_rejection_sample,
+                                  spec_verify_greedy)
+from repro.serve.scheduler import Scheduler, prefill_tokens
 
 
 @dataclasses.dataclass
@@ -95,6 +105,8 @@ class ServeEngine:
                  page_size: int = 16, num_pages: Optional[int] = None,
                  prefill_chunk: int = 64, chunks_per_tick: int = 2,
                  prefix_cache: bool = True,
+                 spec_decode=None, spec_k: int = 4,
+                 spec_temperature: float = 0.0,
                  strict: bool = False, use_pallas_attention: bool = False,
                  mesh=None):
         self.model, self.params, self.rules = model, params, rules
@@ -146,6 +158,42 @@ class ServeEngine:
             num_workers=max(1, prefill_workers))
         self.sampler = sampler or (lambda key, logits: greedy(
             logits, true_vocab=model.cfg.vocab))
+
+        # -- speculative decode ----------------------------------------------
+        # A drafter proposes up to spec_k continuation tokens per live slot;
+        # one batched verify forward scores every proposal and the engine
+        # emits the accepted prefix + one correction/bonus token.  Families
+        # without a paged KV cache fall back to plain per-token decode (the
+        # drafter is simply never consulted).
+        self.spec_k = max(1, int(spec_k))
+        self.spec_temperature = float(spec_temperature)
+        if spec_decode in (None, "off", False):
+            self.drafter = None
+        elif not self.paged:
+            self.drafter = None          # recurrent/window family fallback
+        else:
+            if sampler is not None:
+                raise ValueError(
+                    "spec_decode supports the default greedy sampler "
+                    "(spec_temperature=0, bit-identical streams) or "
+                    "built-in temperature rejection sampling "
+                    "(spec_temperature > 0); a custom engine-wide sampler "
+                    "cannot be verified and would be silently ignored — "
+                    "drop it (per-request samplers remain supported)")
+            if use_pallas_attention:
+                raise ValueError(
+                    "spec_decode + use_pallas_attention is unsupported: "
+                    "the paged-attention kernel is single-query (decode) "
+                    "only, so verify windows would score positions with a "
+                    "different kernel than plain decode and greedy "
+                    "spec-on/spec-off bit-parity could not be guaranteed")
+            self.drafter = spec_decode if not isinstance(spec_decode, str) \
+                else SP.make_drafter(spec_decode, model=model, params=params)
+        # the per-position argmax the greedy acceptance rule scores against
+        # (jitted: it runs on every verify tick)
+        self._verify_argmax = jax.jit(functools.partial(
+            greedy, true_vocab=model.cfg.vocab))
+
         self.last_token = np.zeros(max_slots, np.int32)
         self.finished: list[Request] = []
         self._rid = itertools.count()
@@ -153,7 +201,9 @@ class ServeEngine:
         self.stats = {"ticks": 0, "tokens": 0, "prefills": 0,
                       "chunk_prefills": 0, "preemptions": 0,
                       "prefix_hits": 0, "prefix_hit_tokens": 0,
-                      "cow_copies": 0, "evictions": 0, "pages_high_water": 0}
+                      "cow_copies": 0, "evictions": 0, "pages_high_water": 0,
+                      "draft_proposed": 0, "draft_accepted": 0,
+                      "acceptance_rate": 0.0}
 
         # donate the state/storage argument so XLA updates the KV buffers in
         # place (no full-pool copy per tick); CPU has no donation support
@@ -180,6 +230,10 @@ class ServeEngine:
                 self._prefill_chunk = jax.jit(
                     lambda p, st, row, pg, s0, t: model.paged_prefill_chunk(
                         p, st, row, pg, s0, t, rules),
+                    donate_argnums=donate)
+                self._verify_paged = jax.jit(
+                    lambda p, st, tb, ln, t, wp, wo: model.paged_verify(
+                        p, st, tb, ln, t, wp, wo, rules),
                     donate_argnums=donate)
             else:
                 sspecs = model.paged_storage_specs()
@@ -212,6 +266,13 @@ class ServeEngine:
                         p, st, row, pg, s0, t, None, comm=comm),
                     mesh=mesh,
                     in_specs=(pspecs, sspecs, rep, rep, rep, rep),
+                    out_specs=(sspecs, rep), check_vma=False),
+                    donate_argnums=donate)
+                self._verify_paged = jax.jit(CC.shard_map(
+                    lambda p, st, tb, ln, t, wp, wo: model.paged_verify(
+                        p, st, tb, ln, t, wp, wo, None, comm=comm),
+                    mesh=mesh,
+                    in_specs=(pspecs, sspecs, rep, rep, rep, rep, rep),
                     out_specs=(sspecs, rep), check_vma=False),
                     donate_argnums=donate)
             self.sched = Scheduler(max_slots=max_slots, max_len=max_len,
@@ -476,9 +537,19 @@ class ServeEngine:
 
         live = self.sched.live_slots()
         cow = []
+        drafts = {}
+        if live and self.drafter is not None:
+            drafts = self._propose_drafts(live)
         if live:
-            # may preempt the youngest and/or schedule copy-on-write moves
-            _, cow = self.sched.ensure_decode_pages()
+            # may preempt the youngest and/or schedule copy-on-write moves;
+            # draft windows reserve their extra write pages best-effort
+            # (never preempting — speculation can't evict anyone)
+            _, cow, granted = self.sched.ensure_decode_pages(
+                extra={s: len(d) for s, d in drafts.items()} or None)
+            drafts = {s: d[:granted.get(s, 0)]
+                      for s, d in drafts.items()
+                      if self.sched.slot_req[s] is not None
+                      and granted.get(s, 0) > 0}
             live = self.sched.live_slots()
             # a COW'd slot preempted later in the same pass already gave
             # its copy page back — don't write into it
@@ -488,28 +559,52 @@ class ServeEngine:
         if live:
             ps = self.pool.page_size
             B = self.max_slots
-            wpages = np.full(B, self.pool.trash_page, np.int32)
-            woffs = np.zeros(B, np.int32)
+            # verify width: the widest granted draft + 1, bucketed to two
+            # compile shapes (half / full window) so a tick whose drafts
+            # are short doesn't pay the full spec_k+1-wide forward
+            C = self._spec_width(max(len(d) for d in drafts.values())
+                                 + 1) if drafts else 1
+            wpages = np.full((B, C), self.pool.trash_page, np.int32)
+            woffs = np.zeros((B, C), np.int32)
             lens = np.zeros(B, np.int32)
-            toks = np.zeros((B, 1), np.int32)
+            toks = np.zeros((B, C), np.int32)
             for slot in live:
                 ln = int(self.sched.lengths[slot])
-                wpages[slot] = self.sched.table[slot, ln // ps]
-                woffs[slot] = ln % ps
                 lens[slot] = ln
                 toks[slot, 0] = self.last_token[slot]
+                d = drafts.get(slot)
+                nd = 0 if d is None else len(d)
+                if nd:
+                    toks[slot, 1:1 + nd] = d
+                for i in range(nd + 1):
+                    wpages[slot, i] = self.sched.table[slot, (ln + i) // ps]
+                    woffs[slot, i] = (ln + i) % ps
+            # sampled speculation (spec_temperature > 0) must route EVERY
+            # tick through the verify commit — otherwise no-draft ticks
+            # would fall back to the engine's greedy sampler and the
+            # stream would mix greedy and temperature-sampled tokens
+            spec_sampled = self.drafter is not None and \
+                self.spec_temperature > 0
             try:
                 if cow:         # copies strictly before this tick's writes
                     self.pool.storage = self._cow_copy(
                         self.pool.storage,
                         jnp.asarray([a for _, a, _ in cow], jnp.int32),
                         jnp.asarray([b for _, _, b in cow], jnp.int32))
-                self.pool.storage, logits = self._decode_paged(
-                    self.params, self.pool.storage,
-                    jnp.asarray(self.sched.table), jnp.asarray(lens),
-                    jnp.asarray(toks), jnp.asarray(wpages),
-                    jnp.asarray(woffs))
-                errors += self._commit_decode(live, logits)
+                if drafts or spec_sampled:
+                    self.pool.storage, logits = self._verify_paged(
+                        self.params, self.pool.storage,
+                        jnp.asarray(self.sched.table), jnp.asarray(lens),
+                        jnp.asarray(toks), jnp.asarray(wpages),
+                        jnp.asarray(woffs))
+                    errors += self._commit_verify(live, drafts, logits)
+                else:
+                    self.pool.storage, logits = self._decode_paged(
+                        self.params, self.pool.storage,
+                        jnp.asarray(self.sched.table), jnp.asarray(lens),
+                        jnp.asarray(toks), jnp.asarray(wpages[:, 0]),
+                        jnp.asarray(woffs[:, 0]))
+                    errors += self._commit_decode(live, logits)
             except BaseException:
                 # a decode/commit failure still raises (engine-level, not
                 # one request's fault) — but first un-brick the engine if
@@ -528,8 +623,103 @@ class ServeEngine:
             cow_copies=self.sched.cow_copies,
             evictions=self.pool.evictions,
             pages_high_water=self.pool.high_water)
+        proposed = self.stats["draft_proposed"]
+        self.stats["acceptance_rate"] = (
+            self.stats["draft_accepted"] / proposed if proposed else 0.0)
         self._raise_or_record(errors)
         return bool(live) or self.sched.has_work()
+
+    # -- speculative decode --------------------------------------------------
+
+    def _spec_width(self, need: int) -> int:
+        half = 1 + (self.spec_k + 1) // 2
+        return half if need <= half else self.spec_k + 1
+
+    def _propose_drafts(self, live) -> dict:
+        """Ask the drafter for up to ``spec_k`` continuation tokens per
+        spec-eligible live slot.  The budget caps keep parity with plain
+        decode position-exact: never draft past the request's remaining
+        token budget or into ``max_len``'s last writable position.  A
+        drafter raising (or proposing nothing) just means no drafts for
+        that slot this tick — proposals are best-effort by contract."""
+        drafts = {}
+        for slot in live:
+            req = self.sched.slot_req[slot]
+            if req.sampler is not None:
+                continue        # black-box per-request sampler: unverifiable
+            budget = min(self.spec_k,
+                         req.max_new_tokens - len(req.output) - 1,
+                         self.max_len - 2 - int(self.sched.lengths[slot]))
+            if budget <= 0:
+                continue
+            try:
+                prop = np.asarray(self.drafter.propose(
+                    prefill_tokens(req), budget), np.int32).reshape(-1)
+            except BaseException:                       # noqa: BLE001
+                continue        # a sloppy drafter costs nothing
+            if prop.size:
+                drafts[slot] = prop[:budget]
+        return drafts
+
+    def _commit_verify(self, live, drafts, logits) -> list:
+        """Book a verify forward's emitted tokens for every live slot:
+        the accepted draft prefix + one correction/bonus each (a slot
+        without drafts emits exactly its plain decoded token).  Per-token
+        bookkeeping mirrors :meth:`_commit_decode`, so retirement (EOS /
+        budget / max_len) happens at the same stream position speculation
+        on or off; afterwards every surviving slot hands its
+        over-reserved verify pages back to the pool."""
+        self.stats["ticks"] += 1
+        greedy_mode = self.spec_temperature <= 0
+        if greedy_mode:         # the rejection path never reads the argmax
+            rows = np.array(jax.device_get(self._verify_argmax(logits)))
+        else:
+            self._key, tick_key = jax.random.split(self._key)
+            logits_np = np.asarray(jax.device_get(logits))
+        errors = []
+        for slot in live:
+            req = self.sched.slot_req[slot]
+            d = drafts.get(slot)
+            nd = 0 if d is None else len(d)
+            draft = [] if d is None else [int(t) for t in d]
+            if req.sampler is not None:
+                # black-box sampler (no drafts were proposed for it):
+                # one token off position 0, error-isolated like
+                # _sample_batch's per-row draws
+                try:
+                    accepted, emitted = 0, [self._sample_one(req,
+                                                             logits[slot, 0])]
+                except BaseException as e:              # noqa: BLE001
+                    self.sched.release(slot)
+                    errors.append((req, e))
+                    continue
+            elif not greedy_mode:
+                if req.seed is not None:
+                    base = jax.random.PRNGKey(req.seed)
+                    keys = [jax.random.fold_in(base, len(req.output) + i)
+                            for i in range(nd + 1)]
+                else:
+                    keys = [jax.random.fold_in(tick_key,
+                                               slot * (self.spec_k + 2) + i)
+                            for i in range(nd + 1)]
+                accepted, emitted = spec_rejection_sample(
+                    keys, logits_np[slot, :nd + 1], draft,
+                    temperature=self.spec_temperature,
+                    true_vocab=self.model.cfg.vocab)
+            else:
+                accepted, emitted = spec_verify_greedy(rows[slot], draft)
+            self.stats["draft_proposed"] += nd
+            self.stats["draft_accepted"] += accepted
+            for tok in emitted:
+                tok = int(tok)
+                req.output.append(tok)
+                self.last_token[slot] = tok
+                self.sched.lengths[slot] += 1
+                self.stats["tokens"] += 1
+                if self._check_retire(slot, tok):
+                    break
+            self.sched.rollback_verify_pages(slot)
+        return errors
 
     # -- dense tick (recurrent / window-cache families) ----------------------
 

@@ -474,6 +474,22 @@ def scatter_token(storage, pages, offs, vals, *, n_prefix: int = 0):
     return storage.at[idx].set(vals.astype(storage.dtype))
 
 
+def scatter_window(storage, pages, offs, vals, *, n_prefix: int = 0):
+    """Write a per-slot window of tokens at (page, offset) pairs — the
+    speculative-verify write (C candidate positions per slot committed in
+    one scatter; pad / dead positions point at the trash page).
+
+    storage: (prefix..., N, page_size, suffix...)
+    pages, offs: (B, C) int32;   vals: (prefix..., B, C, suffix...)
+    """
+    B, C = pages.shape
+    pre = vals.shape[:n_prefix]
+    suf = vals.shape[n_prefix + 2:]
+    flat = vals.reshape(pre + (B * C,) + suf)
+    return scatter_token(storage, pages.reshape(-1), offs.reshape(-1), flat,
+                         n_prefix=n_prefix)
+
+
 def gather_pages(storage, tables, *, n_prefix: int = 0):
     """Gather each slot's pages back into a contiguous view.
 

@@ -1,8 +1,10 @@
-"""Token sampling heads (jit-friendly, vocab-padding aware)."""
+"""Token sampling heads (jit-friendly, vocab-padding aware) and the
+speculative-decode acceptance rules (host-side, per slot)."""
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 
 def _mask_pad(logits, true_vocab):
@@ -35,6 +37,97 @@ def sample_temperature(key, logits, *, temperature: float = 1.0,
     if temperature <= 0:
         return greedy(logits)
     return jax.random.categorical(key, logits / temperature).astype(jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# Speculative decode: acceptance rules
+#
+# ``logits[i]`` is the target model's distribution for the token FOLLOWING
+# verify position i (position 0 = the slot's next input token, positions
+# 1..n = the drafts), as produced by one batched verify forward.  Both rules
+# return ``(accepted, emitted)``: how many drafts the target agreed with and
+# the tokens to emit — the accepted drafts plus exactly one more (the
+# correction on the first rejection, or the bonus token when every draft
+# survived).  ``emitted`` is therefore never empty: a verify step always
+# makes at least the progress a plain decode step would.
+# ---------------------------------------------------------------------------
+
+
+def spec_verify_greedy(row_argmax, draft) -> tuple[int, list[int]]:
+    """Greedy acceptance: draft i survives iff it IS the target argmax at
+    its position.  The emitted tokens are exactly the prefix sequential
+    greedy decode would have produced, so speculative greedy streams are
+    bit-identical to non-speculative ones.
+
+    ``row_argmax``: (C,) per-position argmax of the target verify logits
+    (pad-vocab already masked); ``draft``: (n,) proposed tokens, n < C.
+    """
+    emitted: list[int] = []
+    for i, d in enumerate(draft):
+        t = int(row_argmax[i])
+        emitted.append(t)                  # == d when accepted
+        if t != int(d):
+            return i, emitted              # correction token, stop
+    emitted.append(int(row_argmax[len(draft)]))     # bonus token
+    return len(draft), emitted
+
+
+def spec_rejection_sample(keys, logits, draft, *, temperature: float = 1.0,
+                          true_vocab=None) -> tuple[int, list[int]]:
+    """Standard speculative rejection sampling against a deterministic
+    drafter (draft distribution = one-hot at the proposed token).
+
+    Draft ``d`` at position ``i`` is accepted with probability
+    ``min(1, p(d)/q(d)) = p_i(d)`` (``q`` is one-hot); on rejection the
+    correction is drawn from the residual ``norm(max(p - q, 0))``, which
+    for one-hot ``q`` is ``p`` with ``d`` zeroed and renormalized.  The
+    marginal of every emitted token is exactly the target distribution
+    ``softmax(logits / temperature)`` — speculation changes latency, never
+    the sampled distribution.
+
+    ``keys``: one PRNG key per verify position (seeded requests pass their
+    per-stream-index keys, so streams stay reproducible); ``logits``:
+    (C, V) target logits; ``draft``: (n,) tokens, n < C.
+    ``temperature <= 0`` degenerates to the greedy rule.
+    """
+    logits = np.asarray(logits, np.float32)
+    v = logits.shape[-1]
+    pad = true_vocab is not None and true_vocab < v
+    if temperature <= 0:
+        masked = logits.copy()
+        if pad:
+            masked[..., true_vocab:] = -1e30
+        return spec_verify_greedy(masked.argmax(-1), draft)
+
+    def probs(i):
+        # pure numpy: this runs per position in the verify commit loop,
+        # so no per-row device round-trips
+        row = logits[i].astype(np.float64) / temperature
+        if pad:
+            row[true_vocab:] = -np.inf
+        row -= row.max()
+        e = np.exp(row)
+        return e / e.sum()
+
+    emitted: list[int] = []
+    for i, d in enumerate(draft):
+        d = int(d)
+        p = probs(i)
+        if float(jax.random.uniform(keys[i])) < p[d]:
+            emitted.append(d)
+            continue
+        residual = p.copy()
+        residual[d] = 0.0
+        residual = residual / max(residual.sum(), 1e-30)
+        gs = jax.random.categorical(jax.random.fold_in(keys[i], 1),
+                                    jnp.log(jnp.asarray(residual) + 1e-30))
+        emitted.append(int(gs))
+        return i, emitted
+    n = len(draft)
+    gs = jax.random.categorical(keys[n],
+                                jnp.log(jnp.asarray(probs(n)) + 1e-30))
+    emitted.append(int(gs))
+    return n, emitted
 
 
 def sample_top_p(key, logits, *, p: float = 0.9, temperature: float = 1.0,

@@ -7,7 +7,7 @@ functions and farm machinery.  The scheduler never touches device arrays;
 it hands the engine a plan (admissions, prefill chunk jobs, page/offset
 targets) and the engine reports back what actually ran.
 
-Four mechanisms:
+Five mechanisms:
 
 * **Admission with prefix reuse** — FIFO from the queue into free slots.
   In paged mode the longest cached prefix of the prompt is matched in the
@@ -27,6 +27,12 @@ Four mechanisms:
   keeps the original); targeting a *registered* page this slot holds alone
   just unregisters it and writes in place.  A shared page is never
   mutated.
+* **Speculative verify windows** — ``ensure_decode_pages(extra=...)``
+  reserves exclusive write targets for a slot's next 1 + n positions so a
+  batched verify can commit draft K/V; the extras are best-effort (never
+  preempting — speculation cannot evict a request plain decode would have
+  kept) and ``rollback_verify_pages`` returns whatever the accepted
+  tokens didn't need straight to the free list.
 * **Preemption on page exhaustion** — when a live slot needs a fresh page
   and the pool is dry (after LRU eviction of unreferenced cached pages),
   the youngest-admitted request is evicted (vLLM-style recompute: its
@@ -295,49 +301,121 @@ class Scheduler:
         preempted.append((victim, self.preempt(victim)))
         return None
 
-    def ensure_decode_pages(self) -> tuple[list[tuple[int, object]],
-                                           list[tuple[int, int, int]]]:
+    def _ensure_exclusive(self, slot: int, idx: int, preempted, cow,
+                          allow_preempt: bool) -> bool:
+        """Make page ``idx`` of ``slot`` an exclusive write target.  Three
+        cases: the index is past the slot's last page (allocate fresh), the
+        page is shared with another holder (copy-on-write: allocate a copy,
+        drop our reference to the original), or it is a registered page we
+        hold alone (unregister and write in place — no copy needed).
+        ``allow_preempt=False`` makes allocation best-effort (returns False
+        on pool exhaustion instead of evicting a victim) — speculative
+        verify windows never preempt anyone for their extra positions."""
+        if idx >= int(self.n_pages[slot]):
+            assert idx == int(self.n_pages[slot]), (slot, idx)
+            if allow_preempt:
+                page = None
+                while page is None:
+                    page = self._alloc_or_preempt(slot, preempted)
+            else:
+                page = self.pool.alloc(1)
+                if page is None:
+                    return False
+            self.table[slot, idx] = page[0]
+            self.n_pages[slot] += 1
+            return True                         # fresh page: exclusive
+        p = int(self.table[slot, idx])
+        while self.pool.ref(p) > 1:             # shared: copy before writing
+            if allow_preempt:
+                dst = self._alloc_or_preempt(slot, preempted)
+                if dst is None:
+                    continue        # a victim released; re-check the ref
+            else:
+                dst = self.pool.alloc(1)
+                if dst is None:
+                    return False
+            cow.append((slot, p, dst[0]))
+            self.pool.decref([p])               # sharers keep the original
+            self.table[slot, idx] = dst[0]
+            self.cow_copies += 1
+            p = dst[0]
+        if self.pool.prefix is not None and p in self.pool.prefix:
+            # sole holder of a registered page: writing would corrupt
+            # future matches — drop it (and descendants) from the index
+            self.pool.unregister(p)
+        return True
+
+    def ensure_decode_pages(self, extra=None):
         """Guarantee every live slot owns — *exclusively* — the page its
         next token writes into, preempting the youngest-admitted request
-        when the pool runs dry.  Three cases per slot: the write crosses
-        into a fresh page (allocate), the write targets a page shared with
-        another holder (copy-on-write: allocate a copy, drop our reference
-        to the original), or it targets a registered page we hold alone
-        (unregister and write in place — no copy needed).  Returns
-        (preempted (slot, req) pairs, COW (slot, src_page, dst_page)
-        triples whose device copies the engine must apply before the
-        decode step)."""
+        when the pool runs dry (see :meth:`_ensure_exclusive` for the
+        allocate / copy-on-write / unregister cases).
+
+        ``extra`` ({slot: n}) additionally secures exclusive write targets
+        for ``n`` positions beyond the next token — a speculative verify
+        window.  Extras are strictly best-effort: they never preempt and
+        never raise, they just stop when the pool runs dry, so turning
+        speculation on can never evict a request that plain decode would
+        have kept resident.
+
+        Returns (preempted (slot, req) pairs, COW (slot, src_page,
+        dst_page) triples whose device copies the engine must apply before
+        this tick's writes, granted {slot: m <= n} extra positions secured
+        — the engine trims each slot's draft window to it; zero for every
+        slot when ``extra`` is None)."""
         if self.pool is None:
-            return [], []
+            return [], [], {}
+        want = extra or {}
         preempted: list[tuple[int, object]] = []
         cow: list[tuple[int, int, int]] = []
+        granted: dict[int, int] = {}
         order = sorted(self.live_slots(), key=lambda s: self.admitted_at[s])
+        # pass 1: every live slot's MANDATORY next-token page first, so a
+        # speculative window can never consume the free page a younger
+        # slot's plain decode write was entitled to
         for slot in order:
             if self.status[slot] != LIVE:       # preempted earlier this pass
                 continue
             idx = int(self.lengths[slot]) // self.page_size
-            if idx >= int(self.n_pages[slot]):
-                page = None
-                while page is None:
-                    page = self._alloc_or_preempt(slot, preempted)
-                self.table[slot, idx] = page[0]
-                self.n_pages[slot] += 1
-                continue                        # fresh page: exclusive
-            p = int(self.table[slot, idx])
-            while self.pool.ref(p) > 1:         # shared: copy before writing
-                dst = self._alloc_or_preempt(slot, preempted)
-                if dst is None:
-                    continue        # a victim released; re-check the ref
-                cow.append((slot, p, dst[0]))
-                self.pool.decref([p])           # sharers keep the original
-                self.table[slot, idx] = dst[0]
-                self.cow_copies += 1
-                p = dst[0]
-            if self.pool.prefix is not None and p in self.pool.prefix:
-                # sole holder of a registered page: writing would corrupt
-                # future matches — drop it (and descendants) from the index
-                self.pool.unregister(p)
-        return preempted, cow
+            if idx < self.pages_per_slot:
+                self._ensure_exclusive(slot, idx, preempted, cow,
+                                       allow_preempt=True)
+        # pass 2: speculative extras, strictly best-effort (no preemption)
+        for slot in order:
+            if self.status[slot] != LIVE:
+                continue
+            got = 0
+            for j in range(1, 1 + int(want.get(slot, 0))):
+                pos = int(self.lengths[slot]) + j
+                idx = pos // self.page_size
+                if idx >= self.pages_per_slot:
+                    break           # table capacity: window ends at max_len
+                if not self._ensure_exclusive(slot, idx, preempted, cow,
+                                              allow_preempt=False):
+                    break
+                got += 1
+            granted[slot] = got
+        return preempted, cow, granted
+
+    def rollback_verify_pages(self, slot: int) -> int:
+        """Return the pages a speculative verify window reserved beyond
+        what the ACCEPTED tokens (plus the next decode write) need.  Called
+        after the engine commits a verify's emitted tokens, with
+        ``lengths[slot]`` already advanced; trimmed pages are exclusively
+        held and unregistered (``_ensure_exclusive`` made them so and
+        nothing registers mid-tick), so their decref goes straight to the
+        free list — rejected-draft K/V is never parked in the prefix cache.
+        Returns the number of pages released."""
+        if self.pool is None or self.status[slot] != LIVE:
+            return 0
+        needed = int(self.lengths[slot]) // self.page_size + 1
+        n = int(self.n_pages[slot])
+        if n <= needed:
+            return 0
+        self.pool.decref(self.table[slot, needed:n].tolist())
+        self.table[slot, needed:n] = 0
+        self.n_pages[slot] = needed
+        return n - needed
 
     def _youngest_victim(self, exclude: int) -> Optional[int]:
         cands = [s for s in range(self.max_slots)

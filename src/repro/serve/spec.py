@@ -1,0 +1,172 @@
+"""Speculative multi-token decode: pluggable drafter functions.
+
+The paper's core claim — parallel machinery in a thin generic layer, the
+concrete computation supplied as plain Python functions — applied one level
+up the serving stack: a *drafter* is a function ``propose(tokens, k)`` that
+guesses the next ``k`` tokens of a stream, and the engine's generic verify
+loop scores every guess in ONE batched forward through the target model
+(:meth:`repro.models.api.Model.paged_verify`), accepting the longest prefix
+the target agrees with.  The engine never looks inside a drafter, exactly
+like the task farm never looks inside ``func``: swapping the drafting
+strategy is swapping a function.
+
+Two weight-free drafters ship here (both work on random-init models, since
+neither learns anything the target doesn't already know):
+
+* :class:`NgramDrafter` — prompt-lookup decoding: match the tail n-gram of
+  the generated stream against earlier positions of prompt + output and
+  propose the historical continuation.  Shines on the shared-prefix /
+  repetitive workloads the prefix cache targets (retrieval prompts, code,
+  self-repeating generations).
+* :class:`TruncatedSelfDrafter` — run the FIRST ``layers`` blocks of the
+  target itself (shared embedding + lm head) as a cheap autoregressive
+  proposer.  No extra weights; the draft model is a prefix of the target.
+
+A drafter failing or proposing nothing simply costs nothing: the engine
+falls back to plain per-token decode for that slot on that tick.  Drafts
+are *proposals* — correctness never depends on them, so a drafter may be
+arbitrarily sloppy (wrong drafts are rejected by the verify rule and the
+stream continues bit-identically to non-speculative decode).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Protocol, runtime_checkable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@runtime_checkable
+class Drafter(Protocol):
+    """The pluggable proposer contract — one function.
+
+    ``propose(tokens, k)``: ``tokens`` is the request's full visible stream
+    (prompt + every generated token, the last element being the token whose
+    successor is wanted) as ``(n,) int32``; return up to ``k`` proposed
+    continuation tokens as ``(m,) int32`` (``m <= k``; empty means "no
+    guess").  Must be deterministic in ``tokens`` — the parity guarantee
+    (speculative greedy streams == plain greedy streams) holds regardless,
+    but determinism keeps acceptance counters reproducible run to run.
+    """
+
+    def propose(self, tokens: np.ndarray, k: int) -> np.ndarray: ...
+
+
+class NgramDrafter:
+    """Prompt-lookup decoding (n-gram matching against the own stream).
+
+    Find the most recent earlier occurrence of the stream's final n-gram
+    (longest ``max_n`` first, down to ``min_n``) and propose the tokens
+    that followed it.  Pure host-side numpy — zero device work.
+    """
+
+    def __init__(self, max_n: int = 3, min_n: int = 1):
+        assert 1 <= min_n <= max_n
+        self.max_n, self.min_n = max_n, min_n
+
+    def propose(self, tokens: np.ndarray, k: int) -> np.ndarray:
+        t = np.ascontiguousarray(tokens, np.int32)
+        best = np.zeros(0, np.int32)
+        if k <= 0:
+            return best
+        for n in range(min(self.max_n, len(t) - 1), self.min_n - 1, -1):
+            tail = t[-n:]
+            # windows[j] = t[j:j+n]; candidate matches must have a
+            # continuation (j + n < len(t)) and not be the tail itself
+            win = np.lib.stride_tricks.sliding_window_view(t[:-1], n)
+            hits = np.nonzero((win == tail).all(axis=1))[0]
+            if not hits.size:
+                continue
+            # prefer the most recent occurrence with a FULL k-token
+            # continuation: in a loop of period p the very last match sits
+            # p tokens from the end and could only propose p tokens — one
+            # period earlier proposes the whole window
+            full = hits[hits + n + k <= len(t)]
+            if full.size:
+                j = int(full[-1])
+                return t[j + n:j + n + k].copy()
+            j = int(hits[-1])
+            if len(t) - (j + n) > len(best):
+                best = t[j + n:].copy()
+        return best
+
+
+def _bucket(n: int, buckets=(16, 32, 64, 128, 256, 512, 1024, 2048)) -> int:
+    for b in buckets:
+        if n <= b:
+            return b
+    return ((n + 2047) // 2048) * 2048
+
+
+class TruncatedSelfDrafter:
+    """Draft with the first ``layers`` blocks of the target model itself.
+
+    The draft "model" is a prefix of the target: shared token embedding,
+    blocks ``0..layers-1``, the final norm and the shared lm head — no
+    extra parameters, so it works on any (random-init included) DecoderLM
+    checkpoint.  Proposals are greedy and autoregressive: each draft token
+    re-runs the truncated forward over the (bucketed) full stream, which is
+    cheap because ``layers`` is small and smoke/serving contexts are short.
+    """
+
+    def __init__(self, model, params, *, layers: int = 2):
+        from repro.models import transformer as T
+        cfg = model.cfg
+        if not model.supports_paged_decode():
+            raise ValueError(
+                f"{cfg.name} ({cfg.family}) has no stacked decoder blocks "
+                "to truncate; use the ngram drafter")
+        k = max(1, min(layers, cfg.n_layers))
+        self.layers = k
+        self.cfg = cfg.replace(n_layers=k)
+        self.vocab = cfg.vocab
+        self.params = {
+            "embed": params["embed"],
+            "blocks": jax.tree_util.tree_map(lambda a: a[:k],
+                                             params["blocks"]),
+            "final_norm": params["final_norm"],
+            "unembed": params["unembed"],
+        }
+
+        @functools.partial(jax.jit, static_argnums=())
+        def _next_logits(p, toks, n_valid):
+            hidden, _ = T.forward(p, self.cfg, None, tokens=toks)
+            h = jax.lax.dynamic_slice_in_dim(hidden, n_valid - 1, 1, axis=1)
+            return T.lm_logits(p, h, self.cfg, None)
+
+        self._next_logits = _next_logits
+
+    def propose(self, tokens: np.ndarray, k: int) -> np.ndarray:
+        from repro.serve.sampling import greedy
+        t = list(np.asarray(tokens, np.int32))
+        out = []
+        for _ in range(max(0, k)):
+            n = len(t)
+            buf = np.zeros((1, _bucket(n)), np.int32)
+            buf[0, :n] = t
+            logits = self._next_logits(self.params, jnp.asarray(buf),
+                                       jnp.int32(n))
+            nxt = int(greedy(logits, true_vocab=self.vocab)[0, 0])
+            out.append(nxt)
+            t.append(nxt)
+        return np.asarray(out, np.int32)
+
+
+def make_drafter(name: str, model=None, params=None) -> Drafter:
+    """Resolve a CLI-style drafter name.
+
+    ``"ngram"`` (or ``"ngram-N"`` for a max n-gram of N) needs no model;
+    ``"self-K"`` (or ``"self"``, K defaulting to 2) truncates the target to
+    its first K layers and needs ``model`` + ``params``.
+    """
+    base, _, arg = name.partition("-")
+    if base == "ngram":
+        return NgramDrafter(max_n=int(arg) if arg else 3)
+    if base == "self":
+        if model is None or params is None:
+            raise ValueError("the self-K drafter needs model= and params=")
+        return TruncatedSelfDrafter(model, params,
+                                    layers=int(arg) if arg else 2)
+    raise ValueError(f"unknown drafter {name!r} (want ngram[-N] or self[-K])")

@@ -1,5 +1,5 @@
 """Minimal deterministic stand-in for ``hypothesis`` (see pyproject's
-``[test]`` extra for the real thing).
+``[props]`` extra for the real thing).
 
 Registered as ``sys.modules['hypothesis']`` by ``conftest.py`` only when the
 real package is absent, so the property tests still run — each ``@given`` test

@@ -5,9 +5,9 @@ import importlib.util
 import pathlib
 import sys
 
-# Property tests use hypothesis when available (``pip install -e .[test]``);
-# otherwise fall back to the deterministic stub so collection never dies on
-# the missing import.
+# Property tests use hypothesis when available (``pip install -e .[props]``
+# — CI's props-real-hypothesis job); otherwise fall back to the
+# deterministic stub so collection never dies on the missing import.
 if importlib.util.find_spec("hypothesis") is None:
     _spec = importlib.util.spec_from_file_location(
         "hypothesis", pathlib.Path(__file__).parent / "_hypothesis_stub.py")

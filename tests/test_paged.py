@@ -112,7 +112,7 @@ def test_scheduler_preempts_youngest_on_exhaustion():
             s.chunk_done(j)
     assert s.live_slots() == [0, 1] and pool.pages_in_use == 4
     s.lengths[0] = 16                       # slot 0 crosses a page boundary
-    preempted, cow = s.ensure_decode_pages()
+    preempted, cow, _ = s.ensure_decode_pages()
     assert [slot for slot, _ in preempted] == [1]   # youngest admitted
     assert cow == []                        # exclusive pages: no copies
     assert s.status[1] == "free" and len(s.queue) == 1

@@ -237,7 +237,7 @@ def test_cow_on_shared_write_and_unregister_in_place():
     assert pool.ref(a_pages[1]) == 2
     _prefill_all(s)                                 # replay chunks only
 
-    preempted, cow = s.ensure_decode_pages()
+    preempted, cow, _ = s.ensure_decode_pages()
     assert not preempted
     # B (older) hit the shared page first: copy-on-write into a fresh page;
     # C then held the original alone -> unregistered, written in place

@@ -1,7 +1,8 @@
 """Property-based scheduler tests (hypothesis, or the deterministic stub in
 ``tests/_hypothesis_stub.py`` when the real package is absent).
 
-Random admit / chunk / decode / preempt / retire / evict interleavings must
+Random admit / chunk / decode / preempt / retire / evict / verify-window
+interleavings must
 uphold the serving-policy invariants the engine relies on — with and
 without the prefix cache:
 
@@ -97,7 +98,7 @@ def _drive(actions, plens, prefix_cache=False):
     for n in plens:
         s.submit(_Req(next(rid), n))
     first_admits, seen = [], set()
-    n_late = 0
+    n_late = n_spec = 0
     for a in actions:
         if a == 0:                      # admit from the queue
             admits, _ = s.admit()
@@ -128,22 +129,45 @@ def _drive(actions, plens, prefix_cache=False):
             if len(resident) > 1:
                 s.preempt(max(resident, key=lambda sl: s.admitted_at[sl]))
                 _check_invariants(pool, s)   # conservation across preemption
-        else:                           # a == 5: late submission
+        elif a == 5:                    # late submission
             n_late += 1                 # vary lengths across late arrivals
             s.submit(_Req(next(rid), 1 + (n_late * 7) % (MAX_LEN // 2)))
+        else:                           # a == 6: speculative verify window
+            n_spec += 1
+            want = {sl: 1 + (n_spec + sl) % 3 for sl in s.live_slots()
+                    if int(s.lengths[sl]) + 4 < s.max_len - 1}
+            try:
+                _, _, granted = s.ensure_decode_pages(extra=want)
+            except RuntimeError:
+                pass                    # single-resident pool exhaustion
+            else:
+                _check_write_safety(pool, s)
+                _check_invariants(pool, s)      # extras are accounted too
+                for sl in want:         # only windowed slots emit here
+                    if s.status[sl] != LIVE:
+                        continue        # a victim of this very pass
+                    # accept a varying prefix of the window (emitting
+                    # accepted + 1 tokens), then roll the reservation back
+                    extra = granted.get(sl, 0)
+                    accepted = (n_spec + sl) % (extra + 1)
+                    s.lengths[sl] += accepted + 1
+                    s.rollback_verify_pages(sl)
+                    # nothing beyond next-write page survives the rollback
+                    assert int(s.n_pages[sl]) <= \
+                        int(s.lengths[sl]) // s.page_size + 1
         _check_invariants(pool, s)
     return first_admits, pool, s
 
 
 @settings(max_examples=20, deadline=None)
-@given(st.lists(st.integers(0, 5), min_size=1, max_size=60),
+@given(st.lists(st.integers(0, 6), min_size=1, max_size=60),
        st.lists(st.integers(1, 20), min_size=1, max_size=8))
 def test_scheduler_never_leaks_pages(actions, plens):
     _drive(actions, plens)
 
 
 @settings(max_examples=20, deadline=None)
-@given(st.lists(st.integers(0, 5), min_size=1, max_size=60),
+@given(st.lists(st.integers(0, 6), min_size=1, max_size=60),
        st.lists(st.integers(1, 20), min_size=1, max_size=8))
 def test_scheduler_never_leaks_pages_with_prefix_cache(actions, plens):
     """Same conservation laws with sharing in play: duplicate-length
@@ -153,7 +177,7 @@ def test_scheduler_never_leaks_pages_with_prefix_cache(actions, plens):
 
 
 @settings(max_examples=20, deadline=None)
-@given(st.lists(st.integers(0, 5), min_size=1, max_size=60),
+@given(st.lists(st.integers(0, 6), min_size=1, max_size=60),
        st.lists(st.integers(1, 20), min_size=1, max_size=8))
 def test_scheduler_fifo_first_admission(actions, plens):
     """First admissions happen in submission order: re-admissions of
@@ -164,7 +188,7 @@ def test_scheduler_fifo_first_admission(actions, plens):
 
 
 @settings(max_examples=20, deadline=None)
-@given(st.lists(st.integers(0, 5), min_size=1, max_size=60),
+@given(st.lists(st.integers(0, 6), min_size=1, max_size=60),
        st.lists(st.integers(1, 20), min_size=1, max_size=8))
 def test_scheduler_fifo_first_admission_with_prefix_cache(actions, plens):
     first_admits, _, _ = _drive(actions, plens, prefix_cache=True)
@@ -172,7 +196,7 @@ def test_scheduler_fifo_first_admission_with_prefix_cache(actions, plens):
 
 
 @settings(max_examples=20, deadline=None)
-@given(st.lists(st.integers(0, 5), min_size=10, max_size=60),
+@given(st.lists(st.integers(0, 6), min_size=10, max_size=60),
        st.lists(st.integers(1, 20), min_size=2, max_size=8),
        st.booleans())
 def test_scheduler_drain_returns_every_page(actions, plens, prefix_cache):

@@ -150,6 +150,73 @@ def test_tp_prefix_cache_parity():
     """)
 
 
+def test_tp_spec_decode_parity():
+    """Speculative decode is host-side policy plus one extra batched device
+    call: sharded spec-on streams (dense + MoE) must equal the tp=1
+    spec-OFF reference bit-for-bit, under forced preemption too, and the
+    draft counters (proposed / accepted / acceptance_rate) must be
+    mesh-invariant — the same drafts are proposed and accepted at every
+    tp."""
+    run_spmd("""
+    from repro.configs import smoke_config
+    from repro.models.api import build_model
+    from repro.serve import ServeEngine
+
+    for arch in ("qwen2-7b", "qwen3-moe-235b-a22b"):
+        cfg = smoke_config(arch).replace(remat="none", n_heads=8,
+                                         n_kv_heads=4)
+        model = build_model(cfg)
+        params = model.init(jax.random.PRNGKey(0))
+
+        def streams(mesh, **kw):
+            eng = ServeEngine(model, params, max_slots=4, max_len=64,
+                              prefill_chunk=16, page_size=8, paged=True,
+                              mesh=mesh, **kw)
+            prompts = ([5, 17, 33, 5, 17, 33, 5, 17], [7] * 11,
+                       [1, 2, 3, 4, 1, 2, 3, 4, 1, 2],
+                       [9, 9, 8, 8, 9, 9, 8, 8])
+            for p in prompts:
+                eng.submit(p, max_new_tokens=10)
+            done = eng.run_until_drained()
+            eng.close()
+            assert all(r.error is None for r in done)
+            return {r.rid: r.output for r in done}, eng.stats
+
+        want, _ = streams(None)
+        got1, s1 = streams(None, spec_decode="ngram")
+        assert got1 == want, (arch, "tp=1 spec parity")
+        assert s1["draft_proposed"] > 0
+        got2, s2 = streams(jax.make_mesh((2,), ("model",)),
+                           spec_decode="ngram")
+        assert got2 == want, (arch, "tp=2 spec parity")
+        for k in ("draft_proposed", "draft_accepted", "acceptance_rate"):
+            assert s1[k] == s2[k], (arch, k, s1[k], s2[k])
+
+    # forced preemption with speculation on: verify windows never evict
+    # anyone plain decode would have kept, and streams still match
+    cfg = smoke_config("qwen2-7b").replace(remat="none", n_heads=8,
+                                           n_kv_heads=4)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+
+    def tight(mesh, **kw):
+        eng = ServeEngine(model, params, max_slots=2, max_len=64, paged=True,
+                          page_size=16, num_pages=4, prefill_chunk=16,
+                          mesh=mesh, **kw)
+        eng.submit([5, 17, 33, 2, 9, 1, 2, 3], max_new_tokens=30)
+        eng.submit([100, 200, 300, 4, 5, 6, 7, 8], max_new_tokens=30)
+        done = eng.run_until_drained()
+        eng.close()
+        return {r.rid: r.output for r in done}, eng.stats["preemptions"]
+
+    want, pre = tight(None)
+    assert pre >= 1
+    got, _ = tight(jax.make_mesh((2,), ("model",)), spec_decode="ngram")
+    assert got == want
+    print("tp spec-decode parity OK")
+    """)
+
+
 def test_slot_parallel_recurrent_family():
     """rwkv6 has no KV to shard; the mesh engine shards decode SLOTS over
     the devices instead (params replicated, state batch-sharded) and the

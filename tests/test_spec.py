@@ -1,0 +1,410 @@
+"""Speculative decode tests: drafters, acceptance rules, and engine-level
+greedy parity (spec-on streams must be bit-identical to spec-off).
+
+The engine-level tests mirror the serving parity suite: dense + MoE smoke
+models, prefix cache on and off, under forced preemption, with seeded
+requests — speculation may only change *latency* (ticks), never a token.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import smoke_config
+from repro.models.api import build_model
+from repro.serve import ServeEngine
+from repro.serve.pages import PagedLeafSpec, scatter_window
+from repro.serve.sampling import spec_rejection_sample, spec_verify_greedy
+from repro.serve.spec import (NgramDrafter, TruncatedSelfDrafter,
+                              make_drafter)
+
+
+@pytest.fixture(scope="module")
+def dense():
+    cfg = smoke_config("qwen2-7b").replace(remat="none")
+    model = build_model(cfg)
+    return model, model.init(jax.random.PRNGKey(0))
+
+
+@pytest.fixture(scope="module")
+def moe():
+    cfg = smoke_config("qwen3-moe-235b-a22b").replace(remat="none")
+    model = build_model(cfg)
+    return model, model.init(jax.random.PRNGKey(1))
+
+
+# ---------------------------------------------------------------------------
+# drafters
+# ---------------------------------------------------------------------------
+
+def test_ngram_drafter_proposes_recent_continuation():
+    d = NgramDrafter(max_n=3)
+    # tail [7, 8] last occurred at positions 1..2, followed by 9, 4
+    toks = np.asarray([1, 7, 8, 9, 4, 7, 8], np.int32)
+    assert d.propose(toks, 4).tolist() == [9, 4, 7, 8][:4]
+    # longest n-gram wins: tail [8, 9] matches over tail [9]
+    toks = np.asarray([8, 9, 1, 9, 2, 8, 9], np.int32)
+    assert d.propose(toks, 2).tolist() == [1, 9]
+
+
+def test_ngram_drafter_takes_most_recent_match():
+    d = NgramDrafter(max_n=2)
+    toks = np.asarray([5, 1, 5, 2, 5], np.int32)      # "5" seen twice before
+    assert d.propose(toks, 1).tolist() == [2]          # latest continuation
+
+
+def test_ngram_drafter_fills_window_inside_loops():
+    """A generation loop of period p: the very last match could only
+    propose p tokens, so the drafter backs up to the most recent match
+    with a FULL k-token continuation."""
+    d = NgramDrafter()
+    assert d.propose(np.asarray([7, 7, 7, 7], np.int32), 3).tolist() == [7] * 3
+    toks = np.asarray([1, 2, 1, 2, 1, 2, 1, 2], np.int32)
+    assert d.propose(toks, 4).tolist() == [1, 2, 1, 2]
+    # no full-window match anywhere: the longest partial continuation wins
+    toks = np.asarray([5, 6, 7, 8, 1, 5, 6, 7], np.int32)
+    assert d.propose(toks, 6).tolist() == [8, 1, 5, 6, 7]   # partial, 5 of 6
+
+
+def test_ngram_drafter_no_match_is_empty():
+    d = NgramDrafter()
+    assert d.propose(np.asarray([1, 2, 3, 4], np.int32), 4).size == 0
+    assert d.propose(np.asarray([1], np.int32), 4).size == 0
+    assert d.propose(np.asarray([7, 7, 7], np.int32), 0).size == 0
+
+
+def test_ngram_drafter_respects_k():
+    d = NgramDrafter(max_n=1)
+    toks = np.asarray([3, 1, 2, 4, 5, 6, 3], np.int32)
+    assert d.propose(toks, 2).tolist() == [1, 2]
+
+
+def test_truncated_drafter_greedy_and_deterministic(dense):
+    model, params = dense
+    d = TruncatedSelfDrafter(model, params, layers=1)
+    assert d.layers == 1
+    toks = np.asarray([5, 17, 33, 2], np.int32)
+    a = d.propose(toks, 3)
+    b = d.propose(toks, 3)
+    assert a.tolist() == b.tolist() and len(a) == 3
+    assert all(0 <= t < model.cfg.vocab for t in a)
+
+
+def test_truncated_drafter_clamps_layers(dense):
+    model, params = dense
+    d = TruncatedSelfDrafter(model, params, layers=99)
+    assert d.layers == model.cfg.n_layers
+
+
+def test_truncated_drafter_rejects_recurrent_family():
+    model = build_model(smoke_config("rwkv6-3b"))
+    with pytest.raises(ValueError, match="ngram"):
+        TruncatedSelfDrafter(model, {}, layers=1)
+
+
+def test_make_drafter_parses_names(dense):
+    model, params = dense
+    assert isinstance(make_drafter("ngram"), NgramDrafter)
+    assert make_drafter("ngram-5").max_n == 5
+    assert make_drafter("self-1", model, params).layers == 1
+    with pytest.raises(ValueError, match="model="):
+        make_drafter("self-1")
+    with pytest.raises(ValueError, match="unknown drafter"):
+        make_drafter("medusa")
+
+
+# ---------------------------------------------------------------------------
+# acceptance rules
+# ---------------------------------------------------------------------------
+
+def test_spec_verify_greedy_accepts_matching_prefix():
+    rows = np.asarray([4, 5, 6, 7])             # target argmax per position
+    assert spec_verify_greedy(rows, [4, 5, 6]) == (3, [4, 5, 6, 7])  # +bonus
+    assert spec_verify_greedy(rows, [4, 9, 6]) == (1, [4, 5])  # correction
+    assert spec_verify_greedy(rows, [9]) == (0, [4])
+    assert spec_verify_greedy(rows, []) == (0, [4])            # plain decode
+
+
+def test_spec_rejection_zero_temperature_is_greedy():
+    logits = np.zeros((3, 8), np.float32)
+    logits[0, 2] = 9.0
+    logits[1, 5] = 9.0
+    logits[2, 1] = 9.0
+    keys = [jax.random.PRNGKey(i) for i in range(3)]
+    accepted, emitted = spec_rejection_sample(keys, logits, [2, 5],
+                                              temperature=0.0)
+    assert (accepted, emitted) == (2, [2, 5, 1])
+
+
+def test_spec_rejection_preserves_target_distribution():
+    """The emitted first token's marginal equals softmax(logits) whatever
+    the drafter proposed — the standard speculative-sampling theorem, here
+    checked empirically for an adversarially bad and a good draft."""
+    logits = np.log(np.asarray([[0.6, 0.3, 0.1]], np.float32))
+    for draft_tok in (2, 0):                   # low-prob and high-prob draft
+        draws = []
+        for i in range(400):
+            keys = [jax.random.PRNGKey(1000 * draft_tok + i),
+                    jax.random.PRNGKey(987654 + i)]
+            _, emitted = spec_rejection_sample(keys, np.tile(logits, (2, 1)),
+                                               [draft_tok])
+            draws.append(emitted[0])
+        freq = np.bincount(np.asarray(draws), minlength=3) / len(draws)
+        assert abs(freq[0] - 0.6) < 0.08, (draft_tok, freq)
+        assert abs(freq[1] - 0.3) < 0.08, (draft_tok, freq)
+
+
+def test_spec_rejection_respects_padded_vocab():
+    logits = np.zeros((2, 8), np.float32)
+    logits[:, 7] = 30.0                         # huge mass in the padded tail
+    for i in range(20):
+        keys = [jax.random.PRNGKey(i), jax.random.PRNGKey(10_000 + i)]
+        _, emitted = spec_rejection_sample(keys, logits, [7], true_vocab=6)
+        assert all(t < 6 for t in emitted)
+
+
+# ---------------------------------------------------------------------------
+# device op
+# ---------------------------------------------------------------------------
+
+def test_scatter_window_writes_per_slot_windows():
+    storage = jnp.zeros((4, 2, 3))              # (N=4 pages, ps=2, D=3)
+    pages = jnp.asarray([[0, 0], [2, 3]], jnp.int32)
+    offs = jnp.asarray([[0, 1], [1, 0]], jnp.int32)
+    vals = jnp.arange(12, dtype=jnp.float32).reshape(2, 2, 3)
+    out = scatter_window(storage, pages, offs, vals)
+    np.testing.assert_array_equal(out[0, 0], vals[0, 0])
+    np.testing.assert_array_equal(out[0, 1], vals[0, 1])
+    np.testing.assert_array_equal(out[2, 1], vals[1, 0])
+    np.testing.assert_array_equal(out[3, 0], vals[1, 1])
+    assert float(jnp.abs(out[1]).sum()) == 0.0
+
+
+# ---------------------------------------------------------------------------
+# engine parity: spec-on == spec-off, token for token
+# ---------------------------------------------------------------------------
+
+_PROMPTS = ([5, 17, 33, 5, 17, 33, 5, 17], [7] * 11,
+            [1, 2, 3, 4, 1, 2, 3, 4, 1, 2], [9, 9, 8, 8, 9, 9, 8, 8])
+
+
+def _streams(model, params, *, n_req=4, max_new=12, seeds=(), **kw):
+    eng = ServeEngine(model, params, max_slots=3, max_len=128,
+                      prefill_chunk=16, **kw)
+    for i, p in enumerate(_PROMPTS[:n_req]):
+        eng.submit(p, max_new_tokens=max_new,
+                   seed=i if i in seeds else None)
+    done = eng.run_until_drained()
+    eng.close()
+    assert all(r.error is None for r in done)
+    return {r.rid: r.output for r in done}, eng
+
+
+@pytest.mark.parametrize("family", ["dense", "moe"])
+@pytest.mark.parametrize("prefix_cache", [False, True])
+def test_spec_greedy_parity(dense, moe, family, prefix_cache):
+    """ngram spec-on greedy streams == spec-off, dense + MoE, prefix cache
+    on and off; the acceptance counters are consistent."""
+    model, params = dense if family == "dense" else moe
+    want, _ = _streams(model, params, prefix_cache=prefix_cache)
+    got, eng = _streams(model, params, prefix_cache=prefix_cache,
+                        spec_decode="ngram")
+    assert got == want
+    s = eng.stats
+    assert s["draft_proposed"] >= s["draft_accepted"] >= 0
+    assert s["draft_proposed"] > 0          # repetitive prompts do draft
+    assert s["acceptance_rate"] == s["draft_accepted"] / s["draft_proposed"]
+
+
+def test_spec_self_drafter_parity(dense):
+    """The truncated-layer self-drafter preserves greedy streams too (its
+    proposals come from a 1-layer prefix of the target)."""
+    model, params = dense
+    want, _ = _streams(model, params)
+    drafter = TruncatedSelfDrafter(model, params, layers=1)
+    got, eng = _streams(model, params, spec_decode=drafter)
+    assert got == want
+    assert eng.stats["draft_proposed"] > 0
+
+
+def test_spec_parity_under_forced_preemption(dense):
+    """A pool at the single-request minimum forces preemption; recompute
+    re-admission plus verify rollback keep streams identical and the pool
+    conserved."""
+    model, params = dense
+
+    def tight(**kw):
+        eng = ServeEngine(model, params, max_slots=2, max_len=64, paged=True,
+                          page_size=16, num_pages=4, prefill_chunk=16, **kw)
+        eng.submit([5, 17, 33, 2, 9, 1, 2, 3], max_new_tokens=30)
+        eng.submit([100, 200, 300, 4, 5, 6, 7, 8], max_new_tokens=30)
+        done = eng.run_until_drained()
+        assert all(r.error is None for r in done)
+        streams = {r.rid: r.output for r in done}
+        eng.close()
+        return streams, eng
+
+    want, eng_off = tight()
+    assert eng_off.stats["preemptions"] >= 1
+    got, eng_on = tight(spec_decode="ngram")
+    assert got == want
+    # verify rollback leaked nothing: the full pool is accounted for
+    pool = eng_on.pool
+    assert pool.pages_free + pool.pages_cached == pool.num_pages
+    assert eng_on.sched.held_pages() == 0
+
+
+def test_spec_seeded_requests_keep_streams(dense):
+    """Seeded requests (default greedy sampler) reproduce bit-identically
+    with speculation on."""
+    model, params = dense
+    want, _ = _streams(model, params, seeds=(0, 2))
+    got, _ = _streams(model, params, seeds=(0, 2), spec_decode="ngram")
+    assert got == want
+
+
+def test_spec_custom_request_sampler_is_isolated(dense):
+    """A request carrying its own (black-box) sampler is never drafted for
+    — it decodes per-token inside the verify batch — while other slots
+    keep speculating; a key-independent sampler's stream is unchanged."""
+    model, params = dense
+    const = lambda key, logits: jnp.asarray(7, jnp.int32)
+
+    def run(spec):
+        eng = ServeEngine(model, params, max_slots=2, max_len=128,
+                          prefill_chunk=16, spec_decode=spec)
+        eng.submit([5, 17, 33, 5, 17, 33], max_new_tokens=8, sampler=const)
+        eng.submit([1, 2, 3, 4, 1, 2, 3, 4, 1, 2], max_new_tokens=8)
+        done = eng.run_until_drained()
+        eng.close()
+        assert all(r.error is None for r in done)
+        return {r.rid: r.output for r in done}
+
+    want = run(None)
+    got = run("ngram")
+    assert want[0] == [7] * 8 and got == want
+
+
+def test_spec_rejection_sampled_streams_reproduce(dense):
+    """spec_temperature > 0: rejection sampling draws valid tokens and
+    seeded streams reproduce run to run (per-stream-index keys)."""
+    model, params = dense
+
+    def run():
+        eng = ServeEngine(model, params, max_slots=2, max_len=128,
+                          prefill_chunk=16, spec_decode="ngram",
+                          spec_temperature=1.0)
+        eng.submit([5, 17, 33, 5, 17, 33, 5, 17], max_new_tokens=10, seed=3)
+        eng.submit([7] * 9, max_new_tokens=10, seed=4)
+        done = eng.run_until_drained()
+        eng.close()
+        assert all(r.error is None for r in done)
+        return {r.rid: r.output for r in done}
+
+    a, b = run(), run()
+    assert a == b
+    assert all(0 <= t < model.cfg.vocab for out in a.values() for t in out)
+    assert all(len(out) == 10 for out in a.values())
+
+
+class _NoDrafts:
+    def propose(self, tokens, k):
+        return np.zeros(0, np.int32)
+
+
+def test_spec_temperature_samples_on_draftless_ticks(dense):
+    """spec_temperature > 0 must temperature-sample EVERY tick — a tick
+    whose drafter proposes nothing may not silently fall back to the
+    greedy sampler, or the stream would mix two distributions."""
+    model, params = dense
+
+    def run(spec_decode, temp):
+        eng = ServeEngine(model, params, max_slots=2, max_len=128,
+                          prefill_chunk=16, spec_decode=spec_decode,
+                          spec_temperature=temp)
+        eng.submit([5, 17, 33, 2, 9], max_new_tokens=12, seed=11)
+        done = eng.run_until_drained()
+        eng.close()
+        assert done[0].error is None
+        return done[0].output
+
+    sampled = run(_NoDrafts(), 1.0)
+    assert sampled == run(_NoDrafts(), 1.0)        # seeded: reproduces
+    greedy_stream = run(None, 0.0)
+    assert sampled != greedy_stream                # actually sampling
+
+
+def test_spec_rejects_pallas_attention(dense):
+    """The paged-attention kernel is single-query only; mixing it with
+    multi-token verify windows would break bit-parity, so the combination
+    is refused up front."""
+    model, params = dense
+    with pytest.raises(ValueError, match="use_pallas_attention"):
+        ServeEngine(model, params, max_slots=2, max_len=64,
+                    spec_decode="ngram", use_pallas_attention=True)
+
+
+def test_spec_windows_never_preempt_for_extras(dense):
+    """A pool sized so that plain decode just fits must behave identically
+    with speculation on: verify windows are best-effort and may not evict
+    the request plain decode would have kept resident."""
+    model, params = dense
+
+    def run(spec):
+        eng = ServeEngine(model, params, max_slots=2, max_len=32, paged=True,
+                          page_size=4, num_pages=16, prefill_chunk=8,
+                          prefix_cache=False, spec_decode=spec)
+        eng.submit([5, 17, 33, 5, 17, 33, 5], max_new_tokens=20)
+        eng.submit([7, 7, 7, 7, 7, 7, 7], max_new_tokens=20)
+        done = eng.run_until_drained()
+        eng.close()
+        assert all(r.error is None for r in done)
+        return {r.rid: r.output for r in done}, eng.stats["preemptions"]
+
+    want, pre_off = run(None)
+    got, pre_on = run("ngram")
+    assert got == want
+    assert pre_on == pre_off == 0       # speculation evicted nobody
+
+
+def test_spec_requires_default_sampler(dense):
+    model, params = dense
+    with pytest.raises(ValueError, match="default greedy"):
+        ServeEngine(model, params, max_slots=2, max_len=64,
+                    spec_decode="ngram",
+                    sampler=lambda k, lg: jnp.zeros((2,), jnp.int32))
+    # rejection sampling at a temperature is the sanctioned sampled mode
+    eng = ServeEngine(model, params, max_slots=2, max_len=64,
+                      spec_decode="ngram", spec_temperature=0.7)
+    assert eng.drafter is not None
+    eng.close()
+
+
+def test_spec_falls_back_on_dense_state_families():
+    """Recurrent families have no paged verify: the engine silently keeps
+    per-token decode (the drafter is never consulted)."""
+    cfg = smoke_config("rwkv6-3b").replace(remat="none")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    eng = ServeEngine(model, params, max_slots=2, max_len=64,
+                      spec_decode="ngram")
+    assert eng.drafter is None
+    eng.submit([5, 5, 5, 5, 5], max_new_tokens=4)
+    done = eng.run_until_drained()
+    eng.close()
+    assert len(done) == 1 and done[0].error is None
+    assert eng.stats["draft_proposed"] == 0
+
+
+def test_spec_decode_emits_multiple_tokens_per_tick(dense):
+    """The whole point: with an agreeable drafter (the target's own greedy
+    continuation), one verify tick emits several tokens — fewer ticks than
+    tokens."""
+    model, params = dense
+    drafter = TruncatedSelfDrafter(model, params, layers=model.cfg.n_layers)
+    got, eng = _streams(model, params, n_req=1, max_new=16,
+                        spec_decode=drafter)
+    want, eng_off = _streams(model, params, n_req=1, max_new=16)
+    assert got == want
+    assert eng.stats["acceptance_rate"] == 1.0      # full-depth self-draft
+    assert eng.stats["ticks"] < eng_off.stats["ticks"]
