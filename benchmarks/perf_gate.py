@@ -29,6 +29,13 @@ METRICS = [
     "paged_equal_budget.tok_per_s",          # paged decode, equal KV budget
     "prefix_cache.on.prefill_tok_per_s",     # shared-prefix prefill reuse
     "spec_decode.on.tok_per_s",              # speculative decode throughput
+    # fused multi-query paged-attention microbench: each path's absolute
+    # calls/s (kernel side is interpret-mode off-TPU, so the gate watches
+    # both paths for cliffs instead of the cross-path ratio)
+    "paged_kernel.decode.kernel_calls_per_s",
+    "paged_kernel.decode.fallback_calls_per_s",
+    "paged_kernel.verify.kernel_calls_per_s",
+    "paged_kernel.verify.fallback_calls_per_s",
 ]
 
 

@@ -37,6 +37,12 @@ def paged_attention(q, k_pages, v_pages, tables, lengths):
                                interpret=_interpret())
 
 
+@jax.jit
+def paged_attention_mq(q, k_pages, v_pages, tables, lengths):
+    return _pa.paged_attention_mq(q, k_pages, v_pages, tables, lengths,
+                                  interpret=_interpret())
+
+
 @functools.partial(jax.jit, static_argnames=("eps", "rows_blk"))
 def rmsnorm(x, scale, *, eps: float = 1e-6, rows_blk: int = 256):
     return _rn.rmsnorm(x, scale, eps=eps, rows_blk=rows_blk,

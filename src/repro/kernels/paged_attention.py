@@ -1,6 +1,6 @@
-"""Paged decode attention: gather K/V through a page table, on-chip.
+"""Paged multi-query attention: gather K/V through a page table, on-chip.
 
-One decode query per sequence attends to a KV prefix that lives in
+A window of W queries per sequence attends to a KV prefix that lives in
 non-contiguous fixed-size pages (:mod:`repro.serve.pages`).  Instead of
 materializing the gathered (B, S, Hkv, D) cache in HBM — the jnp fallback in
 :mod:`repro.models.attention` — the kernel streams each sequence's pages
@@ -8,21 +8,27 @@ HBM->VMEM directly via a scalar-prefetched page table: BlockSpec index maps
 read ``table[b, p]`` to pick the page, so the DMA engine performs the gather
 and the online-softmax state (acc, m, l) never leaves VMEM scratch.
 
-Grid = (B, Hkv, pages_per_seq) with pages innermost: one (G, page_size)
-score tile per step (G = grouped q heads per KV head).  Pages past a
-sequence's length are skipped with ``pl.when`` — cost is O(lengths), not
-O(pages_per_seq), which is the whole point of paging.  Dead slots
-(length 0) produce zero outputs.
+Grid = (B, Hkv, pages_per_seq) with pages innermost: one (W*G, page_size)
+score tile per step (G = grouped q heads per KV head, W query rows stacked
+head-major so row r serves window position ``r // G``).  The causal rule is
+per row: window position w may read KV positions ``< lengths[b] + w`` —
+``lengths`` counts valid KV entries *including* window position 0's token
+(all W tokens' K/V must be written to their pages before the call).  Pages
+past the LAST row's limit are skipped with ``pl.when`` — cost is
+O(lengths + W), not O(pages_per_seq), which is the whole point of paging.
+Rows whose limit ends before a visited page contribute nothing (their
+probabilities are zeroed, not renormalized with exp(0)); dead slots
+(length 0) produce a zero row 0.
 
-``lengths`` counts valid KV entries *including* the current token (whose
-K/V must be written to its page before the call); causality is implicit —
-every cached position is <= the query position.
+W = 1 is exactly the decode kernel this file used to ship: same grid, same
+block shapes, same page gate and mask, so single-token decode stays
+bit-identical.
 
 Tensor-parallel serving runs this kernel INSIDE a ``shard_map`` body: q and
 the page storage arrive head-sharded (Hq/tp, Hkv/tp local heads), the page
 table and lengths replicated, and the grid's Hkv extent is the local head
 count — each device streams only its own head shard's pages, which is what
-makes the paged decode step's HBM traffic scale 1/tp.
+makes the paged step's HBM traffic scale 1/tp.
 """
 from __future__ import annotations
 
@@ -36,9 +42,9 @@ import jax.experimental.pallas.tpu as pltpu
 NEG_INF = -1e30
 
 
-def _paged_kernel(tbl_ref, len_ref, q_ref, k_ref, v_ref, o_ref,
-                  acc_ref, m_ref, l_ref, *, scale: float, page_size: int,
-                  n_pages: int):
+def _paged_mq_kernel(tbl_ref, len_ref, q_ref, k_ref, v_ref, o_ref,
+                     acc_ref, m_ref, l_ref, *, scale: float, page_size: int,
+                     n_pages: int, window: int, group: int):
     b = pl.program_id(0)
     p = pl.program_id(2)
     length = len_ref[b]
@@ -49,20 +55,29 @@ def _paged_kernel(tbl_ref, len_ref, q_ref, k_ref, v_ref, o_ref,
         m_ref[...] = jnp.full_like(m_ref, NEG_INF)
         l_ref[...] = jnp.zeros_like(l_ref)
 
-    @pl.when(p * page_size < length)
+    # Skip pages no row can see: the deepest-reaching row (w = window-1)
+    # reads KV positions < length + window - 1.
+    @pl.when(p * page_size < length + window - 1)
     def _compute():
-        q = q_ref[0, 0].astype(jnp.float32) * scale       # (G, D)
+        q = q_ref[0, 0].astype(jnp.float32) * scale       # (W*G, D)
         k = k_ref[0, :, 0, :].astype(jnp.float32)         # (page_size, D)
         v = v_ref[0, :, 0, :].astype(jnp.float32)
         s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
                                 preferred_element_type=jnp.float32)
         k_pos = p * page_size + jax.lax.broadcasted_iota(
             jnp.int32, s.shape, 1)
-        s = jnp.where(k_pos < length, s, NEG_INF)
+        w_row = jax.lax.broadcasted_iota(jnp.int32, s.shape, 0) // group
+        valid = k_pos < length + w_row
+        s = jnp.where(valid, s, NEG_INF)
 
         m_prev = m_ref[...]
         m_new = jnp.maximum(m_prev, s.max(axis=-1))
         pr = jnp.exp(s - m_new[:, None])
+        # A row may be fully masked on a visited page (its limit ends on an
+        # earlier page): m_new stays NEG_INF and exp(s - m_new) would be
+        # exp(0) = 1.  Zero masked probabilities explicitly — a bitwise
+        # no-op for live rows, where exp(NEG_INF - finite) underflows to 0.
+        pr = jnp.where(valid, pr, 0.0)
         corr = jnp.exp(m_prev - m_new)
         l_ref[...] = l_ref[...] * corr + pr.sum(axis=-1)
         acc_ref[...] = (acc_ref[...] * corr[:, None]
@@ -76,18 +91,27 @@ def _paged_kernel(tbl_ref, len_ref, q_ref, k_ref, v_ref, o_ref,
         o_ref[0, 0] = (acc_ref[...] / l[:, None]).astype(o_ref.dtype)
 
 
-def paged_attention(q, k_pages, v_pages, tables, lengths, *,
-                    interpret: bool = False):
-    """q: (B, Hq, D); k_pages/v_pages: (N, page_size, Hkv, D);
-    tables: (B, P) int32 page ids; lengths: (B,) int32 -> (B, Hq, D)."""
-    B, Hq, D = q.shape
+def paged_attention_mq(q, k_pages, v_pages, tables, lengths, *,
+                       interpret: bool = False):
+    """q: (B, W, Hq, D); k_pages/v_pages: (N, page_size, Hkv, D);
+    tables: (B, P) int32 page ids; lengths: (B,) int32 valid-KV counts for
+    window position 0 (including its own token) -> (B, W, Hq, D).
+
+    Window position w attends to KV positions < lengths + w (per-row causal
+    offset); rows past a sequence's data (pad rows, dead slots) are never
+    read by callers and may hold garbage softmaxed over trash pages.
+    """
+    B, W, Hq, D = q.shape
     N, page_size, Hkv, _ = k_pages.shape
     P = tables.shape[1]
-    G = Hq // Hkv
     assert Hq % Hkv == 0, (Hq, Hkv)
+    G = Hq // Hkv
     scale = D ** -0.5
 
-    qg = q.reshape(B, Hkv, G, D)
+    # (B, W, Hkv, G, D) -> (B, Hkv, W, G, D) -> rows stacked head-major:
+    # row r of the (W*G, D) tile is window position r // G, grouped head r % G.
+    qg = (q.reshape(B, W, Hkv, G, D).transpose(0, 2, 1, 3, 4)
+          .reshape(B, Hkv, W * G, D))
     tables = tables.astype(jnp.int32)
     lengths = lengths.astype(jnp.int32)
 
@@ -97,27 +121,38 @@ def paged_attention(q, k_pages, v_pages, tables, lengths, *,
     def kv_index(b, h, p, tbl, ln):
         return (tbl[b, p], 0, h, 0)
 
-    kernel = functools.partial(_paged_kernel, scale=scale,
-                               page_size=page_size, n_pages=P)
+    kernel = functools.partial(_paged_mq_kernel, scale=scale,
+                               page_size=page_size, n_pages=P,
+                               window=W, group=G)
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,
         grid=(B, Hkv, P),
         in_specs=[
-            pl.BlockSpec((1, 1, G, D), q_index),
+            pl.BlockSpec((1, 1, W * G, D), q_index),
             pl.BlockSpec((1, page_size, 1, D), kv_index),
             pl.BlockSpec((1, page_size, 1, D), kv_index),
         ],
-        out_specs=pl.BlockSpec((1, 1, G, D), q_index),
+        out_specs=pl.BlockSpec((1, 1, W * G, D), q_index),
         scratch_shapes=[
-            pltpu.VMEM((G, D), jnp.float32),
-            pltpu.VMEM((G,), jnp.float32),
-            pltpu.VMEM((G,), jnp.float32),
+            pltpu.VMEM((W * G, D), jnp.float32),
+            pltpu.VMEM((W * G,), jnp.float32),
+            pltpu.VMEM((W * G,), jnp.float32),
         ],
     )
     out = pl.pallas_call(
         kernel,
         grid_spec=grid_spec,
-        out_shape=jax.ShapeDtypeStruct((B, Hkv, G, D), q.dtype),
+        out_shape=jax.ShapeDtypeStruct((B, Hkv, W * G, D), q.dtype),
         interpret=interpret,
     )(tables, lengths, qg, k_pages, v_pages)
-    return out.reshape(B, Hq, D)
+    return (out.reshape(B, Hkv, W, G, D).transpose(0, 2, 1, 3, 4)
+            .reshape(B, W, Hq, D))
+
+
+def paged_attention(q, k_pages, v_pages, tables, lengths, *,
+                    interpret: bool = False):
+    """Single-query decode: q (B, Hq, D) -> (B, Hq, D).  W=1 window of
+    :func:`paged_attention_mq` (bit-identical to the original decode
+    kernel); ``lengths`` includes the current token."""
+    return paged_attention_mq(q[:, None], k_pages, v_pages, tables, lengths,
+                              interpret=interpret)[:, 0]

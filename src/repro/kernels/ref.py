@@ -61,6 +61,32 @@ def paged_attention(q, k_pages, v_pages, tables, lengths):
     return o.reshape(B, Hq, D).astype(q.dtype)
 
 
+def paged_attention_mq(q, k_pages, v_pages, tables, lengths):
+    """Multi-query paged attention by explicit gather (the kernel's oracle).
+
+    q: (B, W, Hq, D); k_pages/v_pages: (N, page_size, Hkv, D);
+    tables: (B, P) int32; lengths: (B,) int32 valid-KV counts for window
+    position 0 (including its own token).  Window position w attends to KV
+    positions < lengths + w.  Returns (B, W, Hq, D); rows with no valid KV
+    (dead slots) are zero.
+    """
+    B, W, Hq, D = q.shape
+    N, ps, Hkv, _ = k_pages.shape
+    P = tables.shape[1]
+    G = Hq // Hkv
+    k = k_pages[tables].reshape(B, P * ps, Hkv, D).astype(jnp.float32)
+    v = v_pages[tables].reshape(B, P * ps, Hkv, D).astype(jnp.float32)
+    qg = q.reshape(B, W, Hkv, G, D).astype(jnp.float32) * D ** -0.5
+    s = jnp.einsum("bwhgd,bkhd->bhgwk", qg, k)
+    limit = lengths[:, None] + jnp.arange(W)[None, :]            # (B, W)
+    ok = jnp.arange(P * ps)[None, None, :] < limit[..., None]    # (B, W, Sk)
+    s = jnp.where(ok[:, None, None, :, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgwk,bkhd->bwhgd", p, v)
+    o = jnp.where((limit > 0)[:, :, None, None, None], o, 0.0)
+    return o.reshape(B, W, Hq, D).astype(q.dtype)
+
+
 def rwkv6_scan(r, k, v, w, u, state0=None):
     """RWKV-6 time mixing recurrence.
 

@@ -71,6 +71,10 @@ def main():
     ap.add_argument("--mesh", default=None, metavar="tp=N",
                     help="serve tensor-parallel over an N-device "
                     "('model',) mesh")
+    ap.add_argument("--pallas-attention", action="store_true",
+                    help="route paged decode/verify/prefill attention "
+                    "through the fused multi-query Pallas kernel "
+                    "(interpret-mode off-TPU; paged families only)")
     args = ap.parse_args()
 
     cfg = smoke_config(args.arch) if args.smoke else get_config(args.arch)
@@ -88,7 +92,8 @@ def main():
                       prefix_cache=args.prefix_cache == "on",
                       spec_decode=None if args.spec_decode == "off"
                       else args.spec_decode,
-                      spec_k=args.spec_k, mesh=mesh)
+                      spec_k=args.spec_k, mesh=mesh,
+                      use_pallas_attention=args.pallas_attention)
 
     rng = np.random.default_rng(0)
     shared = rng.integers(0, cfg.vocab, args.shared_prefix)

@@ -160,7 +160,8 @@ class Model:
             is_leaf=lambda x: isinstance(x, PG.PagedLeafSpec))
 
     def paged_prefill_chunk(self, params, storage, table_row, pages_chunk,
-                            start, tokens, rules, comm=None):
+                            start, tokens, rules, *,
+                            use_pallas: bool = False, comm=None):
         """Prefill tokens (1, C) at positions [start, start+C) into pages."""
         raise NotImplementedError(f"{self.cfg.family} has no paged KV cache")
 
@@ -171,7 +172,8 @@ class Model:
         raise NotImplementedError(f"{self.cfg.family} has no paged KV cache")
 
     def paged_verify(self, params, storage, tables, lengths, tokens,
-                     write_pages, write_offs, rules, *, comm=None):
+                     write_pages, write_offs, rules, *,
+                     use_pallas: bool = False, comm=None):
         """Speculative-decode verify: score a (B, C) window of candidate
         tokens per slot in one batched forward (position 0 = the next
         input, 1..C-1 = drafts).  ``write_pages``/``write_offs`` are
@@ -307,10 +309,11 @@ class DecoderLM(Model):
         return {"k": leaf, "v": leaf}
 
     def paged_prefill_chunk(self, params, storage, table_row, pages_chunk,
-                            start, tokens, rules, comm=None):
+                            start, tokens, rules, *,
+                            use_pallas: bool = False, comm=None):
         return T.paged_prefill_chunk(params, self.cfg, rules, storage,
                                      table_row, pages_chunk, start, tokens,
-                                     comm=comm)
+                                     use_pallas=use_pallas, comm=comm)
 
     def paged_decode_step(self, params, storage, tables, lengths, tokens,
                           write_pages, write_offs, rules, *,
@@ -320,10 +323,11 @@ class DecoderLM(Model):
                                    use_pallas=use_pallas, comm=comm)
 
     def paged_verify(self, params, storage, tables, lengths, tokens,
-                     write_pages, write_offs, rules, *, comm=None):
+                     write_pages, write_offs, rules, *,
+                     use_pallas: bool = False, comm=None):
         return T.paged_verify_chunk(params, self.cfg, rules, storage, tables,
                                     lengths, tokens, write_pages, write_offs,
-                                    comm=comm)
+                                    use_pallas=use_pallas, comm=comm)
 
     def serve_param_specs(self):
         """Megatron TP over the 1-D serving mesh: attention heads, MLP ff,

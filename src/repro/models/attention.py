@@ -104,19 +104,25 @@ def _mask_bias(q_pos, k_pos, *, causal: bool, window: Optional[int],
     return mask
 
 
-def paged_decode_attention(q, k_pages, v_pages, tables, lengths, *,
+def paged_window_attention(q, k_pages, v_pages, tables, n_cached, *,
                            use_pallas: bool = False):
-    """Decode attention against paged KV storage (one query per sequence).
+    """Attention for a window of queries against paged KV storage — the ONE
+    model-side paged-attention path (decode W=1, speculative verify, and
+    page-aligned chunked prefill all route here).
 
-    q: (B, 1, Hq, D); k_pages/v_pages: (N, page_size, Hkv, D);
-    tables: (B, P) int32 page ids; lengths: (B,) int32 valid-KV counts
-    *including* the current token (already written to its page).
+    q: (B, W, Hq, D); k_pages/v_pages: (N, page_size, Hkv, D);
+    tables: (B, P) int32 page ids; ``n_cached``: scalar or (B,) int32 tokens
+    cached BEFORE the window (= window position 0's absolute position).
+    Window position w attends to cached positions plus window positions
+    <= w; every window token's K/V must be written to its page before the
+    call.  Returns (B, W, Hq, D).
 
-    ``use_pallas`` routes through the Pallas kernel
+    ``use_pallas`` routes through the fused multi-query Pallas kernel
     (:mod:`repro.kernels.paged_attention`), which gathers pages on-chip via
-    scalar-prefetched index maps; the fallback gathers the pages with jnp
-    advanced indexing and reuses :func:`gqa_attention`'s masked path —
-    identical math, HBM-materialized gather.
+    scalar-prefetched index maps and applies the per-row causal offset in
+    VMEM; the fallback materializes the gather with jnp advanced indexing
+    and reuses :func:`gqa_attention`'s masked path — identical math, the
+    kernel-parity oracle on the model side.
 
     Head counts are whatever the caller holds: under tensor-parallel serving
     this runs inside a ``shard_map`` body where Hq/Hkv are the LOCAL shard
@@ -130,15 +136,30 @@ def paged_decode_attention(q, k_pages, v_pages, tables, lengths, *,
             f"Hq={Hq} must be a positive multiple of Hkv={Hkv}; under "
             "serving TP both must divide by tp so each shard keeps whole "
             "GQA groups")
+    W = q.shape[1]
     if use_pallas:
         from repro.kernels import ops as kops
-        return kops.paged_attention(q[:, 0], k_pages, v_pages, tables,
-                                    lengths)[:, None]
+        lengths = jnp.broadcast_to(
+            jnp.asarray(n_cached, jnp.int32) + 1, (q.shape[0],))
+        return kops.paged_attention_mq(q, k_pages, v_pages, tables, lengths)
     from repro.serve import pages as PG
     k = PG.gather_pages(k_pages, tables)            # (B, P*page_size, Hkv, D)
     v = PG.gather_pages(v_pages, tables)
-    return gqa_attention(q, k, v, causal=True, q_offset=lengths - 1,
-                         kv_valid_len=lengths, kv_chunk=max(k.shape[1], 1))
+    return gqa_attention(q, k, v, causal=True, q_offset=n_cached,
+                         kv_valid_len=n_cached + W,
+                         kv_chunk=max(k.shape[1], 1))
+
+
+def paged_decode_attention(q, k_pages, v_pages, tables, lengths, *,
+                           use_pallas: bool = False):
+    """Decode attention against paged KV storage (one query per sequence):
+    the W=1 window of :func:`paged_window_attention`.
+
+    q: (B, 1, Hq, D); ``lengths``: (B,) int32 valid-KV counts *including*
+    the current token (already written to its page).
+    """
+    return paged_window_attention(q, k_pages, v_pages, tables, lengths - 1,
+                                  use_pallas=use_pallas)
 
 
 def gqa_attention(q, k, v, *, causal: bool = True,

@@ -334,12 +334,16 @@ def prefill(params, cfg, rules, tokens=None, inputs_embeds=None,
 # ---------------------------------------------------------------------------
 
 def _paged_block(p, x, cfg, rules, *, positions, k_pages, v_pages, tables,
-                 q_offset, kv_valid, write, use_pallas=False, comm=_SERIAL):
+                 q_offset, write, use_pallas=False, comm=_SERIAL):
     """One decoder block against paged KV storage (per-layer page slices).
 
     ``write(sk, sv, k, v) -> (sk, sv)`` commits the fresh K/V into pages —
     a whole-chunk scatter during prefill, a per-slot token scatter during
-    decode — so this block stays agnostic of which phase it runs in.
+    decode, a per-slot window scatter during verify — so this block stays
+    agnostic of which phase it runs in.  Attention is one call for all
+    three phases: :func:`repro.models.attention.paged_window_attention`
+    with ``q_offset`` tokens cached before the query window, fused Pallas
+    kernel or jnp gather fallback per ``use_pallas``.
 
     ``comm`` is the serving-TP transport (Megatron attention/MLP TP inside a
     ``shard_map`` body): the block then sees its local head / ff / expert
@@ -348,20 +352,11 @@ def _paged_block(p, x, cfg, rules, *, positions, k_pages, v_pages, tables,
     each of the two projections back to d_model.  The serial transport makes
     both psums the identity, so this is one code path for both worlds.
     """
-    from repro.serve import pages as PG
-
     h = L.rmsnorm(p["ln1"], x, use_pallas=cfg.use_pallas)
     q, k, v = A.qkv_project(p["attn"], h, cfg, positions, rules=rules)
     k_pages, v_pages = write(k_pages, v_pages, k, v)
-    if use_pallas and q.shape[1] == 1:
-        o = A.paged_decode_attention(q, k_pages, v_pages, tables, kv_valid,
-                                     use_pallas=True)
-    else:
-        kg = PG.gather_pages(k_pages, tables)
-        vg = PG.gather_pages(v_pages, tables)
-        o = A.gqa_attention(q, kg, vg, causal=True, q_offset=q_offset,
-                            kv_valid_len=kv_valid,
-                            kv_chunk=max(kg.shape[1], 1))
+    o = A.paged_window_attention(q, k_pages, v_pages, tables, q_offset,
+                                 use_pallas=use_pallas)
     x = x + comm.all_reduce_sum(A.out_project(p["attn"], o))
 
     h = L.rmsnorm(p["ln2"], x, use_pallas=cfg.use_pallas)
@@ -379,7 +374,7 @@ def _paged_block(p, x, cfg, rules, *, positions, k_pages, v_pages, tables,
 
 
 def paged_prefill_chunk(params, cfg, rules, storage, table_row, pages_chunk,
-                        start, tokens, comm=None):
+                        start, tokens, use_pallas=False, comm=None):
     """Prefill one page-aligned prompt chunk into paged storage.
 
     storage: {"k","v"} of (L, N, page_size, Hkv, D);  table_row: (P,) the
@@ -388,7 +383,9 @@ def paged_prefill_chunk(params, cfg, rules, storage, table_row, pages_chunk,
     validity length masks pad garbage, exactly like bucketed dense prefill).
     Returns (storage, hidden (1, C, d)).  Chunks attend causally to every
     previously prefilled page, which is what lets long prompts prefill
-    incrementally between decode ticks.
+    incrementally between decode ticks.  ``use_pallas`` routes attention
+    through the fused multi-query kernel (W = C window, per-row causal
+    offsets) instead of the jnp gather fallback.
 
     With a mesh ``comm`` (inside ``shard_map``): params/storage arrive
     head-sharded, hidden stays replicated (see :func:`_paged_block`).
@@ -411,8 +408,8 @@ def paged_prefill_chunk(params, cfg, rules, storage, table_row, pages_chunk,
         p, sk, sv = xs
         x, sk, sv = _paged_block(p, x, cfg, rules, positions=positions,
                                  k_pages=sk, v_pages=sv, tables=tables,
-                                 q_offset=start, kv_valid=start + C,
-                                 write=write, comm=comm)
+                                 q_offset=start, write=write,
+                                 use_pallas=use_pallas, comm=comm)
         return x, (sk, sv)
 
     x, (ks, vs) = jax.lax.scan(body, x, (params["blocks"], storage["k"],
@@ -450,9 +447,8 @@ def paged_decode_step(params, cfg, rules, storage, tables, lengths, tokens,
         p, sk, sv = xs
         x, sk, sv = _paged_block(p, x, cfg, rules, positions=positions,
                                  k_pages=sk, v_pages=sv, tables=tables,
-                                 q_offset=lengths, kv_valid=lengths + 1,
-                                 write=write, use_pallas=use_pallas,
-                                 comm=comm)
+                                 q_offset=lengths, write=write,
+                                 use_pallas=use_pallas, comm=comm)
         return x, (sk, sv)
 
     x, (ks, vs) = jax.lax.scan(body, x, (params["blocks"], storage["k"],
@@ -464,7 +460,7 @@ def paged_decode_step(params, cfg, rules, storage, tables, lengths, tokens,
 
 
 def paged_verify_chunk(params, cfg, rules, storage, tables, lengths, tokens,
-                       write_pages, write_offs, comm=None):
+                       write_pages, write_offs, use_pallas=False, comm=None):
     """Score a per-slot window of candidate tokens in ONE batched forward —
     the speculative-decode verify step.
 
@@ -485,6 +481,9 @@ def paged_verify_chunk(params, cfg, rules, storage, tables, lengths, tokens,
     Causality makes padding safe: query i attends keys <= lengths + i, and
     every real position's K/V is written (to its real page) before
     attention runs, while pad positions can only influence pad logits.
+    ``use_pallas`` scores the whole window with the fused multi-query
+    kernel (same per-row causal rule), keeping spec-on/spec-off greedy
+    bit-parity intact.
 
     With a mesh ``comm`` (inside ``shard_map``) this is sharded exactly
     like :func:`paged_decode_step`: params/storage head-sharded, one psum
@@ -507,8 +506,8 @@ def paged_verify_chunk(params, cfg, rules, storage, tables, lengths, tokens,
         p, sk, sv = xs
         x, sk, sv = _paged_block(p, x, cfg, rules, positions=positions,
                                  k_pages=sk, v_pages=sv, tables=tables,
-                                 q_offset=lengths, kv_valid=lengths + C,
-                                 write=write, comm=comm)
+                                 q_offset=lengths, write=write,
+                                 use_pallas=use_pallas, comm=comm)
         return x, (sk, sv)
 
     x, (ks, vs) = jax.lax.scan(body, x, (params["blocks"], storage["k"],

@@ -121,6 +121,36 @@ class ServeEngine:
         self.paged = bool(paged)
         self.prefix_cache = bool(prefix_cache) and self.paged
 
+        # -- flag validation (one place, construction time) ------------------
+        # Every engine-level capability flag is checked here so misuse fails
+        # fast with one clear error instead of surfacing mid-tick inside a
+        # jitted call.  The fused paged-attention kernel serves all three
+        # paged phases (decode W=1, speculative verify windows, chunked
+        # prefill), so ``use_pallas_attention`` composes freely with
+        # ``spec_decode`` — but it has no meaning for families whose decode
+        # state is not paged KV (recurrent rwkv6/mamba2 scans, sliding-window
+        # ring caches, or ``paged=False``), and silently ignoring it there
+        # would misreport what kernel actually ran.
+        self.use_pallas_attention = bool(use_pallas_attention)
+        if self.use_pallas_attention and not self.paged:
+            raise ValueError(
+                f"use_pallas_attention requires the paged KV engine: "
+                f"{model.cfg.name} ({model.cfg.family}) "
+                + ("was constructed with paged=False"
+                   if model.supports_paged_decode() else
+                   "is a recurrent/window family with no paged KV cache, "
+                   "so no paged-attention kernel can ever apply")
+                + "; drop the flag or use a paged family")
+        if spec_decode not in (None, "off", False) and self.paged \
+                and sampler is not None:
+            raise ValueError(
+                "spec_decode supports the default greedy sampler "
+                "(spec_temperature=0, bit-identical streams) or "
+                "built-in temperature rejection sampling "
+                "(spec_temperature > 0); a custom engine-wide sampler "
+                "cannot be verified and would be silently ignored — "
+                "drop it (per-request samplers remain supported)")
+
         # -- device mesh (tensor-parallel serving) ---------------------------
         # ``mesh=None`` keeps every code path byte-identical to the
         # single-device engine.  With a 1-D ("model",) mesh, paged families
@@ -172,21 +202,6 @@ class ServeEngine:
         elif not self.paged:
             self.drafter = None          # recurrent/window family fallback
         else:
-            if sampler is not None:
-                raise ValueError(
-                    "spec_decode supports the default greedy sampler "
-                    "(spec_temperature=0, bit-identical streams) or "
-                    "built-in temperature rejection sampling "
-                    "(spec_temperature > 0); a custom engine-wide sampler "
-                    "cannot be verified and would be silently ignored — "
-                    "drop it (per-request samplers remain supported)")
-            if use_pallas_attention:
-                raise ValueError(
-                    "spec_decode + use_pallas_attention is unsupported: "
-                    "the paged-attention kernel is single-query (decode) "
-                    "only, so verify windows would score positions with a "
-                    "different kernel than plain decode and greedy "
-                    "spec-on/spec-off bit-parity could not be guaranteed")
             self.drafter = spec_decode if not isinstance(spec_decode, str) \
                 else SP.make_drafter(spec_decode, model=model, params=params)
         # the per-position argmax the greedy acceptance rule scores against
@@ -229,11 +244,13 @@ class ServeEngine:
                     donate_argnums=donate)
                 self._prefill_chunk = jax.jit(
                     lambda p, st, row, pg, s0, t: model.paged_prefill_chunk(
-                        p, st, row, pg, s0, t, rules),
+                        p, st, row, pg, s0, t, rules,
+                        use_pallas=use_pallas_attention),
                     donate_argnums=donate)
                 self._verify_paged = jax.jit(
                     lambda p, st, tb, ln, t, wp, wo: model.paged_verify(
-                        p, st, tb, ln, t, wp, wo, rules),
+                        p, st, tb, ln, t, wp, wo, rules,
+                        use_pallas=use_pallas_attention),
                     donate_argnums=donate)
             else:
                 sspecs = model.paged_storage_specs()
@@ -263,14 +280,16 @@ class ServeEngine:
                     donate_argnums=donate)
                 self._prefill_chunk = jax.jit(CC.shard_map(
                     lambda p, st, row, pg, s0, t: model.paged_prefill_chunk(
-                        p, st, row, pg, s0, t, None, comm=comm),
+                        p, st, row, pg, s0, t, None,
+                        use_pallas=use_pallas_attention, comm=comm),
                     mesh=mesh,
                     in_specs=(pspecs, sspecs, rep, rep, rep, rep),
                     out_specs=(sspecs, rep), check_vma=False),
                     donate_argnums=donate)
                 self._verify_paged = jax.jit(CC.shard_map(
                     lambda p, st, tb, ln, t, wp, wo: model.paged_verify(
-                        p, st, tb, ln, t, wp, wo, None, comm=comm),
+                        p, st, tb, ln, t, wp, wo, None,
+                        use_pallas=use_pallas_attention, comm=comm),
                     mesh=mesh,
                     in_specs=(pspecs, sspecs, rep, rep, rep, rep, rep),
                     out_specs=(sspecs, rep), check_vma=False),

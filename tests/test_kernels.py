@@ -226,3 +226,115 @@ def test_paged_attention_bf16():
     np.testing.assert_allclose(np.asarray(got, np.float32),
                                np.asarray(want, np.float32),
                                rtol=2e-2, atol=2e-2)
+
+
+# ---------------------------------------------------------------------------
+# paged multi-query attention (decode / spec-verify / chunked-prefill windows)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("W", [1, 2, 8])
+@pytest.mark.parametrize("B,Hq,Hkv,D,ps,N,P", [
+    (3, 4, 2, 16, 8, 12, 4),      # GQA
+    (2, 4, 1, 32, 16, 6, 3),      # MQA
+    (1, 8, 8, 64, 8, 4, 2),       # MHA
+])
+def test_paged_attention_mq_vs_ref(W, B, Hq, Hkv, D, ps, N, P):
+    """Window kernel vs oracle across ragged per-row offsets: every slot at
+    a different cached length, including partial last pages and a window
+    whose last row lands exactly on the table's capacity."""
+    q = _arr((B, W, Hq, D))
+    kp = _arr((N, ps, Hkv, D))
+    vp = _arr((N, ps, Hkv, D))
+    tables = jnp.asarray(RNG.integers(0, N, size=(B, P)), jnp.int32)
+    # row w of slot b sees lengths[b] + w keys; keep the deepest row in range
+    lens = RNG.integers(1, P * ps - W + 2, size=B)
+    lens[0] = P * ps - W + 1                 # full table for the last row
+    lengths = jnp.asarray(lens, jnp.int32)
+    got = ops.paged_attention_mq(q, kp, vp, tables, lengths)
+    want = ref.paged_attention_mq(q, kp, vp, tables, lengths)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_paged_attention_mq_w1_is_bitwise_decode():
+    """W=1 must be the decode kernel, bit for bit — the engine's decode
+    stream guarantees hang off this equivalence."""
+    q = _arr((3, 4, 16))
+    kp = _arr((10, 8, 2, 16))
+    vp = _arr((10, 8, 2, 16))
+    tables = jnp.asarray(RNG.integers(0, 10, size=(3, 4)), jnp.int32)
+    lengths = jnp.asarray([0, 7, 32], jnp.int32)
+    dec = np.asarray(ops.paged_attention(q, kp, vp, tables, lengths))
+    mq = np.asarray(ops.paged_attention_mq(q[:, None], kp, vp, tables,
+                                           lengths)[:, 0])
+    np.testing.assert_array_equal(dec, mq)
+
+
+def test_paged_attention_mq_dead_slot_row0_is_zero():
+    """length-0 slots (dead decode slots) emit an exact-zero first row;
+    deeper rows are never read by the engine."""
+    q = _arr((2, 4, 4, 16))
+    kp = _arr((6, 8, 2, 16))
+    vp = _arr((6, 8, 2, 16))
+    tables = jnp.zeros((2, 3), jnp.int32)
+    lengths = jnp.asarray([0, 5], jnp.int32)
+    got = np.asarray(ops.paged_attention_mq(q, kp, vp, tables, lengths))
+    assert np.all(got[0, 0] == 0.0)
+    assert np.any(got[1] != 0.0)
+
+
+def test_paged_attention_mq_trash_page_rows_isolated():
+    """Pad rows route their K/V to the pool's trash page (last page id, the
+    verify-path convention for short windows / dead slots): whatever lands
+    there must not perturb rows whose tables never reference it."""
+    B, W, Hq, Hkv, D, ps, P = 2, 4, 4, 2, 16, 8, 3
+    N = 7                                    # pages 0..5 live, 6 = trash
+    q = _arr((B, W, Hq, D))
+    kp = _arr((N, ps, Hkv, D))
+    vp = _arr((N, ps, Hkv, D))
+    tables = jnp.asarray(RNG.integers(0, N - 1, size=(B, P)), jnp.int32)
+    lengths = jnp.asarray([5, ps * P - W + 1], jnp.int32)
+    base = np.asarray(ops.paged_attention_mq(q, kp, vp, tables, lengths))
+    # trash the trash page — live-row outputs must be bit-identical
+    kp2 = kp.at[N - 1].set(1e4)
+    vp2 = vp.at[N - 1].set(-1e4)
+    got = np.asarray(ops.paged_attention_mq(q, kp2, vp2, tables, lengths))
+    np.testing.assert_array_equal(base, got)
+    np.testing.assert_allclose(
+        base, np.asarray(ref.paged_attention_mq(q, kp, vp, tables, lengths)),
+        rtol=2e-4, atol=2e-4)
+
+
+def test_paged_attention_mq_matches_window_over_contiguous_cache():
+    """A contiguous page layout must reproduce the jnp fallback's windowed
+    attention on the equivalent dense cache (the model-side oracle used by
+    paged_window_attention)."""
+    B, W, Hq, Hkv, D, ps = 2, 4, 4, 2, 16, 8
+    P = 4
+    S = P * ps
+    k = _arr((B, S, Hkv, D))
+    v = _arr((B, S, Hkv, D))
+    q = _arr((B, W, Hq, D))
+    n_cached = jnp.asarray([11, S - W], jnp.int32)   # window 0's position
+    kp = k.reshape(B * P, ps, Hkv, D)
+    vp = v.reshape(B * P, ps, Hkv, D)
+    tables = jnp.arange(B * P, dtype=jnp.int32).reshape(B, P)
+    got = ops.paged_attention_mq(q, kp, vp, tables, n_cached + 1)
+    from repro.models.attention import gqa_attention
+    want = gqa_attention(q, k, v, causal=True, q_offset=n_cached,
+                         kv_valid_len=n_cached + W, kv_chunk=S)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_paged_attention_mq_bf16():
+    q = _arr((2, 3, 4, 16), jnp.bfloat16)
+    kp = _arr((8, 8, 2, 16), jnp.bfloat16)
+    vp = _arr((8, 8, 2, 16), jnp.bfloat16)
+    tables = jnp.asarray(RNG.integers(0, 8, size=(2, 3)), jnp.int32)
+    lengths = jnp.asarray([20, 7], jnp.int32)
+    got = ops.paged_attention_mq(q, kp, vp, tables, lengths)
+    want = ref.paged_attention_mq(q, kp, vp, tables, lengths)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=2e-2, atol=2e-2)

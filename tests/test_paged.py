@@ -197,6 +197,75 @@ def test_paged_engine_parity_under_preemption():
     assert eng.stats["preemptions"] >= 1
 
 
+def test_paged_engine_pallas_kernel_parity(family, monkeypatch):
+    """The fused multi-query kernel behind prefill + decode
+    (use_pallas_attention=True) emits streams identical to the jnp
+    gather-fallback engine, dense + MoE, prefix cache on and off — and the
+    kernel path never touches ``gather_pages``: the whole point is that the
+    page gather happens on-chip via the prefetched table, so HBM
+    materialization of the cache would be a silent perf regression."""
+    model, params = family
+    for prefix_cache in (False, True):
+        want, _ = _run(model, params, True, page_size=16, prefill_chunk=16,
+                       prefix_cache=prefix_cache)
+        real = PG.gather_pages
+        calls = []
+
+        def counting(storage, tables, *, n_prefix=0):
+            calls.append(tables.shape)
+            return real(storage, tables, n_prefix=n_prefix)
+
+        monkeypatch.setattr(PG, "gather_pages", counting)
+        got, _ = _run(model, params, True, page_size=16, prefill_chunk=16,
+                      prefix_cache=prefix_cache, use_pallas_attention=True)
+        monkeypatch.undo()
+        assert got == want, prefix_cache
+        assert calls == [], calls           # no HBM gather on the hot path
+
+
+def test_paged_engine_pallas_parity_under_preemption():
+    """Forced preemption + recompute with the kernel on: streams stay
+    bit-identical to the kernel-off run and the pool is conserved."""
+    cfg = smoke_config("qwen2-7b").replace(remat="none")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+
+    def go(**kw):
+        eng = ServeEngine(model, params, max_slots=2, max_len=64, paged=True,
+                          page_size=16, num_pages=4, prefill_chunk=16, **kw)
+        eng.submit([5, 17, 33, 2, 9, 1, 2, 3], max_new_tokens=30)
+        eng.submit([100, 200, 300, 4, 5, 6, 7, 8], max_new_tokens=30)
+        done = eng.run_until_drained()
+        eng.close()
+        return {r.rid: r.output for r in done}, eng
+
+    want, eng_off = go()
+    got, eng_on = go(use_pallas_attention=True)
+    assert eng_off.stats["preemptions"] >= 1
+    assert eng_on.stats["preemptions"] >= 1
+    assert got == want
+    pool = eng_on.pool
+    assert pool.pages_free + pool.pages_cached == pool.num_pages
+
+
+def test_pallas_attention_flag_validated_at_construction():
+    """use_pallas_attention is checked once in __init__: a paged-capable
+    family forced to paged=False and a recurrent family (no paged KV cache,
+    ever) both fail fast with an error naming the family — not mid-tick
+    inside a jitted call."""
+    cfg = smoke_config("qwen2-7b").replace(remat="none")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    with pytest.raises(ValueError, match="paged=False"):
+        ServeEngine(model, params, paged=False, use_pallas_attention=True)
+
+    rcfg = smoke_config("rwkv6-3b").replace(remat="none")
+    rmodel = build_model(rcfg)
+    rparams = rmodel.init(jax.random.PRNGKey(0))
+    with pytest.raises(ValueError, match="recurrent/window"):
+        ServeEngine(rmodel, rparams, use_pallas_attention=True)
+
+
 def test_recurrent_family_keeps_dense_path():
     """rwkv6 has O(1) decode state — the engine auto-selects the dense slot
     path and still matches itself run-to-run; paged=True is refused."""

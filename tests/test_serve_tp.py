@@ -191,6 +191,12 @@ def test_tp_spec_decode_parity():
         assert got2 == want, (arch, "tp=2 spec parity")
         for k in ("draft_proposed", "draft_accepted", "acceptance_rate"):
             assert s1[k] == s2[k], (arch, k, s1[k], s2[k])
+        # fused multi-query kernel inside the shard_map body: spec verify +
+        # decode + prefill all through Pallas, still the same streams
+        got3, s3 = streams(jax.make_mesh((2,), ("model",)),
+                           spec_decode="ngram", use_pallas_attention=True)
+        assert got3 == want, (arch, "tp=2 spec+pallas parity")
+        assert s3["draft_proposed"] > 0
 
     # forced preemption with speculation on: verify windows never evict
     # anyone plain decode would have kept, and streams still match

@@ -334,14 +334,45 @@ def test_spec_temperature_samples_on_draftless_ticks(dense):
     assert sampled != greedy_stream                # actually sampling
 
 
-def test_spec_rejects_pallas_attention(dense):
-    """The paged-attention kernel is single-query only; mixing it with
-    multi-token verify windows would break bit-parity, so the combination
-    is refused up front."""
+@pytest.mark.parametrize("family", ["dense", "moe"])
+@pytest.mark.parametrize("prefix_cache", [False, True])
+def test_spec_pallas_greedy_parity(dense, moe, family, prefix_cache):
+    """spec_decode + use_pallas_attention (once refused, now served by the
+    fused multi-query kernel for both verify windows and decode) keeps
+    greedy streams bit-identical to the spec-off/Pallas-off engine — dense
+    + MoE, prefix cache on and off — and speculation actually ran."""
+    model, params = dense if family == "dense" else moe
+    want, _ = _streams(model, params, prefix_cache=prefix_cache)
+    got, eng = _streams(model, params, prefix_cache=prefix_cache,
+                        spec_decode="ngram", use_pallas_attention=True)
+    assert got == want
+    assert eng.stats["draft_proposed"] > 0
+
+
+def test_spec_pallas_parity_under_forced_preemption(dense):
+    """Kernel-backed verify under preemption: rollback + recompute keep
+    streams identical to the plain engine and the pool stays conserved."""
     model, params = dense
-    with pytest.raises(ValueError, match="use_pallas_attention"):
-        ServeEngine(model, params, max_slots=2, max_len=64,
-                    spec_decode="ngram", use_pallas_attention=True)
+
+    def tight(**kw):
+        eng = ServeEngine(model, params, max_slots=2, max_len=64, paged=True,
+                          page_size=16, num_pages=4, prefill_chunk=16, **kw)
+        eng.submit([5, 17, 33, 2, 9, 1, 2, 3], max_new_tokens=30)
+        eng.submit([100, 200, 300, 4, 5, 6, 7, 8], max_new_tokens=30)
+        done = eng.run_until_drained()
+        assert all(r.error is None for r in done)
+        streams = {r.rid: r.output for r in done}
+        eng.close()
+        return streams, eng
+
+    want, eng_off = tight()
+    assert eng_off.stats["preemptions"] >= 1
+    got, eng_on = tight(spec_decode="ngram", use_pallas_attention=True)
+    assert got == want
+    assert eng_on.stats["preemptions"] >= 1
+    pool = eng_on.pool
+    assert pool.pages_free + pool.pages_cached == pool.num_pages
+    assert eng_on.sched.held_pages() == 0
 
 
 def test_spec_windows_never_preempt_for_extras(dense):
