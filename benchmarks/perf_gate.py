@@ -29,6 +29,10 @@ METRICS = [
     "paged_equal_budget.tok_per_s",          # paged decode, equal KV budget
     "prefix_cache.on.prefill_tok_per_s",     # shared-prefix prefill reuse
     "spec_decode.on.tok_per_s",              # speculative decode throughput
+    # int8 KV pages at the equal-HBM budget: quant-on decode must not
+    # cliff vs its own baseline, and neither may the quant-off reference
+    "kv_quant.equal_hbm.int8.tok_per_s",
+    "kv_quant.equal_hbm.off.tok_per_s",
     # fused multi-query paged-attention microbench: each path's absolute
     # calls/s (kernel side is interpret-mode off-TPU, so the gate watches
     # both paths for cliffs instead of the cross-path ratio)

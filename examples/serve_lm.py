@@ -24,6 +24,9 @@ ap.add_argument("--spec-decode", default="off", metavar="ngram|self-K|off",
                 help="speculative decode drafter (default off)")
 ap.add_argument("--spec-k", type=int, default=4,
                 help="max draft tokens per verify window")
+ap.add_argument("--kv-quant", choices=("int8", "off"), default="off",
+                help="int8 KV pages with fused in-attention dequant "
+                "(~2-4x concurrent slots at equal HBM)")
 args = ap.parse_args()
 
 cfg = smoke_config("qwen2-7b").replace(remat="none")
@@ -33,7 +36,9 @@ params = model.init(jax.random.PRNGKey(0))
 eng = ServeEngine(model, params, max_slots=4, max_len=128,
                   spec_decode=None if args.spec_decode == "off"
                   else args.spec_decode,
-                  spec_k=args.spec_k)
+                  spec_k=args.spec_k,
+                  kv_quant=None if args.kv_quant == "off"
+                  else args.kv_quant)
 rng = np.random.default_rng(0)
 
 print("submitting 12 requests with prompt lengths 4..40...")
@@ -54,6 +59,9 @@ print(f"decode ticks: {eng.stats['ticks']} "
       f"(vs {toks} for one-at-a-time decoding)")
 print(f"slots reused across {eng.stats['prefills']} prefills; "
       f"mean TTFT {1e3*np.mean(ttft):.0f}ms")
+if eng.kv_quant is not None:
+    print(f"kv quant [{eng.stats['kv_quant']}]: "
+          f"{eng.stats['kv_bytes_per_token']} KV bytes/token")
 if eng.drafter is not None:
     s = eng.stats
     print(f"spec decode [{args.spec_decode}]: proposed={s['draft_proposed']} "

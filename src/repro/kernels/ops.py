@@ -38,8 +38,12 @@ def paged_attention(q, k_pages, v_pages, tables, lengths):
 
 
 @jax.jit
-def paged_attention_mq(q, k_pages, v_pages, tables, lengths):
+def paged_attention_mq(q, k_pages, v_pages, tables, lengths,
+                       k_scale=None, v_scale=None):
+    # k_scale/v_scale: optional (N, page_size, Hkv) int8-page dequant
+    # scales, fused into the kernel's VMEM tile right after the page DMA
     return _pa.paged_attention_mq(q, k_pages, v_pages, tables, lengths,
+                                  k_scale=k_scale, v_scale=v_scale,
                                   interpret=_interpret())
 
 

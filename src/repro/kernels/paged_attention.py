@@ -42,9 +42,14 @@ import jax.experimental.pallas.tpu as pltpu
 NEG_INF = -1e30
 
 
-def _paged_mq_kernel(tbl_ref, len_ref, q_ref, k_ref, v_ref, o_ref,
-                     acc_ref, m_ref, l_ref, *, scale: float, page_size: int,
-                     n_pages: int, window: int, group: int):
+def _paged_mq_kernel(tbl_ref, len_ref, q_ref, k_ref, v_ref, *rest,
+                     scale: float, page_size: int,
+                     n_pages: int, window: int, group: int,
+                     quantized: bool = False):
+    if quantized:
+        ks_ref, vs_ref, o_ref, acc_ref, m_ref, l_ref = rest
+    else:
+        o_ref, acc_ref, m_ref, l_ref = rest
     b = pl.program_id(0)
     p = pl.program_id(2)
     length = len_ref[b]
@@ -62,6 +67,12 @@ def _paged_mq_kernel(tbl_ref, len_ref, q_ref, k_ref, v_ref, o_ref,
         q = q_ref[0, 0].astype(jnp.float32) * scale       # (W*G, D)
         k = k_ref[0, :, 0, :].astype(jnp.float32)         # (page_size, D)
         v = v_ref[0, :, 0, :].astype(jnp.float32)
+        if quantized:
+            # fused dequant: the int8 page tile was DMA'd HBM->VMEM (the
+            # bandwidth win) and the per-(row, head) scale is applied here
+            # in VMEM — the full-precision K/V never exists in HBM
+            k = k * ks_ref[0, :, 0][:, None]              # (page_size, 1)
+            v = v * vs_ref[0, :, 0][:, None]
         s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
                                 preferred_element_type=jnp.float32)
         k_pos = p * page_size + jax.lax.broadcasted_iota(
@@ -92,6 +103,7 @@ def _paged_mq_kernel(tbl_ref, len_ref, q_ref, k_ref, v_ref, o_ref,
 
 
 def paged_attention_mq(q, k_pages, v_pages, tables, lengths, *,
+                       k_scale=None, v_scale=None,
                        interpret: bool = False):
     """q: (B, W, Hq, D); k_pages/v_pages: (N, page_size, Hkv, D);
     tables: (B, P) int32 page ids; lengths: (B,) int32 valid-KV counts for
@@ -100,11 +112,19 @@ def paged_attention_mq(q, k_pages, v_pages, tables, lengths, *,
     Window position w attends to KV positions < lengths + w (per-row causal
     offset); rows past a sequence's data (pad rows, dead slots) are never
     read by callers and may hold garbage softmaxed over trash pages.
+
+    ``k_scale``/``v_scale``: optional (N, page_size, Hkv) per-(row, head)
+    dequantization scales for int8 pages.  They ride the same
+    scalar-prefetched page-table index map as their value pages and are
+    applied to the K/V tile in VMEM right after the DMA — the page stream
+    out of HBM stays int8, which is where the 4x bandwidth cut happens.
     """
     B, W, Hq, D = q.shape
     N, page_size, Hkv, _ = k_pages.shape
     P = tables.shape[1]
     assert Hq % Hkv == 0, (Hq, Hkv)
+    assert (k_scale is None) == (v_scale is None), "pass both scales or none"
+    quantized = k_scale is not None
     G = Hq // Hkv
     scale = D ** -0.5
 
@@ -121,17 +141,26 @@ def paged_attention_mq(q, k_pages, v_pages, tables, lengths, *,
     def kv_index(b, h, p, tbl, ln):
         return (tbl[b, p], 0, h, 0)
 
+    def scale_index(b, h, p, tbl, ln):
+        return (tbl[b, p], 0, h)
+
     kernel = functools.partial(_paged_mq_kernel, scale=scale,
                                page_size=page_size, n_pages=P,
-                               window=W, group=G)
+                               window=W, group=G, quantized=quantized)
+    in_specs = [
+        pl.BlockSpec((1, 1, W * G, D), q_index),
+        pl.BlockSpec((1, page_size, 1, D), kv_index),
+        pl.BlockSpec((1, page_size, 1, D), kv_index),
+    ]
+    operands = [qg, k_pages, v_pages]
+    if quantized:
+        in_specs += [pl.BlockSpec((1, page_size, 1), scale_index),
+                     pl.BlockSpec((1, page_size, 1), scale_index)]
+        operands += [k_scale, v_scale]
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,
         grid=(B, Hkv, P),
-        in_specs=[
-            pl.BlockSpec((1, 1, W * G, D), q_index),
-            pl.BlockSpec((1, page_size, 1, D), kv_index),
-            pl.BlockSpec((1, page_size, 1, D), kv_index),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((1, 1, W * G, D), q_index),
         scratch_shapes=[
             pltpu.VMEM((W * G, D), jnp.float32),
@@ -144,15 +173,16 @@ def paged_attention_mq(q, k_pages, v_pages, tables, lengths, *,
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((B, Hkv, W * G, D), q.dtype),
         interpret=interpret,
-    )(tables, lengths, qg, k_pages, v_pages)
+    )(tables, lengths, *operands)
     return (out.reshape(B, Hkv, W, G, D).transpose(0, 2, 1, 3, 4)
             .reshape(B, W, Hq, D))
 
 
 def paged_attention(q, k_pages, v_pages, tables, lengths, *,
-                    interpret: bool = False):
+                    k_scale=None, v_scale=None, interpret: bool = False):
     """Single-query decode: q (B, Hq, D) -> (B, Hq, D).  W=1 window of
     :func:`paged_attention_mq` (bit-identical to the original decode
     kernel); ``lengths`` includes the current token."""
     return paged_attention_mq(q[:, None], k_pages, v_pages, tables, lengths,
+                              k_scale=k_scale, v_scale=v_scale,
                               interpret=interpret)[:, 0]

@@ -61,7 +61,8 @@ def paged_attention(q, k_pages, v_pages, tables, lengths):
     return o.reshape(B, Hq, D).astype(q.dtype)
 
 
-def paged_attention_mq(q, k_pages, v_pages, tables, lengths):
+def paged_attention_mq(q, k_pages, v_pages, tables, lengths,
+                       k_scale=None, v_scale=None):
     """Multi-query paged attention by explicit gather (the kernel's oracle).
 
     q: (B, W, Hq, D); k_pages/v_pages: (N, page_size, Hkv, D);
@@ -69,6 +70,10 @@ def paged_attention_mq(q, k_pages, v_pages, tables, lengths):
     position 0 (including its own token).  Window position w attends to KV
     positions < lengths + w.  Returns (B, W, Hq, D); rows with no valid KV
     (dead slots) are zero.
+
+    ``k_scale``/``v_scale``: optional (N, page_size, Hkv) per-(row, head)
+    scales for int8 pages — the oracle dequantizes the gathered cache
+    before the plain softmax (the kernel fuses the same multiply in VMEM).
     """
     B, W, Hq, D = q.shape
     N, ps, Hkv, _ = k_pages.shape
@@ -76,6 +81,9 @@ def paged_attention_mq(q, k_pages, v_pages, tables, lengths):
     G = Hq // Hkv
     k = k_pages[tables].reshape(B, P * ps, Hkv, D).astype(jnp.float32)
     v = v_pages[tables].reshape(B, P * ps, Hkv, D).astype(jnp.float32)
+    if k_scale is not None:
+        k = k * k_scale[tables].reshape(B, P * ps, Hkv, 1).astype(jnp.float32)
+        v = v * v_scale[tables].reshape(B, P * ps, Hkv, 1).astype(jnp.float32)
     qg = q.reshape(B, W, Hkv, G, D).astype(jnp.float32) * D ** -0.5
     s = jnp.einsum("bwhgd,bkhd->bhgwk", qg, k)
     limit = lengths[:, None] + jnp.arange(W)[None, :]            # (B, W)

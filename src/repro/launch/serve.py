@@ -75,6 +75,14 @@ def main():
                     help="route paged decode/verify/prefill attention "
                     "through the fused multi-query Pallas kernel "
                     "(interpret-mode off-TPU; paged families only)")
+    ap.add_argument("--kv-quant", choices=("int8", "off"), default="off",
+                    help="store KV pages as int8 with per-(token, head) "
+                    "scale leaves, dequantized inside attention — halves "
+                    "(bf16) or quarters (f32) KV bytes/token, so the same "
+                    "HBM budget holds ~2-4x the concurrent slots")
+    ap.add_argument("--weight-quant", choices=("int8", "off"), default="off",
+                    help="store serve params as per-tensor int8, "
+                    "dequantized on apply inside the jitted paged calls")
     args = ap.parse_args()
 
     cfg = smoke_config(args.arch) if args.smoke else get_config(args.arch)
@@ -93,7 +101,11 @@ def main():
                       spec_decode=None if args.spec_decode == "off"
                       else args.spec_decode,
                       spec_k=args.spec_k, mesh=mesh,
-                      use_pallas_attention=args.pallas_attention)
+                      use_pallas_attention=args.pallas_attention,
+                      kv_quant=None if args.kv_quant == "off"
+                      else args.kv_quant,
+                      weight_quant=None if args.weight_quant == "off"
+                      else args.weight_quant)
 
     rng = np.random.default_rng(0)
     shared = rng.integers(0, cfg.vocab, args.shared_prefix)
@@ -110,6 +122,10 @@ def main():
         f"paged(ps={eng.pool.page_size}, "
         f"hw={eng.stats['pages_high_water']}/{eng.pool.num_pages} pages, "
         f"prefix-cache {args.prefix_cache})")
+    if eng.kv_quant is not None or eng.weight_quant:
+        mode += (f" quant(kv={eng.stats['kv_quant']}, "
+                 f"w={eng.stats['weight_quant']}, "
+                 f"{eng.stats['kv_bytes_per_token']} KV B/tok)")
     if eng.drafter is not None:
         mode += f" spec={args.spec_decode}(k={eng.spec_k})"
     if mesh is not None:

@@ -139,12 +139,14 @@ class Model:
     def supports_paged_decode(self) -> bool:
         return False
 
-    def paged_leaf_specs(self):
+    def paged_leaf_specs(self, quant=None):
         """Pytree of :class:`repro.serve.pages.PagedLeafSpec` describing the
-        per-token KV leaves around the pool's (num_pages, page_size) axes."""
+        per-token KV leaves around the pool's (num_pages, page_size) axes.
+        With a ``quant`` policy the value leaves use its storage dtype and
+        per-row scale leaves ride along (see :mod:`repro.serve.quant`)."""
         raise NotImplementedError(f"{self.cfg.family} has no paged KV cache")
 
-    def paged_state_specs(self, num_pages: int, page_size: int):
+    def paged_state_specs(self, num_pages: int, page_size: int, quant=None):
         """Pytree of ArraySpec matching the PagePool storage (incl. the
         trash page at index ``num_pages``).  Derived from
         :meth:`paged_leaf_specs` so the pool layout has one source of
@@ -156,24 +158,24 @@ class Model:
             return ArraySpec(shape, s.dtype, P(*([None] * len(shape))))
 
         return jax.tree_util.tree_map(
-            leaf, self.paged_leaf_specs(),
+            leaf, self.paged_leaf_specs(quant),
             is_leaf=lambda x: isinstance(x, PG.PagedLeafSpec))
 
     def paged_prefill_chunk(self, params, storage, table_row, pages_chunk,
                             start, tokens, rules, *,
-                            use_pallas: bool = False, comm=None):
+                            use_pallas: bool = False, comm=None, quant=None):
         """Prefill tokens (1, C) at positions [start, start+C) into pages."""
         raise NotImplementedError(f"{self.cfg.family} has no paged KV cache")
 
     def paged_decode_step(self, params, storage, tables, lengths, tokens,
                           write_pages, write_offs, rules, *,
-                          use_pallas: bool = False, comm=None):
+                          use_pallas: bool = False, comm=None, quant=None):
         """tokens (B,1) -> (new_storage, logits (B,1,V)) through the pool."""
         raise NotImplementedError(f"{self.cfg.family} has no paged KV cache")
 
     def paged_verify(self, params, storage, tables, lengths, tokens,
                      write_pages, write_offs, rules, *,
-                     use_pallas: bool = False, comm=None):
+                     use_pallas: bool = False, comm=None, quant=None):
         """Speculative-decode verify: score a (B, C) window of candidate
         tokens per slot in one batched forward (position 0 = the next
         input, 1..C-1 = drafts).  ``write_pages``/``write_offs`` are
@@ -206,10 +208,11 @@ class Model:
             leaf, self.decode_state_specs(batch, max_len),
             is_leaf=lambda x: isinstance(x, ArraySpec))
 
-    def paged_storage_specs(self):
+    def paged_storage_specs(self, quant=None):
         """Mesh specs for the PagePool storage under TP serving: the leading
         suffix axis of every :meth:`paged_leaf_specs` leaf (the KV-head axis
-        by convention) shards over "model"."""
+        by convention — scale leaves included, their suffix is exactly
+        (Hkv,)) shards over "model"."""
         from repro.serve import pages as PG
 
         def leaf(s: PG.PagedLeafSpec) -> P:
@@ -217,7 +220,7 @@ class Model:
             return P(*([None] * (n_pre + 2) + ["model"]
                        + [None] * (len(s.suffix) - 1)))
         return jax.tree_util.tree_map(
-            leaf, self.paged_leaf_specs(),
+            leaf, self.paged_leaf_specs(quant),
             is_leaf=lambda x: isinstance(x, PG.PagedLeafSpec))
 
     def validate_serve_tp(self, tp: int) -> None:
@@ -300,34 +303,38 @@ class DecoderLM(Model):
     def supports_paged_decode(self) -> bool:
         return not T.uses_window_cache(self.cfg)
 
-    def paged_leaf_specs(self):
+    def paged_leaf_specs(self, quant=None):
         from repro.serve.pages import PagedLeafSpec
+        from repro.serve.quant import quantize_leaf_specs
         cfg = self.cfg
         leaf = PagedLeafSpec((cfg.n_layers,),
                              (cfg.padded_kv_heads, cfg.head_dim),
                              jnp.dtype(cfg.dtype))
-        return {"k": leaf, "v": leaf}
+        return quantize_leaf_specs({"k": leaf, "v": leaf}, quant)
 
     def paged_prefill_chunk(self, params, storage, table_row, pages_chunk,
                             start, tokens, rules, *,
-                            use_pallas: bool = False, comm=None):
+                            use_pallas: bool = False, comm=None, quant=None):
         return T.paged_prefill_chunk(params, self.cfg, rules, storage,
                                      table_row, pages_chunk, start, tokens,
-                                     use_pallas=use_pallas, comm=comm)
+                                     use_pallas=use_pallas, comm=comm,
+                                     quant=quant)
 
     def paged_decode_step(self, params, storage, tables, lengths, tokens,
                           write_pages, write_offs, rules, *,
-                          use_pallas: bool = False, comm=None):
+                          use_pallas: bool = False, comm=None, quant=None):
         return T.paged_decode_step(params, self.cfg, rules, storage, tables,
                                    lengths, tokens, write_pages, write_offs,
-                                   use_pallas=use_pallas, comm=comm)
+                                   use_pallas=use_pallas, comm=comm,
+                                   quant=quant)
 
     def paged_verify(self, params, storage, tables, lengths, tokens,
                      write_pages, write_offs, rules, *,
-                     use_pallas: bool = False, comm=None):
+                     use_pallas: bool = False, comm=None, quant=None):
         return T.paged_verify_chunk(params, self.cfg, rules, storage, tables,
                                     lengths, tokens, write_pages, write_offs,
-                                    use_pallas=use_pallas, comm=comm)
+                                    use_pallas=use_pallas, comm=comm,
+                                    quant=quant)
 
     def serve_param_specs(self):
         """Megatron TP over the 1-D serving mesh: attention heads, MLP ff,

@@ -105,6 +105,7 @@ def _mask_bias(q_pos, k_pos, *, causal: bool, window: Optional[int],
 
 
 def paged_window_attention(q, k_pages, v_pages, tables, n_cached, *,
+                           k_scale=None, v_scale=None,
                            use_pallas: bool = False):
     """Attention for a window of queries against paged KV storage — the ONE
     model-side paged-attention path (decode W=1, speculative verify, and
@@ -129,6 +130,12 @@ def paged_window_attention(q, k_pages, v_pages, tables, n_cached, *,
     (Hq_global/tp, Hkv_global/tp) and the pages carry only local KV heads —
     attention is embarrassingly parallel across the head axis, so no
     collective appears here.
+
+    ``k_scale``/``v_scale``: optional (N, page_size, Hkv) per-(row, head)
+    dequantization scales for int8 pages.  The kernel path fuses the
+    multiply into the VMEM page tile (the page stream stays int8 in HBM);
+    this fallback dequantizes right after the gather — same math, the
+    quantized kernel's parity oracle.
     """
     Hq, Hkv = q.shape[2], k_pages.shape[2]
     if Hkv == 0 or Hq % Hkv:
@@ -141,16 +148,24 @@ def paged_window_attention(q, k_pages, v_pages, tables, n_cached, *,
         from repro.kernels import ops as kops
         lengths = jnp.broadcast_to(
             jnp.asarray(n_cached, jnp.int32) + 1, (q.shape[0],))
-        return kops.paged_attention_mq(q, k_pages, v_pages, tables, lengths)
+        return kops.paged_attention_mq(q, k_pages, v_pages, tables, lengths,
+                                       k_scale, v_scale)
+    from repro.optim.compress import int8_decompress
     from repro.serve import pages as PG
     k = PG.gather_pages(k_pages, tables)            # (B, P*page_size, Hkv, D)
     v = PG.gather_pages(v_pages, tables)
+    if k_scale is not None:
+        k = int8_decompress(k, PG.gather_pages(k_scale, tables),
+                            axis=-1, dtype=q.dtype)
+        v = int8_decompress(v, PG.gather_pages(v_scale, tables),
+                            axis=-1, dtype=q.dtype)
     return gqa_attention(q, k, v, causal=True, q_offset=n_cached,
                          kv_valid_len=n_cached + W,
                          kv_chunk=max(k.shape[1], 1))
 
 
 def paged_decode_attention(q, k_pages, v_pages, tables, lengths, *,
+                           k_scale=None, v_scale=None,
                            use_pallas: bool = False):
     """Decode attention against paged KV storage (one query per sequence):
     the W=1 window of :func:`paged_window_attention`.
@@ -159,6 +174,7 @@ def paged_decode_attention(q, k_pages, v_pages, tables, lengths, *,
     the current token (already written to its page).
     """
     return paged_window_attention(q, k_pages, v_pages, tables, lengths - 1,
+                                  k_scale=k_scale, v_scale=v_scale,
                                   use_pallas=use_pallas)
 
 

@@ -333,17 +333,41 @@ def prefill(params, cfg, rules, tokens=None, inputs_embeds=None,
 # Serving: paged KV cache (pool storage instead of per-slot dense buffers)
 # ---------------------------------------------------------------------------
 
-def _paged_block(p, x, cfg, rules, *, positions, k_pages, v_pages, tables,
+def _write_kv(kv, k, v, quant, scatter):
+    """Commit fresh K/V into one layer's page storage through a pure
+    ``scatter(leaf_storage, vals) -> leaf_storage`` op.
+
+    With a ``quant`` policy the values are quantized first and the
+    per-row scales scatter through the SAME op into their sibling
+    ``k_scale``/``v_scale`` leaves — the policy supplies the numerics,
+    this helper only routes blocks to leaves (the function-centric split),
+    so prefill chunks, decode tokens and verify windows all write
+    quantized pages with one code path.
+    """
+    if quant is None:
+        return dict(kv, k=scatter(kv["k"], k), v=scatter(kv["v"], v))
+    qk, sk = quant.quantize(k)
+    qv, sv = quant.quantize(v)
+    return dict(kv, k=scatter(kv["k"], qk), v=scatter(kv["v"], qv),
+                k_scale=scatter(kv["k_scale"], sk),
+                v_scale=scatter(kv["v_scale"], sv))
+
+
+def _paged_block(p, x, cfg, rules, *, positions, kv, tables,
                  q_offset, write, use_pallas=False, comm=_SERIAL):
     """One decoder block against paged KV storage (per-layer page slices).
 
-    ``write(sk, sv, k, v) -> (sk, sv)`` commits the fresh K/V into pages —
-    a whole-chunk scatter during prefill, a per-slot token scatter during
-    decode, a per-slot window scatter during verify — so this block stays
-    agnostic of which phase it runs in.  Attention is one call for all
-    three phases: :func:`repro.models.attention.paged_window_attention`
-    with ``q_offset`` tokens cached before the query window, fused Pallas
-    kernel or jnp gather fallback per ``use_pallas``.
+    ``kv`` is this layer's slice of the pool storage tree — ``{"k", "v"}``
+    pages, plus ``{"k_scale", "v_scale"}`` per-row scale leaves when the
+    cache is quantized.  ``write(kv, k, v) -> kv`` commits the fresh K/V
+    into pages — a whole-chunk scatter during prefill, a per-slot token
+    scatter during decode, a per-slot window scatter during verify — so
+    this block stays agnostic of which phase it runs in.  Attention is one
+    call for all three phases:
+    :func:`repro.models.attention.paged_window_attention` with ``q_offset``
+    tokens cached before the query window, fused Pallas kernel or jnp
+    gather fallback per ``use_pallas`` (both dequantize scale leaves when
+    present: the kernel in its VMEM tile, the fallback after its gather).
 
     ``comm`` is the serving-TP transport (Megatron attention/MLP TP inside a
     ``shard_map`` body): the block then sees its local head / ff / expert
@@ -354,8 +378,10 @@ def _paged_block(p, x, cfg, rules, *, positions, k_pages, v_pages, tables,
     """
     h = L.rmsnorm(p["ln1"], x, use_pallas=cfg.use_pallas)
     q, k, v = A.qkv_project(p["attn"], h, cfg, positions, rules=rules)
-    k_pages, v_pages = write(k_pages, v_pages, k, v)
-    o = A.paged_window_attention(q, k_pages, v_pages, tables, q_offset,
+    kv = write(kv, k, v)
+    o = A.paged_window_attention(q, kv["k"], kv["v"], tables, q_offset,
+                                 k_scale=kv.get("k_scale"),
+                                 v_scale=kv.get("v_scale"),
                                  use_pallas=use_pallas)
     x = x + comm.all_reduce_sum(A.out_project(p["attn"], o))
 
@@ -370,22 +396,30 @@ def _paged_block(p, x, cfg, rules, *, positions, k_pages, v_pages, tables,
             y = y + comm.all_reduce_sum(L.mlp(p["mlp"], h))
     else:
         y = comm.all_reduce_sum(L.mlp(p["mlp"], h))
-    return x + y, k_pages, v_pages
+    return x + y, kv
 
 
 def paged_prefill_chunk(params, cfg, rules, storage, table_row, pages_chunk,
-                        start, tokens, use_pallas=False, comm=None):
+                        start, tokens, use_pallas=False, comm=None,
+                        quant=None):
     """Prefill one page-aligned prompt chunk into paged storage.
 
-    storage: {"k","v"} of (L, N, page_size, Hkv, D);  table_row: (P,) the
-    slot's page table;  pages_chunk: (C // page_size,) pages covering
-    positions [start, start + C);  tokens: (1, C) (right-padded — the
-    validity length masks pad garbage, exactly like bucketed dense prefill).
-    Returns (storage, hidden (1, C, d)).  Chunks attend causally to every
-    previously prefilled page, which is what lets long prompts prefill
-    incrementally between decode ticks.  ``use_pallas`` routes attention
-    through the fused multi-query kernel (W = C window, per-row causal
-    offsets) instead of the jnp gather fallback.
+    storage: {"k","v"} of (L, N, page_size, Hkv, D) — plus per-row
+    {"k_scale","v_scale"} (L, N, page_size, Hkv) leaves when ``quant`` is
+    set;  table_row: (P,) the slot's page table;  pages_chunk:
+    (C // page_size,) pages covering positions [start, start + C);
+    tokens: (1, C) (right-padded — the validity length masks pad garbage,
+    exactly like bucketed dense prefill).  Returns (storage, hidden
+    (1, C, d)).  Chunks attend causally to every previously prefilled
+    page, which is what lets long prompts prefill incrementally between
+    decode ticks.  ``use_pallas`` routes attention through the fused
+    multi-query kernel (W = C window, per-row causal offsets) instead of
+    the jnp gather fallback.
+
+    ``quant`` is the KV quantization policy (quantize-on-write; attention
+    dequantizes through the scale leaves) — prefilled pages hold the SAME
+    int8 content a decode write would produce, which is what keeps
+    prefix-cache sharing exact under quantization.
 
     With a mesh ``comm`` (inside ``shard_map``): params/storage arrive
     head-sharded, hidden stays replicated (see :func:`_paged_block`).
@@ -399,34 +433,35 @@ def paged_prefill_chunk(params, cfg, rules, storage, table_row, pages_chunk,
     positions = start + jnp.arange(C)
     tables = table_row[None]                                    # (1, P)
 
-    def write(sk, sv, k, v):
-        sk = PG.scatter_chunk(sk, pages_chunk, k[0], page_size=page_size)
-        sv = PG.scatter_chunk(sv, pages_chunk, v[0], page_size=page_size)
-        return sk, sv
+    def write(kv, k, v):
+        return _write_kv(
+            kv, k[0], v[0], quant,
+            lambda st, val: PG.scatter_chunk(st, pages_chunk, val,
+                                             page_size=page_size))
 
     def body(x, xs):
-        p, sk, sv = xs
-        x, sk, sv = _paged_block(p, x, cfg, rules, positions=positions,
-                                 k_pages=sk, v_pages=sv, tables=tables,
-                                 q_offset=start, write=write,
-                                 use_pallas=use_pallas, comm=comm)
-        return x, (sk, sv)
+        p, kv = xs
+        x, kv = _paged_block(p, x, cfg, rules, positions=positions,
+                             kv=kv, tables=tables,
+                             q_offset=start, write=write,
+                             use_pallas=use_pallas, comm=comm)
+        return x, kv
 
-    x, (ks, vs) = jax.lax.scan(body, x, (params["blocks"], storage["k"],
-                                         storage["v"]))
+    x, storage = jax.lax.scan(body, x, (params["blocks"], storage))
     x = L.rmsnorm(params["final_norm"], x, use_pallas=cfg.use_pallas)
-    return {"k": ks, "v": vs}, x
+    return storage, x
 
 
 def paged_decode_step(params, cfg, rules, storage, tables, lengths, tokens,
                       write_pages, write_offs, use_pallas=False,
-                      comm=None):
+                      comm=None, quant=None):
     """One token for every slot against paged storage.
 
     tokens: (B, 1);  tables: (B, P);  lengths: (B,) tokens already cached
     (= the current token's position);  write_pages/write_offs: (B,) where
     each slot's new K/V lands (dead slots point at the pool's trash page).
-    Returns (storage, logits (B, 1, V)).
+    Returns (storage, logits (B, 1, V)).  ``quant`` quantizes each token's
+    K/V on write (scales land in the storage's scale leaves).
 
     With a mesh ``comm`` (inside ``shard_map``) the unembed arrives
     vocab-sharded and the local logits are reassembled with a single tiled
@@ -438,29 +473,30 @@ def paged_decode_step(params, cfg, rules, storage, tables, lengths, tokens,
     x = embed_tokens(params, tokens, cfg, rules)
     positions = lengths[:, None]                                # (B, 1)
 
-    def write(sk, sv, k, v):
-        sk = PG.scatter_token(sk, write_pages, write_offs, k[:, 0])
-        sv = PG.scatter_token(sv, write_pages, write_offs, v[:, 0])
-        return sk, sv
+    def write(kv, k, v):
+        return _write_kv(
+            kv, k[:, 0], v[:, 0], quant,
+            lambda st, val: PG.scatter_token(st, write_pages, write_offs,
+                                             val))
 
     def body(x, xs):
-        p, sk, sv = xs
-        x, sk, sv = _paged_block(p, x, cfg, rules, positions=positions,
-                                 k_pages=sk, v_pages=sv, tables=tables,
-                                 q_offset=lengths, write=write,
-                                 use_pallas=use_pallas, comm=comm)
-        return x, (sk, sv)
+        p, kv = xs
+        x, kv = _paged_block(p, x, cfg, rules, positions=positions,
+                             kv=kv, tables=tables,
+                             q_offset=lengths, write=write,
+                             use_pallas=use_pallas, comm=comm)
+        return x, kv
 
-    x, (ks, vs) = jax.lax.scan(body, x, (params["blocks"], storage["k"],
-                                         storage["v"]))
+    x, storage = jax.lax.scan(body, x, (params["blocks"], storage))
     x = L.rmsnorm(params["final_norm"], x, use_pallas=cfg.use_pallas)
     logits = comm.all_gather(lm_logits(params, x, cfg, rules),
                              axis=-1, tiled=True)
-    return {"k": ks, "v": vs}, logits
+    return storage, logits
 
 
 def paged_verify_chunk(params, cfg, rules, storage, tables, lengths, tokens,
-                       write_pages, write_offs, use_pallas=False, comm=None):
+                       write_pages, write_offs, use_pallas=False, comm=None,
+                       quant=None):
     """Score a per-slot window of candidate tokens in ONE batched forward —
     the speculative-decode verify step.
 
@@ -497,25 +533,25 @@ def paged_verify_chunk(params, cfg, rules, storage, tables, lengths, tokens,
     C = x.shape[1]
     positions = lengths[:, None] + jnp.arange(C)                # (B, C)
 
-    def write(sk, sv, k, v):
-        sk = PG.scatter_window(sk, write_pages, write_offs, k)
-        sv = PG.scatter_window(sv, write_pages, write_offs, v)
-        return sk, sv
+    def write(kv, k, v):
+        return _write_kv(
+            kv, k, v, quant,
+            lambda st, val: PG.scatter_window(st, write_pages, write_offs,
+                                              val))
 
     def body(x, xs):
-        p, sk, sv = xs
-        x, sk, sv = _paged_block(p, x, cfg, rules, positions=positions,
-                                 k_pages=sk, v_pages=sv, tables=tables,
-                                 q_offset=lengths, write=write,
-                                 use_pallas=use_pallas, comm=comm)
-        return x, (sk, sv)
+        p, kv = xs
+        x, kv = _paged_block(p, x, cfg, rules, positions=positions,
+                             kv=kv, tables=tables,
+                             q_offset=lengths, write=write,
+                             use_pallas=use_pallas, comm=comm)
+        return x, kv
 
-    x, (ks, vs) = jax.lax.scan(body, x, (params["blocks"], storage["k"],
-                                         storage["v"]))
+    x, storage = jax.lax.scan(body, x, (params["blocks"], storage))
     x = L.rmsnorm(params["final_norm"], x, use_pallas=cfg.use_pallas)
     logits = comm.all_gather(lm_logits(params, x, cfg, rules),
                              axis=-1, tiled=True)
-    return {"k": ks, "v": vs}, logits
+    return storage, logits
 
 
 def _window_decode_step(params, cfg, rules, cache, tokens, pos):

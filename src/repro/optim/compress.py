@@ -31,17 +31,29 @@ def init_compression_state(grads) -> CompressionState:
         lambda g: jnp.zeros(g.shape, jnp.float32), grads)}
 
 
-def int8_compress(g):
-    """-> (q int8, scale f32 scalar)."""
+def int8_compress(g, *, axis=None):
+    """Symmetric int8 quantization: ``q = round(g / s)``, s = max|g|/127.
+
+    ``axis=None`` (the gradient wire format) reduces over the whole tensor
+    and returns a scalar f32 scale.  ``axis=k`` (per-channel, the KV-page
+    format) reduces over that axis only: the scale has ``g``'s shape with
+    axis ``k`` removed, one scale per remaining index — e.g. a
+    (page, head, D) block with ``axis=-1`` gets a (page, head) scale.
+    """
     gf = g.astype(jnp.float32)
-    s = jnp.max(jnp.abs(gf)) / 127.0
-    s = jnp.maximum(s, 1e-30)
-    q = jnp.clip(jnp.round(gf / s), -127, 127).astype(jnp.int8)
+    s = jnp.max(jnp.abs(gf)) if axis is None else jnp.max(
+        jnp.abs(gf), axis=axis)
+    s = jnp.maximum(s / 127.0, 1e-30)
+    sb = s if axis is None else jnp.expand_dims(s, axis)
+    q = jnp.clip(jnp.round(gf / sb), -127, 127).astype(jnp.int8)
     return q, s
 
 
-def int8_decompress(q, s):
-    return q.astype(jnp.float32) * s
+def int8_decompress(q, s, *, axis=None, dtype=jnp.float32):
+    """Inverse of :func:`int8_compress`; ``axis`` must match the compress
+    call so the (axis-removed) scale broadcasts back into place."""
+    sb = s if axis is None else jnp.expand_dims(s, axis)
+    return (q.astype(jnp.float32) * sb).astype(dtype)
 
 
 def compressed_psum(grads, err, comm: Comm):

@@ -2,6 +2,9 @@ from repro.serve.pages import PagePool, PagedLeafSpec, PrefixCache
 from repro.serve.sampling import (greedy, sample_temperature, sample_top_k,
                                   sample_top_p, spec_rejection_sample,
                                   spec_verify_greedy)
+from repro.serve.quant import (Int8KVQuant, dequantize_params,
+                               kv_bytes_per_token, make_kv_quant,
+                               quantize_leaf_specs, quantize_params)
 from repro.serve.scheduler import Scheduler
 from repro.serve.spec import (Drafter, NgramDrafter, TruncatedSelfDrafter,
                               make_drafter)

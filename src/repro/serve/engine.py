@@ -64,6 +64,7 @@ from repro.core import comm as CC
 from repro.core.comm import Comm
 from repro.core.runtime import ThreadFarmExecutor
 from repro.serve import pages as PG
+from repro.serve import quant as QZ
 from repro.serve import spec as SP
 from repro.serve.pages import PagePool
 from repro.serve.sampling import (greedy, spec_rejection_sample,
@@ -108,7 +109,7 @@ class ServeEngine:
                  spec_decode=None, spec_k: int = 4,
                  spec_temperature: float = 0.0,
                  strict: bool = False, use_pallas_attention: bool = False,
-                 mesh=None):
+                 mesh=None, kv_quant=None, weight_quant=None):
         self.model, self.params, self.rules = model, params, rules
         self.max_slots, self.max_len = max_slots, max_len
         self.strict = strict
@@ -150,6 +151,58 @@ class ServeEngine:
                 "(spec_temperature > 0); a custom engine-wide sampler "
                 "cannot be verified and would be silently ignored — "
                 "drop it (per-request samplers remain supported)")
+        # KV quantization (int8 pages + per-row scale leaves) is a property
+        # of the PAGED storage layout; the dense per-slot path has no pool
+        # to hold the scale leaves in.
+        self.kv_quant = QZ.make_kv_quant(kv_quant)
+        if self.kv_quant is not None and not self.paged:
+            raise ValueError(
+                f"kv_quant={getattr(self.kv_quant, 'name', kv_quant)!r} "
+                f"requires the paged KV engine: {model.cfg.name} "
+                f"({model.cfg.family}) "
+                + ("was constructed with paged=False"
+                   if model.supports_paged_decode() else
+                   "has no paged KV cache to quantize")
+                + "; drop the flag or use a paged family")
+        # Weights-only int8 (dequant-on-apply) is wired through the paged
+        # serving wrappers only; the self-K drafter slices raw float param
+        # leaves and cannot see through {"q8","s8"} payloads.
+        if weight_quant in (None, "off", False):
+            self.weight_quant = None
+        elif weight_quant == "int8":
+            if not self.paged:
+                raise ValueError(
+                    "weight_quant='int8' is wired through the paged serving "
+                    "path only; drop the flag or use a paged family")
+            if isinstance(spec_decode, str) \
+                    and spec_decode.partition("-")[0] == "self":
+                raise ValueError(
+                    "weight_quant='int8' cannot build the self-K drafter "
+                    "(it slices raw float param leaves); use the ngram "
+                    "drafter or pass a pre-built drafter object")
+            self.weight_quant = "int8"
+        else:
+            raise ValueError(
+                f"unknown weight_quant {weight_quant!r}; want 'int8' or "
+                "'off'")
+
+        # -- weights-only int8 ------------------------------------------------
+        # Quantize BEFORE any device placement so only the int8 payload ever
+        # lands in HBM; the full-precision weights are rebuilt transiently
+        # inside each jitted call (dequant-on-apply).
+        if self.weight_quant:
+            flt = [a for a in jax.tree_util.tree_leaves(params)
+                   if hasattr(a, "dtype")
+                   and jnp.issubdtype(a.dtype, jnp.floating)]
+            wq_dtype = flt[0].dtype if flt else jnp.dtype(jnp.float32)
+            wq_src = params                    # pre-quant tree for spec mirroring
+            params = QZ.quantize_params(params)
+            deq = functools.partial(QZ.dequantize_params, dtype=wq_dtype)
+        else:
+            wq_src = None
+            deq = lambda p: p                                   # noqa: E731
+        self.params = params
+        kvq = self.kv_quant
 
         # -- device mesh (tensor-parallel serving) ---------------------------
         # ``mesh=None`` keeps every code path byte-identical to the
@@ -172,6 +225,11 @@ class ServeEngine:
                 # head-sharded TP: the family's Megatron specs
                 model.validate_serve_tp(self.tp)
                 pspecs = model.serve_param_specs()
+                if self.weight_quant:
+                    # int8 payload keeps the weight's spec; scalar scales
+                    # replicate — dequant commutes with sharding, so tp=N
+                    # streams stay equal to tp=1
+                    pspecs = QZ.quantize_param_specs(pspecs, wq_src)
             else:
                 # slot-parallel: the step fn runs unchanged per shard, so
                 # params must be REPLICATED whatever the family's TP specs
@@ -208,6 +266,10 @@ class ServeEngine:
         # (jitted: it runs on every verify tick)
         self._verify_argmax = jax.jit(functools.partial(
             greedy, true_vocab=model.cfg.vocab))
+        # jitted logits head so weight dequant-on-apply also covers the
+        # host-driven prefill tail (identity deq when weights are float)
+        self._lm_head = jax.jit(
+            lambda p, h: model.lm_head(deq(p), h, rules))
 
         self.last_token = np.zeros(max_slots, np.int32)
         self.finished: list[Request] = []
@@ -218,7 +280,12 @@ class ServeEngine:
                       "prefix_hits": 0, "prefix_hit_tokens": 0,
                       "cow_copies": 0, "evictions": 0, "pages_high_water": 0,
                       "draft_proposed": 0, "draft_accepted": 0,
-                      "acceptance_rate": 0.0}
+                      "acceptance_rate": 0.0,
+                      "kv_quant": self.kv_quant.name if self.kv_quant
+                      else "off",
+                      "weight_quant": self.weight_quant or "off",
+                      "kv_bytes_per_token": QZ.kv_bytes_per_token(
+                          model.paged_leaf_specs(kvq)) if self.paged else 0}
 
         # donate the state/storage argument so XLA updates the KV buffers in
         # place (no full-pool copy per tick); CPU has no donation support
@@ -230,7 +297,7 @@ class ServeEngine:
                 num_pages = -(-max_slots * max_len // page_size)
             cow_donate = () if jax.default_backend() == "cpu" else (0,)
             if mesh is None:
-                self.pool = PagePool(model.paged_leaf_specs(),
+                self.pool = PagePool(model.paged_leaf_specs(kvq),
                                      num_pages=num_pages, page_size=page_size,
                                      prefix_cache=self.prefix_cache)
                 self._cow_copy = jax.jit(
@@ -239,23 +306,23 @@ class ServeEngine:
                     donate_argnums=cow_donate)
                 self._decode_paged = jax.jit(
                     lambda p, st, tb, ln, t, wp, wo: model.paged_decode_step(
-                        p, st, tb, ln, t, wp, wo, rules,
-                        use_pallas=use_pallas_attention),
+                        deq(p), st, tb, ln, t, wp, wo, rules,
+                        use_pallas=use_pallas_attention, quant=kvq),
                     donate_argnums=donate)
                 self._prefill_chunk = jax.jit(
                     lambda p, st, row, pg, s0, t: model.paged_prefill_chunk(
-                        p, st, row, pg, s0, t, rules,
-                        use_pallas=use_pallas_attention),
+                        deq(p), st, row, pg, s0, t, rules,
+                        use_pallas=use_pallas_attention, quant=kvq),
                     donate_argnums=donate)
                 self._verify_paged = jax.jit(
                     lambda p, st, tb, ln, t, wp, wo: model.paged_verify(
-                        p, st, tb, ln, t, wp, wo, rules,
-                        use_pallas=use_pallas_attention),
+                        deq(p), st, tb, ln, t, wp, wo, rules,
+                        use_pallas=use_pallas_attention, quant=kvq),
                     donate_argnums=donate)
             else:
-                sspecs = model.paged_storage_specs()
+                sspecs = model.paged_storage_specs(kvq)
                 self.pool = PagePool(
-                    model.paged_leaf_specs(), num_pages=num_pages,
+                    model.paged_leaf_specs(kvq), num_pages=num_pages,
                     page_size=page_size,
                     shardings=jax.tree_util.tree_map(
                         lambda s: NamedSharding(mesh, s), sspecs,
@@ -272,24 +339,27 @@ class ServeEngine:
                     donate_argnums=cow_donate)
                 self._decode_paged = jax.jit(CC.shard_map(
                     lambda p, st, tb, ln, t, wp, wo: model.paged_decode_step(
-                        p, st, tb, ln, t, wp, wo, None,
-                        use_pallas=use_pallas_attention, comm=comm),
+                        deq(p), st, tb, ln, t, wp, wo, None,
+                        use_pallas=use_pallas_attention, comm=comm,
+                        quant=kvq),
                     mesh=mesh,
                     in_specs=(pspecs, sspecs, rep, rep, rep, rep, rep),
                     out_specs=(sspecs, rep), check_vma=False),
                     donate_argnums=donate)
                 self._prefill_chunk = jax.jit(CC.shard_map(
                     lambda p, st, row, pg, s0, t: model.paged_prefill_chunk(
-                        p, st, row, pg, s0, t, None,
-                        use_pallas=use_pallas_attention, comm=comm),
+                        deq(p), st, row, pg, s0, t, None,
+                        use_pallas=use_pallas_attention, comm=comm,
+                        quant=kvq),
                     mesh=mesh,
                     in_specs=(pspecs, sspecs, rep, rep, rep, rep),
                     out_specs=(sspecs, rep), check_vma=False),
                     donate_argnums=donate)
                 self._verify_paged = jax.jit(CC.shard_map(
                     lambda p, st, tb, ln, t, wp, wo: model.paged_verify(
-                        p, st, tb, ln, t, wp, wo, None,
-                        use_pallas=use_pallas_attention, comm=comm),
+                        deq(p), st, tb, ln, t, wp, wo, None,
+                        use_pallas=use_pallas_attention, comm=comm,
+                        quant=kvq),
                     mesh=mesh,
                     in_specs=(pspecs, sspecs, rep, rep, rep, rep, rep),
                     out_specs=(sspecs, rep), check_vma=False),
@@ -542,8 +612,7 @@ class ServeEngine:
                 self.stats["chunk_prefills"] += 1
                 if job.is_last:
                     i = job.n_valid - 1
-                    logits = self.model.lm_head(
-                        self.params, hidden[:, i:i + 1], self.rules)
+                    logits = self._lm_head(self.params, hidden[:, i:i + 1])
                     tok = self._sample_one(job.req, logits[0, -1])
             except BaseException as e:                      # noqa: BLE001
                 failed.add(job.slot)
@@ -755,8 +824,7 @@ class ServeEngine:
         # right-padding: cache rows beyond L hold pad garbage, but
         # lengths[slot] = L masks them out (kv_valid_len) and later decode
         # tokens overwrite them in order.
-        logits = self.model.lm_head(self.params, hidden[:, L - 1:L],
-                                    self.rules)
+        logits = self._lm_head(self.params, hidden[:, L - 1:L])
         fn = job.req.sampler or self.sampler
         tok = int(jax.device_get(fn(key, logits[0, -1])))
         return cache, tok

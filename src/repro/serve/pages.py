@@ -449,29 +449,51 @@ def _pfx(n_prefix: int) -> tuple:
     return (slice(None),) * n_prefix
 
 
+def _check_write_dtype(storage, vals, op: str):
+    """Scatter writes must arrive already in the pool's storage dtype.
+
+    The old behavior silently ``.astype``'d the values — which turned a
+    missing quantization step (f32 K/V written into an int8 pool) or a
+    precision mismatch (f32 into bf16) into wrong cached numbers with no
+    error.  Conversions are now explicit at the call site: the model
+    writes K/V in the cache dtype, and a quantization policy produces the
+    int8 payload + scale before the scatter.  Dtypes are static under
+    ``jit``, so this raises at trace time, not per step.
+    """
+    if jnp.dtype(vals.dtype) != jnp.dtype(storage.dtype):
+        raise TypeError(
+            f"{op}: value dtype {jnp.dtype(vals.dtype).name} != storage "
+            f"dtype {jnp.dtype(storage.dtype).name}; convert (or quantize) "
+            "explicitly before the scatter — implicit lossy casts are not "
+            "performed")
+
+
 def scatter_chunk(storage, pages, chunk, *, page_size: int, n_prefix: int = 0):
     """Write a page-aligned token chunk into its pages.
 
     storage: (prefix..., N, page_size, suffix...)
     pages:   (n,) int32 page ids
-    chunk:   (prefix..., n * page_size, suffix...)
+    chunk:   (prefix..., n * page_size, suffix...) — in the storage dtype
     """
+    _check_write_dtype(storage, chunk, "scatter_chunk")
     n = pages.shape[0]
     pre = chunk.shape[:n_prefix]
     suf = chunk.shape[n_prefix + 1:]
     blk = chunk.reshape(pre + (n, page_size) + suf)
     idx = _pfx(n_prefix) + (pages,)
-    return storage.at[idx].set(blk.astype(storage.dtype))
+    return storage.at[idx].set(blk)
 
 
 def scatter_token(storage, pages, offs, vals, *, n_prefix: int = 0):
     """Write one token per slot at (page, offset) — the decode-step write.
 
     storage: (prefix..., N, page_size, suffix...)
-    pages, offs: (B,) int32;   vals: (prefix..., B, suffix...)
+    pages, offs: (B,) int32;   vals: (prefix..., B, suffix...) — in the
+    storage dtype
     """
+    _check_write_dtype(storage, vals, "scatter_token")
     idx = _pfx(n_prefix) + (pages, offs)
-    return storage.at[idx].set(vals.astype(storage.dtype))
+    return storage.at[idx].set(vals)
 
 
 def scatter_window(storage, pages, offs, vals, *, n_prefix: int = 0):

@@ -1,0 +1,178 @@
+"""Quantization policies for serving: int8 KV pages and int8 serve params.
+
+KV bytes/token is the binding constraint on serving concurrency — every
+bench since the pool landed is "at equal KV budget" — so halving bytes per
+token is a direct ~2x on concurrent users.  This module supplies the
+*policy objects* that make that happen without the numerics leaking into
+model code (the paper's function-centric rule: data-representation
+transforms belong in the orchestration layer, threaded through as
+functions, the way MaxText threads an ``AqtQuantization`` object through
+every layer):
+
+* :class:`Int8KVQuant` — per-token-row, per-head symmetric int8 for the
+  paged KV cache.  ``quantize`` maps a K/V block ``(..., Hkv, D)`` to an
+  int8 block plus an f32 scale of shape ``(..., Hkv)`` (the D axis is
+  reduced away); ``dequantize`` inverts it.  Both delegate to
+  :mod:`repro.optim.compress` — one quantization module, two consumers
+  (gradient all-reduce and the KV path).
+* :func:`quantize_leaf_specs` — grows a model's paged-KV leaf-spec tree
+  with a sibling ``*_scale`` leaf per KV leaf.  The scales are ORDINARY
+  pool leaves (``prefix + (num_pages, page_size) + (Hkv,)``), so every
+  page-granular mechanism — content addressing, refcounts, copy-on-write,
+  prefix-cache parking, preemption replay — moves the scales with their
+  pages for free, and under tensor-parallel serving the head axis shards
+  over "model" exactly like the KV leaves.
+* weights-only int8: :func:`quantize_params` / :func:`dequantize_params` /
+  :func:`quantize_param_specs` — per-tensor symmetric int8 for the serve
+  params, dequantized on apply inside the jitted serving calls.  The
+  scalar scale replicates under any TP layout while the int8 payload keeps
+  the weight's original partition spec, so quantize-then-shard equals
+  shard-then-quantize and tp=N streams stay equal to tp=1.
+
+Accuracy is gated by greedy token-match rate, not bit-parity: int8 KV
+changes logits, so the contract is "the quantized stream agrees with the
+full-precision stream on >= 95% of greedy tokens" (tests + bench), while
+quant-on streams stay BIT-identical across prefix-cache on/off, COW,
+preemption and tp — the pages hold the same int8 content either way.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.optim.compress import int8_compress, int8_decompress
+
+SCALE_SUFFIX = "_scale"
+
+
+class Int8KVQuant:
+    """Per-(token, head) symmetric int8 for paged KV blocks.
+
+    The scale axis layout is chosen so a written block's scale scatters
+    through the SAME pure page ops as its values: quantizing a K/V block
+    of shape ``(..., Hkv, D)`` reduces only the trailing D axis, leaving a
+    ``(..., Hkv)`` scale whose leading axes line up with the value block's
+    token axes.  Per-row scales also make appends exact — a new token
+    never re-scales previously written rows, which is what keeps streams
+    bit-identical across prefix-cache sharing and COW.
+    """
+
+    name = "int8"
+    storage_dtype = jnp.dtype(jnp.int8)
+    scale_dtype = jnp.dtype(jnp.float32)
+
+    def quantize(self, block):
+        """(..., Hkv, D) -> (int8 (..., Hkv, D), f32 scale (..., Hkv))."""
+        return int8_compress(block, axis=-1)
+
+    def dequantize(self, q, scale, dtype=jnp.float32):
+        return int8_decompress(q, scale, axis=-1, dtype=dtype)
+
+
+_KV_QUANTS = {"int8": Int8KVQuant}
+
+
+def make_kv_quant(spec):
+    """``None``/"off" -> None; "int8" -> :class:`Int8KVQuant`; a policy
+    object (anything with quantize/dequantize/name) passes through."""
+    if spec in (None, "off", False):
+        return None
+    if isinstance(spec, str):
+        if spec not in _KV_QUANTS:
+            raise ValueError(
+                f"unknown kv_quant {spec!r}; known: "
+                f"{sorted(_KV_QUANTS)} or 'off'")
+        return _KV_QUANTS[spec]()
+    if not (hasattr(spec, "quantize") and hasattr(spec, "dequantize")):
+        raise ValueError(f"kv_quant policy {spec!r} lacks "
+                         "quantize/dequantize")
+    return spec
+
+
+def quantize_leaf_specs(specs: dict, quant) -> dict:
+    """Transform a flat ``{name: PagedLeafSpec}`` KV tree into its
+    quantized layout: each leaf's dtype becomes the policy's storage dtype
+    and a sibling ``{name}_scale`` leaf (same prefix, suffix minus the
+    reduced trailing axis, scale dtype) carries the per-row scales."""
+    from repro.serve.pages import PagedLeafSpec
+    if quant is None:
+        return specs
+    if not isinstance(specs, dict):
+        raise TypeError(f"quantized KV needs a dict leaf tree, got "
+                        f"{type(specs).__name__}")
+    out = {}
+    for name, leaf in specs.items():
+        if not leaf.suffix:
+            raise ValueError(f"KV leaf {name!r} has no trailing axis to "
+                             "reduce a scale over")
+        out[name] = PagedLeafSpec(leaf.prefix, leaf.suffix,
+                                  quant.storage_dtype)
+        out[name + SCALE_SUFFIX] = PagedLeafSpec(
+            leaf.prefix, leaf.suffix[:-1], quant.scale_dtype)
+    return out
+
+
+def kv_bytes_per_token(leaf_specs) -> int:
+    """HBM bytes one cached token costs across every pool leaf (scale
+    leaves included) — the quantity the equal-budget bench reports."""
+    from repro.serve.pages import PagedLeafSpec
+
+    def leaf(s):
+        n = (int(np.prod(s.prefix, dtype=np.int64))
+             * int(np.prod(s.suffix, dtype=np.int64)))
+        return n * jnp.dtype(s.dtype).itemsize
+
+    return int(sum(leaf(s) for s in jax.tree_util.tree_leaves(
+        leaf_specs, is_leaf=lambda x: isinstance(x, PagedLeafSpec))))
+
+
+# ---------------------------------------------------------------------------
+# Weights-only int8 (serve params, dequant-on-apply)
+# ---------------------------------------------------------------------------
+
+def _weight_quantizable(a) -> bool:
+    return (hasattr(a, "ndim") and a.ndim >= 2
+            and jnp.issubdtype(a.dtype, jnp.floating))
+
+
+def _is_q8(x) -> bool:
+    return isinstance(x, dict) and set(x) == {"q8", "s8"}
+
+
+def quantize_params(params):
+    """Per-tensor symmetric int8 for every float matrix in a param tree
+    (vectors — norm scales, biases — stay as-is: negligible bytes, and
+    their precision is what RMSNorm stability leans on).  Each quantized
+    leaf becomes ``{"q8": int8, "s8": f32 scalar}``."""
+    def leaf(a):
+        if _weight_quantizable(a):
+            q, s = int8_compress(a)
+            return {"q8": q, "s8": s}
+        return a
+
+    return jax.tree_util.tree_map(leaf, params)
+
+
+def dequantize_params(params, dtype=jnp.float32):
+    """Inverse of :func:`quantize_params` — called INSIDE the jitted serve
+    wrappers (dequant-on-apply), so the stored params stay int8 in HBM and
+    the full-precision weights exist only transiently per call."""
+    return jax.tree_util.tree_map(
+        lambda x: int8_decompress(x["q8"], x["s8"], dtype=dtype)
+        if _is_q8(x) else x,
+        params, is_leaf=_is_q8)
+
+
+def quantize_param_specs(specs, params):
+    """Mirror a param PartitionSpec tree onto the quantized layout: the
+    int8 payload keeps the weight's spec, the scalar scale replicates
+    (``P()``) — sharding any axis of a per-tensor-scaled weight commutes
+    with dequantization, which is what keeps tp=N equal to tp=1."""
+    if isinstance(params, dict):
+        return {k: quantize_param_specs(specs[k], params[k])
+                for k in params}
+    if _weight_quantizable(params):
+        return {"q8": specs, "s8": P()}
+    return specs

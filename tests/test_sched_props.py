@@ -43,8 +43,13 @@ class _Req:
 
 
 def _make(prefix_cache=False):
-    pool = PagePool({"k": PagedLeafSpec((1,), (1, 1), jnp.float32)},
-                    num_pages=NUM_PAGES, page_size=PAGE_SIZE,
+    # a quantized-layout leaf tree: int8 value pages plus a per-row f32
+    # scale leaf, exactly what Int8KVQuant produces — every conservation
+    # property below must hold with the scale leaf riding along
+    from repro.serve.quant import Int8KVQuant, quantize_leaf_specs
+    specs = quantize_leaf_specs(
+        {"k": PagedLeafSpec((1,), (1, 1), jnp.float32)}, Int8KVQuant())
+    pool = PagePool(specs, num_pages=NUM_PAGES, page_size=PAGE_SIZE,
                     prefix_cache=prefix_cache)
     sched = Scheduler(max_slots=SLOTS, max_len=MAX_LEN, pool=pool,
                       prefill_chunk=PAGE_SIZE, chunks_per_tick=2)

@@ -223,6 +223,49 @@ def test_tp_spec_decode_parity():
     """)
 
 
+def test_tp_quant_parity():
+    """int8 KV pages under tensor parallelism: the scale leaves shard over
+    the head axis exactly like K/V, quantization happens inside the
+    shard_map body on each device's own heads, and per-row scales commute
+    with the head split — so quant-on tp=2/4 streams are bit-identical to
+    the quant-on tp=1 streams (dense + MoE, Pallas kernel included).
+    Weights-only int8 dequant also commutes with the Megatron param split
+    (per-tensor scalar scale, replicated), so it must match too."""
+    run_spmd(_STREAMS + """
+    for arch in ("qwen2-7b", "qwen3-moe-235b-a22b"):
+        cfg = smoke_config(arch).replace(remat="none", n_heads=8,
+                                         n_kv_heads=4)
+        model = build_model(cfg)
+        params = model.init(jax.random.PRNGKey(0))
+        want, eng1 = streams(model, params, None, paged=True, page_size=8,
+                             prefill_chunk=16, kv_quant="int8")
+        assert eng1.stats["kv_quant"] == "int8"
+        for tp in (2, 4):
+            mesh = jax.make_mesh((tp,), ("model",))
+            got, eng = streams(model, params, mesh, paged=True, page_size=8,
+                               prefill_chunk=16, kv_quant="int8")
+            assert eng.tp == tp
+            assert got == want, (arch, tp, "kv quant tp parity")
+        got, _ = streams(model, params, jax.make_mesh((2,), ("model",)),
+                         paged=True, page_size=8, prefill_chunk=16,
+                         kv_quant="int8", use_pallas_attention=True)
+        assert got == want, (arch, "kv quant + pallas tp parity")
+
+    cfg = smoke_config("qwen2-7b").replace(remat="none", n_heads=8,
+                                           n_kv_heads=4)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    want, _ = streams(model, params, None, paged=True, page_size=8,
+                      prefill_chunk=16, kv_quant="int8", weight_quant="int8")
+    got, eng = streams(model, params, jax.make_mesh((2,), ("model",)),
+                       paged=True, page_size=8, prefill_chunk=16,
+                       kv_quant="int8", weight_quant="int8")
+    assert eng.stats["weight_quant"] == "int8"
+    assert got == want, "weight quant tp parity"
+    print("tp quant parity OK")
+    """)
+
+
 def test_slot_parallel_recurrent_family():
     """rwkv6 has no KV to shard; the mesh engine shards decode SLOTS over
     the devices instead (params replicated, state batch-sharded) and the
