@@ -325,6 +325,42 @@ def _kv_quant_bench(model, params):
     }
 
 
+def _traffic_bench(model, params):
+    """Open-loop traffic: Poisson and bursty arrivals at two load levels.
+
+    Every number before this came from "submit everything, drain" — no
+    arrival process, so no queueing delay and no latency distribution.
+    Here the harness submits at seeded arrival times under the virtual
+    clock, so TTFT/ITL/e2e percentiles and SLO goodput are measured in
+    TICKS and are a deterministic function of the seed: the perf gate can
+    hold them to a tight tolerance because only a real scheduling change
+    (not runner noise) moves them.  Wall seconds ride along untracked.
+    """
+    from repro.serve.traffic import make_workload, run_traffic
+    out = {}
+    for kind in ("poisson", "bursty"):
+        for label, rate in (("low", 0.25), ("high", 1.0)):
+            wl = make_workload(kind=kind, n_requests=16, rate=rate,
+                               vocab=model.cfg.vocab, seed=7,
+                               max_new_tokens=8, shared_prefix_len=8,
+                               n_sessions=2)
+            eng = ServeEngine(model, params, max_slots=4, max_len=MAX_LEN,
+                              paged=True, page_size=PAGE, prefill_chunk=32)
+            t0 = time.perf_counter()
+            res = run_traffic(eng, wl, slo={"ttft": 24.0, "e2e": 96.0})
+            dt = time.perf_counter() - t0
+            eng.close()
+            rep = res["report"]
+            out[f"{kind}_{label}"] = {
+                "rate": rate, "n_requests": rep["n_requests"],
+                "tokens": rep["tokens"], "span_ticks": rep["span"],
+                "wall_seconds": dt,
+                "ttft": rep["ttft"], "itl": rep["itl"], "e2e": rep["e2e"],
+                "tok_per_tick": rep["tok_per_s"], "goodput": rep["goodput"],
+            }
+    return out
+
+
 def _paged_kernel_microbench(*, B=4, Hq=4, Hkv=2, D=32, ps=16, P=4,
                              iters=20):
     """Fused multi-query paged-attention kernel vs the jnp gather fallback,
@@ -437,6 +473,17 @@ def run(csv_rows: list):
         f"vs{eq['off']['peak_slots']};"
         f"token_match={kvq['token_match']['match_rate']:.3f}")
 
+    traffic = _traffic_bench(model, params)
+    for key in ("poisson_high", "bursty_high"):
+        t = traffic[key]
+        csv_rows.append(
+            f"serve_traffic_{key},{t['ttft']['p99']:.0f},"
+            f"ttft_p99_ticks={t['ttft']['p99']:.1f};"
+            f"ttft_p50={t['ttft']['p50']:.1f};"
+            f"goodput_tok_per_tick={t['goodput']['tok_per_s']:.3f};"
+            f"slo_attainment={t['goodput']['slo_attainment']:.2f};"
+            f"wall_s={t['wall_seconds']:.2f}")
+
     moe_cfg = smoke_config("qwen3-moe-235b-a22b").replace(remat="none")
     moe_model = build_model(moe_cfg)
     moe_params = moe_model.init(jax.random.PRNGKey(0))
@@ -490,6 +537,7 @@ def run(csv_rows: list):
             "target_1p5x_met": spec_speedup >= 1.5,
         },
         "kv_quant": kvq,
+        "traffic": traffic,
         "paged_kernel": pk,
         "tp_scaling": tp,
     }

@@ -23,23 +23,30 @@ import argparse
 import json
 import sys
 
-# (dotted path into the BENCH_serve payload, higher-is-better metric)
+# (dotted path into the BENCH_serve payload, direction) — "higher" metrics
+# regress by shrinking, "lower" metrics (latencies) regress by growing
 METRICS = [
-    "continuous4.tok_per_s",                 # dense continuous batching
-    "paged_equal_budget.tok_per_s",          # paged decode, equal KV budget
-    "prefix_cache.on.prefill_tok_per_s",     # shared-prefix prefill reuse
-    "spec_decode.on.tok_per_s",              # speculative decode throughput
+    ("continuous4.tok_per_s", "higher"),             # dense continuous batching
+    ("paged_equal_budget.tok_per_s", "higher"),      # paged decode, equal KV
+    ("prefix_cache.on.prefill_tok_per_s", "higher"), # shared-prefix reuse
+    ("spec_decode.on.tok_per_s", "higher"),          # speculative decode
     # int8 KV pages at the equal-HBM budget: quant-on decode must not
     # cliff vs its own baseline, and neither may the quant-off reference
-    "kv_quant.equal_hbm.int8.tok_per_s",
-    "kv_quant.equal_hbm.off.tok_per_s",
+    ("kv_quant.equal_hbm.int8.tok_per_s", "higher"),
+    ("kv_quant.equal_hbm.off.tok_per_s", "higher"),
     # fused multi-query paged-attention microbench: each path's absolute
     # calls/s (kernel side is interpret-mode off-TPU, so the gate watches
     # both paths for cliffs instead of the cross-path ratio)
-    "paged_kernel.decode.kernel_calls_per_s",
-    "paged_kernel.decode.fallback_calls_per_s",
-    "paged_kernel.verify.kernel_calls_per_s",
-    "paged_kernel.verify.fallback_calls_per_s",
+    ("paged_kernel.decode.kernel_calls_per_s", "higher"),
+    ("paged_kernel.decode.fallback_calls_per_s", "higher"),
+    ("paged_kernel.verify.kernel_calls_per_s", "higher"),
+    ("paged_kernel.verify.fallback_calls_per_s", "higher"),
+    # open-loop traffic under the virtual clock: tick-denominated, so
+    # deterministic per seed — only a real scheduling change moves them
+    ("traffic.poisson_high.ttft.p99", "lower"),
+    ("traffic.poisson_high.goodput.tok_per_s", "higher"),
+    ("traffic.bursty_high.ttft.p99", "lower"),
+    ("traffic.bursty_high.goodput.tok_per_s", "higher"),
 ]
 
 
@@ -55,20 +62,23 @@ def dig(payload: dict, path: str):
 def gate(fresh: dict, baseline: dict, tolerance: float) -> list[str]:
     """Returns the list of failure messages (empty = gate passes)."""
     failures = []
-    for path in METRICS:
+    for path, direction in METRICS:
         f, b = dig(fresh, path), dig(baseline, path)
         if f is None or b is None or b <= 0:
             print(f"[perf-gate] SKIP {path}: fresh={f} baseline={b}")
             continue
-        ratio = b / f if f > 0 else float("inf")
+        if direction == "higher":       # throughput: regress by shrinking
+            ratio = b / f if f > 0 else float("inf")
+        else:                           # latency: regress by growing
+            ratio = f / b
         verdict = "FAIL" if ratio > tolerance else "ok"
         print(f"[perf-gate] {verdict:>4} {path}: fresh={f:.1f} "
-              f"baseline={b:.1f} slowdown={ratio:.2f}x "
-              f"(tolerance {tolerance:.1f}x)")
+              f"baseline={b:.1f} regression={ratio:.2f}x "
+              f"({direction} is better, tolerance {tolerance:.1f}x)")
         if ratio > tolerance:
             failures.append(
                 f"{path}: {f:.1f} vs baseline {b:.1f} "
-                f"({ratio:.2f}x slower > {tolerance:.1f}x tolerance)")
+                f"({ratio:.2f}x worse > {tolerance:.1f}x tolerance)")
     return failures
 
 

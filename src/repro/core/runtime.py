@@ -558,6 +558,34 @@ class ThreadFarmExecutor:
 
 
 # ---------------------------------------------------------------------------
+# Stage coordination
+# ---------------------------------------------------------------------------
+
+def run_stages(executor: Executor, stages: Sequence[Callable[[], Any]]) -> bool:
+    """One coordination step of a multi-role pipeline, driven through the
+    generic ``(initialize, func, finalize)`` contract: each stage is a
+    zero-arg callable returning a truthy busy flag; the triple is built on
+    the fly — ``initialize`` yields one host-form task per stage, ``func``
+    runs it, ``finalize`` ORs the busy flags.
+
+    The point of routing through the protocol instead of a plain loop is
+    that the SAME stage functions run serially (:class:`SerialExecutor`:
+    deterministic order, stage i completes before i+1 starts — the
+    bit-reproducible mode tests pin) or genuinely overlapped
+    (:class:`ThreadFarmExecutor`: stages that release the GIL inside jitted
+    device calls run concurrently).  Stacked-form executors (vmap/mesh)
+    cannot run host callables and reject host-form tasks themselves.
+
+    Used by :class:`repro.serve.disagg.DisaggServeEngine` to coordinate its
+    prefiller and decoder roles; returns True if any stage reported work.
+    """
+    return executor.run(
+        lambda: [((stage,), {}) for stage in stages],
+        lambda stage: bool(stage()),
+        lambda outs: any(outs))
+
+
+# ---------------------------------------------------------------------------
 # Factory
 # ---------------------------------------------------------------------------
 

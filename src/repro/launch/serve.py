@@ -15,6 +15,7 @@ scheduler and page tables stay on the host).  On CPU, prefix with
 from __future__ import annotations
 
 import argparse
+import json
 import time
 
 import jax
@@ -22,7 +23,8 @@ import numpy as np
 
 from repro.configs import get_config, list_archs, smoke_config
 from repro.models.api import build_model
-from repro.serve import ServeEngine
+from repro.serve import DisaggServeEngine, ServeEngine, make_workload, \
+    run_traffic
 
 
 def parse_mesh(spec: str | None):
@@ -39,6 +41,50 @@ def parse_mesh(spec: str | None):
                          "(set XLA_FLAGS=--xla_force_host_platform_"
                          "device_count=N on CPU)")
     return jax.make_mesh((tp,), ("model",))
+
+
+def run_traffic_demo(eng, cfg, args) -> None:
+    """Open-loop traffic run: seeded workload, event log, metric report."""
+    slo = {}
+    if args.slo_ttft is not None:
+        slo["ttft"] = args.slo_ttft
+    if args.slo_e2e is not None:
+        slo["e2e"] = args.slo_e2e
+    # cap prompt bands so prefix + tail + generation fit in max_len
+    hi = max(5, args.max_len - args.shared_prefix - args.max_new - 1)
+    len_mix = ((3.0, 4, min(24, hi)), (1.0, min(32, hi), hi))
+    wl = make_workload(kind=args.traffic, n_requests=args.requests,
+                       rate=args.rate, vocab=cfg.vocab, seed=0,
+                       max_new_tokens=args.max_new,
+                       shared_prefix_len=args.shared_prefix, n_sessions=2,
+                       len_mix=len_mix)
+    t0 = time.perf_counter()
+    res = run_traffic(eng, wl, clock=args.clock, slo=slo or None)
+    dt = time.perf_counter() - t0
+    eng.close()
+    rep = res["report"]
+    unit = "ticks" if args.clock == "virtual" else "s"
+    print(f"[serve] traffic {args.traffic} rate={args.rate}: "
+          f"{rep['n_measured']}/{rep['n_requests']} requests, "
+          f"{rep['tokens']} tokens over {rep['span']:.1f} {unit} "
+          f"({dt:.2f}s wall)"
+          + (f" [disagg executor={args.executor}]" if args.disagg else ""))
+    for name in ("ttft", "itl", "e2e"):
+        p = rep[name]
+        print(f"[serve] {name}: p50={p['p50']} p95={p['p95']} "
+              f"p99={p['p99']} {unit} (n={p['n']})")
+    g = rep["goodput"]
+    per = "tick" if args.clock == "virtual" else "s"
+    print(f"[serve] goodput: {g['tok_per_s']:.3f} tok/{per} "
+          f"slo_attainment={g['slo_attainment']:.2f}")
+    if args.metrics_out:
+        with open(args.metrics_out, "w") as f:
+            json.dump({"args": {"traffic": args.traffic, "rate": args.rate,
+                                "clock": args.clock, "disagg": args.disagg,
+                                "requests": args.requests,
+                                "max_new": args.max_new},
+                       "wall_seconds": dt, "report": rep}, f, indent=2)
+        print(f"[serve] metrics written to {args.metrics_out}")
 
 
 def main():
@@ -83,7 +129,33 @@ def main():
     ap.add_argument("--weight-quant", choices=("int8", "off"), default="off",
                     help="store serve params as per-tensor int8, "
                     "dequantized on apply inside the jitted paged calls")
+    ap.add_argument("--disagg", action="store_true",
+                    help="split serving into a prefill-only engine and a "
+                    "decode engine with KV page handoff between them")
+    ap.add_argument("--executor", choices=("serial", "thread"),
+                    default="serial",
+                    help="disagg stage driver: deterministic serial order "
+                    "or overlapped farm threads")
+    ap.add_argument("--traffic", choices=("off", "poisson", "bursty"),
+                    default="off",
+                    help="drive the engine with an open-loop seeded arrival "
+                    "process instead of submitting everything up front")
+    ap.add_argument("--rate", type=float, default=0.5,
+                    help="traffic arrival rate (requests per clock unit)")
+    ap.add_argument("--clock", choices=("virtual", "wall"), default="virtual",
+                    help="virtual: 1 tick = 1 time unit, fully "
+                    "deterministic; wall: real seconds")
+    ap.add_argument("--slo-ttft", type=float, default=None, metavar="T",
+                    help="goodput SLO: time-to-first-token bound "
+                    "(clock units)")
+    ap.add_argument("--slo-e2e", type=float, default=None, metavar="T",
+                    help="goodput SLO: end-to-end latency bound "
+                    "(clock units)")
+    ap.add_argument("--metrics-out", default=None, metavar="PATH",
+                    help="write the traffic metric report as JSON")
     args = ap.parse_args()
+    if args.disagg and args.dense:
+        raise SystemExit("--disagg needs the paged KV engine; drop --dense")
 
     cfg = smoke_config(args.arch) if args.smoke else get_config(args.arch)
     if cfg.family in ("hybrid",):
@@ -92,20 +164,26 @@ def main():
     model = build_model(cfg)
     params = model.init(jax.random.PRNGKey(0))
     mesh = parse_mesh(args.mesh)
-    eng = ServeEngine(model, params, max_slots=args.slots,
-                      max_len=args.max_len,
-                      paged=False if args.dense else None,
-                      page_size=args.page_size, num_pages=args.num_pages,
-                      prefill_chunk=args.prefill_chunk,
-                      prefix_cache=args.prefix_cache == "on",
-                      spec_decode=None if args.spec_decode == "off"
-                      else args.spec_decode,
-                      spec_k=args.spec_k, mesh=mesh,
-                      use_pallas_attention=args.pallas_attention,
-                      kv_quant=None if args.kv_quant == "off"
-                      else args.kv_quant,
-                      weight_quant=None if args.weight_quant == "off"
-                      else args.weight_quant)
+    kw = dict(max_slots=args.slots, max_len=args.max_len,
+              page_size=args.page_size, num_pages=args.num_pages,
+              prefill_chunk=args.prefill_chunk,
+              prefix_cache=args.prefix_cache == "on",
+              spec_decode=None if args.spec_decode == "off"
+              else args.spec_decode,
+              spec_k=args.spec_k, mesh=mesh,
+              use_pallas_attention=args.pallas_attention,
+              kv_quant=None if args.kv_quant == "off" else args.kv_quant,
+              weight_quant=None if args.weight_quant == "off"
+              else args.weight_quant)
+    if args.disagg:
+        eng = DisaggServeEngine(model, params, executor=args.executor, **kw)
+    else:
+        eng = ServeEngine(model, params,
+                          paged=False if args.dense else None, **kw)
+
+    if args.traffic != "off":
+        run_traffic_demo(eng, cfg, args)
+        return
 
     rng = np.random.default_rng(0)
     shared = rng.integers(0, cfg.vocab, args.shared_prefix)
@@ -117,6 +195,18 @@ def main():
     done = eng.run_until_drained()
     dt = time.perf_counter() - t0
     toks = sum(len(r.output) for r in done)
+    if args.disagg:
+        s = eng.stats
+        print(f"[serve] disagg: {len(done)} requests, {toks} tokens in "
+              f"{dt:.2f}s ({toks/dt:.1f} tok/s); "
+              f"prefill ticks={s['prefill']['ticks']} "
+              f"handoffs={s['prefill']['kv_handoffs']} | "
+              f"decode ticks={s['decode']['ticks']} "
+              f"injections={s['decode']['kv_injections']} "
+              f"preempt={s['decode']['preemptions']} "
+              f"[executor={args.executor}]")
+        eng.close()
+        return
     ttfts = [r.first_token_at - r.submitted_at for r in done]
     mode = "dense" if not eng.paged else (
         f"paged(ps={eng.pool.page_size}, "

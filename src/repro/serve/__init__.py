@@ -1,4 +1,5 @@
-from repro.serve.pages import PagePool, PagedLeafSpec, PrefixCache
+from repro.serve.pages import (KVHandoff, PagePool, PagedLeafSpec,
+                               PrefixCache)
 from repro.serve.sampling import (greedy, sample_temperature, sample_top_k,
                                   sample_top_p, spec_rejection_sample,
                                   spec_verify_greedy)
@@ -9,3 +10,9 @@ from repro.serve.scheduler import Scheduler
 from repro.serve.spec import (Drafter, NgramDrafter, TruncatedSelfDrafter,
                               make_drafter)
 from repro.serve.engine import ServeEngine, Request
+from repro.serve.disagg import DisaggServeEngine
+from repro.serve.metrics import compute_report, nearest_rank, percentiles
+from repro.serve.traffic import (TrafficHarness, TrafficRequest,
+                                 bursty_arrivals, make_workload,
+                                 poisson_arrivals, record_trace, run_traffic,
+                                 workload_from_trace)

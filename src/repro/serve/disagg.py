@@ -1,0 +1,163 @@
+"""Disaggregated prefill/decode serving: two engines, one page handoff.
+
+Production serving separates the two phases of a request's life because
+they stress different resources: prefill is compute-bound (one big batched
+forward over the prompt), decode is memory-bandwidth-bound (one token per
+tick per slot, KV cache resident).  This module splits
+:class:`repro.serve.engine.ServeEngine` into those roles:
+
+* the **prefiller** — ``ServeEngine(prefill_only=True)`` — admits, chunk-
+  prefills (with prefix-cache reuse), samples the first token, then
+  packages each surviving request as a :class:`repro.serve.pages.KVHandoff`
+  instead of decoding;
+* the **decoder** — an ordinary ``ServeEngine`` — receives each packet via
+  :meth:`~repro.serve.engine.ServeEngine.inject_prefilled`: the gathered KV
+  chunk (int8 payloads travel with their scale leaves) is scattered into
+  freshly allocated pages of the decoder's own pool, the slot goes LIVE,
+  and decode continues exactly where the monolithic engine would have —
+  no recompute.
+
+The handoff rule (the invariant the property tests pin):
+
+    gather on the prefiller takes one in-flight reference per source page;
+    those references are dropped exactly once — by ``packet.release()``
+    after a successful injection — so page conservation holds on both
+    pools at every step (free + cached + held partitions exactly, with
+    in-flight handoff references counted as held), and a delivery retry
+    racing a preemption can never double-free.
+
+Backpressure falls out of the same rule: while packets wait for decoder
+capacity they pin prefiller pages, so the prefiller's own admission stalls
+when the pipeline is full — no unbounded queue between the roles.
+
+Coordination is the paper's function-centric move: the two roles are plain
+zero-arg stage functions handed to :func:`repro.core.runtime.run_stages`,
+so the SAME code runs deterministically interleaved on a
+:class:`~repro.core.runtime.SerialExecutor` (prefill stage, then decode
+stage — the mode the bit-parity tests pin) or genuinely overlapped on a
+:class:`~repro.core.runtime.ThreadFarmExecutor` (each stage's jitted calls
+release the GIL).  Token streams are identical either way: greedy sampling
+ignores the PRNG key and seeded requests fold ``len(output)`` into their
+own seed, so a token depends only on the model, the prompt, and the tokens
+before it — never on which engine's tick produced it.
+"""
+from __future__ import annotations
+
+import threading
+from collections import deque
+
+from repro.core.runtime import make_executor, run_stages
+from repro.serve.engine import ServeEngine
+
+# engine kwargs that only make sense on the decoder (speculation happens at
+# decode; a prefill-only engine refuses them at construction)
+_DECODE_ONLY = ("spec_decode", "spec_k", "spec_temperature")
+
+
+class DisaggServeEngine:
+    """Prefiller + decoder pair behind the monolithic engine's interface.
+
+    ``submit`` / ``tick`` / ``run_until_drained`` / ``finished`` mirror
+    :class:`~repro.serve.engine.ServeEngine`, so the traffic harness and
+    the launcher drive either engine unchanged.
+
+    Args:
+      executor: ``"serial"`` (default — deterministic stage order) or
+        ``"thread"`` or an :class:`~repro.core.runtime.Executor` instance;
+        drives the two role stages each tick via ``run_stages``.
+      prefill_slots / prefill_pages: capacity of the prefiller (defaults:
+        the decoder's ``max_slots`` / ``num_pages``).  Remaining kwargs are
+        shared engine configuration; ``spec_decode`` (and friends) apply to
+        the decoder only.
+    """
+
+    def __init__(self, model, params, *, executor="serial",
+                 max_slots: int = 8, num_pages=None,
+                 prefill_slots=None, prefill_pages=None, **kw):
+        self.executor = make_executor(executor)
+        decode_kw = dict(kw)
+        prefill_kw = {k: v for k, v in kw.items() if k not in _DECODE_ONLY}
+        self.prefiller = ServeEngine(
+            model, params, prefill_only=True,
+            max_slots=prefill_slots or max_slots,
+            num_pages=prefill_pages or num_pages, **prefill_kw)
+        self.decoder = ServeEngine(
+            model, params, max_slots=max_slots, num_pages=num_pages,
+            **decode_kw)
+        # packets in flight between the roles; the lock covers the deque
+        # and the prefiller's handoffs list when stages run on farm threads
+        self._pending: deque = deque()
+        self._lock = threading.Lock()
+
+    # -- the monolithic engine's interface -----------------------------------
+
+    def submit(self, prompt, **kwargs) -> int:
+        return self.prefiller.submit(prompt, **kwargs)
+
+    @property
+    def finished(self) -> list:
+        """Retired requests from both roles: the prefiller keeps errored /
+        instantly-finished requests (EOS or budget at the first token), the
+        decoder everything that went through a handoff."""
+        return self.prefiller.finished + self.decoder.finished
+
+    @property
+    def stats(self) -> dict:
+        return {"prefill": self.prefiller.stats, "decode": self.decoder.stats,
+                "pending_handoffs": len(self._pending)}
+
+    def has_work(self) -> bool:
+        return (self.prefiller.sched.has_work()
+                or self.decoder.sched.has_work()
+                or bool(self._pending))
+
+    # -- role stages ----------------------------------------------------------
+
+    def _prefill_stage(self) -> bool:
+        busy = self.prefiller.tick()
+        with self._lock:
+            while self.prefiller.handoffs:
+                self._pending.append(self.prefiller.handoffs.pop(0))
+        return busy
+
+    def _decode_stage(self) -> bool:
+        # drain pending packets FIFO; stop at the first that doesn't fit so
+        # delivery order (and therefore decoder admission order) is stable
+        while True:
+            with self._lock:
+                packet = self._pending[0] if self._pending else None
+            if packet is None:
+                break
+            if not self.decoder.inject_prefilled(packet):
+                break                   # no slot/pages yet: retry next tick
+            packet.release()            # idempotent: drops the in-flight refs
+            with self._lock:
+                self._pending.popleft()
+        return self.decoder.tick()
+
+    def tick(self) -> bool:
+        busy = run_stages(self.executor,
+                          (self._prefill_stage, self._decode_stage))
+        return bool(busy) or bool(self._pending)
+
+    def run_until_drained(self, max_ticks: int = 10_000):
+        for _ in range(max_ticks):
+            busy = self.tick()
+            if not busy and not self.has_work():
+                break
+        return self.finished
+
+    # -- lifecycle -----------------------------------------------------------
+
+    def close(self):
+        self.prefiller.close()
+        self.decoder.close()
+        shutdown = getattr(self.executor, "shutdown", None)
+        if shutdown is not None:
+            shutdown()
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.close()

@@ -69,7 +69,7 @@ from repro.serve import spec as SP
 from repro.serve.pages import PagePool
 from repro.serve.sampling import (greedy, spec_rejection_sample,
                                   spec_verify_greedy)
-from repro.serve.scheduler import Scheduler, prefill_tokens
+from repro.serve.scheduler import FREE, Scheduler, prefill_tokens
 
 
 @dataclasses.dataclass
@@ -109,7 +109,8 @@ class ServeEngine:
                  spec_decode=None, spec_k: int = 4,
                  spec_temperature: float = 0.0,
                  strict: bool = False, use_pallas_attention: bool = False,
-                 mesh=None, kv_quant=None, weight_quant=None):
+                 mesh=None, kv_quant=None, weight_quant=None,
+                 prefill_only: bool = False):
         self.model, self.params, self.rules = model, params, rules
         self.max_slots, self.max_len = max_slots, max_len
         self.strict = strict
@@ -151,6 +152,24 @@ class ServeEngine:
                 "(spec_temperature > 0); a custom engine-wide sampler "
                 "cannot be verified and would be silently ignored — "
                 "drop it (per-request samplers remain supported)")
+        # A prefill-only engine is the producer half of disaggregated
+        # serving (repro.serve.disagg): it admits and chunk-prefills as
+        # usual, but instead of decoding it packages each completed
+        # prefill's pages as a KVHandoff for a decoder to inject.  Handoff
+        # moves whole refcounted pages, so it only exists in paged mode —
+        # and speculation is meaningless on an engine that never decodes.
+        self.prefill_only = bool(prefill_only)
+        self.handoffs: list[PG.KVHandoff] = []
+        if self.prefill_only and not self.paged:
+            raise ValueError(
+                f"prefill_only requires the paged KV engine: "
+                f"{model.cfg.name} ({model.cfg.family}) has no pages to "
+                "hand off; drop the flag or use a paged family")
+        if self.prefill_only and spec_decode not in (None, "off", False):
+            raise ValueError(
+                "spec_decode on a prefill_only engine would never run "
+                "(speculation happens at decode); configure the drafter on "
+                "the decoder side")
         # KV quantization (int8 pages + per-row scale leaves) is a property
         # of the PAGED storage layout; the dense per-slot path has no pool
         # to hold the scale leaves in.
@@ -281,6 +300,7 @@ class ServeEngine:
                       "cow_copies": 0, "evictions": 0, "pages_high_water": 0,
                       "draft_proposed": 0, "draft_accepted": 0,
                       "acceptance_rate": 0.0,
+                      "kv_handoffs": 0, "kv_injections": 0,
                       "kv_quant": self.kv_quant.name if self.kv_quant
                       else "off",
                       "weight_quant": self.weight_quant or "off",
@@ -496,7 +516,9 @@ class ServeEngine:
 
     def _emit_first_token(self, slot: int, tok: int):
         """Bookkeeping for the token sampled off a completed prefill
-        (EOS / budget checked immediately — a request may finish here)."""
+        (EOS / budget checked immediately — a request may finish here).
+        A prefill-only engine hands surviving requests off to a decoder
+        instead of keeping the slot live."""
         req = self.sched.slot_req[slot]
         if req.first_token_at is None:
             req.first_token_at = time.perf_counter()
@@ -504,7 +526,87 @@ class ServeEngine:
         self.last_token[slot] = tok
         self.stats["tokens"] += 1
         self.stats["prefills"] += 1
+        if self.prefill_only:
+            # instant EOS / one-token budget / max_len still retire here —
+            # there is nothing left for a decoder to do
+            if not self._check_retire(slot, tok):
+                self._handoff(slot)
+            return
         self._check_retire(slot, tok)
+
+    # -- disaggregated prefill/decode: page handoff ---------------------------
+
+    def _gather_slot_kv(self, row: np.ndarray):
+        """Gather one slot's pages into a contiguous chunk per pool leaf
+        (``prefix + (n * page_size,) + suffix``).  Runs eagerly, not jitted:
+        the page count varies per request, and a jit here would compile one
+        program per count; the gathered buffers are independent of the
+        pool's (possibly donated) storage, so a later storage recovery
+        cannot invalidate an in-flight handoff."""
+        tables = jnp.asarray(np.asarray(row, np.int32)[None])
+
+        def leaf(st, spec):
+            n = len(spec.prefix)
+            return jnp.squeeze(
+                PG.gather_pages(st, tables, n_prefix=n), axis=n)
+
+        return jax.tree_util.tree_map(leaf, self.pool.storage,
+                                      self.pool.leaf_specs)
+
+    def _handoff(self, slot: int):
+        """Package a completed prefill for a decoder: gather the slot's KV,
+        take one in-flight reference per source page (they may stay
+        registered and be re-shared by the prefix cache meanwhile, but a
+        referenced page can never be evicted or reallocated), then release
+        the slot — full clean pages also park in the prefix index exactly
+        as a monolithic retirement would.  The KVHandoff owns the in-flight
+        references until its ``release()``."""
+        req = self.sched.slot_req[slot]
+        total = int(self.sched.lengths[slot])
+        n_kv = -(-total // self.pool.page_size)
+        pages = [int(p) for p in self.sched.table[slot, :n_kv]]
+        kv = self._gather_slot_kv(self.sched.table[slot, :n_kv])
+        self.pool.incref(pages)
+        self.sched.release(slot)
+        self.stats["kv_handoffs"] += 1
+        self.handoffs.append(PG.KVHandoff(req=req, length=total, kv=kv,
+                                          pages=pages, pool=self.pool))
+
+    def inject_prefilled(self, handoff: PG.KVHandoff) -> bool:
+        """Decoder half of the page handoff: bind a prefilled request into
+        a LIVE slot by scattering the gathered KV chunk into freshly
+        allocated pages — no recompute.  All-or-nothing like admission:
+        returns False (taking nothing) when no slot is free or the pool
+        cannot yield ``(length + page_size) // page_size`` pages right now;
+        the caller retries after a tick drains capacity.  On success the
+        handoff's source references are NOT dropped — the caller owns
+        ``handoff.release()`` (idempotent), which lets delivery race
+        preemption without a double-free."""
+        if not self.paged:
+            raise ValueError("page handoff requires the paged KV engine")
+        req, total = handoff.req, handoff.length
+        assert req.output, "handoff carries the prefill's first token"
+        slot = next((s for s in range(self.max_slots)
+                     if self.sched.status[s] == FREE), None)
+        if slot is None:
+            return False
+        ps = self.pool.page_size
+        pages = self.pool.alloc((total + ps) // ps)
+        if pages is None:
+            return False
+        n_kv = -(-total // ps)
+        pg = jnp.asarray(np.asarray(pages[:n_kv], np.int32))
+
+        def leaf(st, spec, chunk):
+            return PG.scatter_chunk(st, pg, chunk, page_size=ps,
+                                    n_prefix=len(spec.prefix))
+
+        self.pool.storage = jax.tree_util.tree_map(
+            leaf, self.pool.storage, self.pool.leaf_specs, handoff.kv)
+        self.sched.bind_prefilled(slot, req, pages, total)
+        self.last_token[slot] = req.output[-1]
+        self.stats["kv_injections"] += 1
+        return True
 
     def _retire_error(self, req: Request, err: BaseException):
         req.error = err

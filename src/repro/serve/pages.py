@@ -441,6 +441,37 @@ class PagePool:
         return self.num_pages * self.page_size
 
 
+@dataclasses.dataclass
+class KVHandoff:
+    """A completed prefill's KV in flight between two pools — the unit of
+    disaggregated prefill/decode transfer (:mod:`repro.serve.disagg`).
+
+    The prefiller gathers the request's pages into a contiguous chunk
+    (``kv``: one leaf per pool leaf, shaped ``prefix + (n * page_size,) +
+    suffix`` — int8 payloads travel WITH their scale leaves, since scales
+    are ordinary pool leaves), takes one extra reference per source page,
+    and releases the slot.  The held references pin the source pages —
+    they may stay registered in the prefiller's prefix cache and be
+    re-shared by later admissions, but can never be evicted or reallocated
+    — until the decoder has scattered the chunk into its own pool and the
+    coordinator calls :meth:`release`.  ``release`` is idempotent: the
+    in-flight references are dropped exactly once, so a retry loop that
+    races a preemption can never double-free.
+    """
+    req: Any                    # the Request, with its first token appended
+    length: int                 # prefilled positions (first token excluded)
+    kv: Any                     # gathered storage pytree (see above)
+    pages: list                 # source page ids holding the in-flight refs
+    pool: Any                   # source PagePool
+    released: bool = False
+
+    def release(self) -> None:
+        if self.released:
+            return
+        self.released = True
+        self.pool.decref(self.pages)
+
+
 # ---------------------------------------------------------------------------
 # Pure device ops (jit-safe; storage in, storage out)
 # ---------------------------------------------------------------------------

@@ -195,6 +195,32 @@ class Scheduler:
             admits.append((slot, req))
         return admits, rejects
 
+    def bind_prefilled(self, slot: int, req, pages, length: int) -> None:
+        """Admit an externally prefilled request straight into a LIVE slot —
+        the decoder half of a prefill/decode page handoff.  The caller has
+        already allocated ``pages`` all-or-nothing (enough for every
+        prefilled position plus the next decode write:
+        ``(length + page_size) // page_size``) and scattered the KV into the
+        leading ``ceil(length / page_size)`` of them; this binds the same
+        bookkeeping :meth:`admit` + :meth:`chunk_done` would have, including
+        registering the full clean pages in the prefix index so later
+        admissions share them and decode writes take the usual
+        unregister-or-COW path."""
+        assert self.pool is not None, "page handoff requires a paged pool"
+        assert self.status[slot] == FREE, (slot, self.status[slot])
+        n = len(pages)
+        self.table[slot, :n] = pages
+        self.n_pages[slot] = n
+        self.replay[slot] = False
+        self.status[slot] = LIVE
+        self.slot_req[slot] = req
+        self.lengths[slot] = length
+        self.prefill_done[slot] = length
+        self.prefill_total[slot] = length
+        self.admitted_at[slot] = self._admit_seq
+        self._admit_seq += 1
+        self._register_pages(slot, length)
+
     # -- chunked prefill -----------------------------------------------------
 
     def _padded_total(self, slot: int) -> int:

@@ -1,0 +1,208 @@
+"""Disaggregated prefill/decode tests: KV page handoff must be invisible.
+
+The acceptance bar is bit-parity: a DisaggServeEngine (prefiller +
+decoder, pages transferred via gather/scatter, no recompute) must produce
+token streams identical to the monolithic ServeEngine on the same
+workload — dense and MoE families, prefix cache on/off, kv_quant int8/off
+(the int8 payload travels with its scale leaves), under forced decoder
+preemption, and with the thread-farm executor overlapping the roles.
+
+Greedy sampling ignores the PRNG key and seeded requests fold
+``len(output)`` into their own seed, so a token depends only on the model
+and the tokens before it — which is exactly what makes this parity
+testable bit-for-bit.
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import smoke_config
+from repro.models.api import build_model
+from repro.serve import DisaggServeEngine, ServeEngine
+
+
+@pytest.fixture(scope="module")
+def dense():
+    cfg = smoke_config("qwen2-7b").replace(remat="none")
+    model = build_model(cfg)
+    return model, model.init(jax.random.PRNGKey(0))
+
+
+@pytest.fixture(scope="module")
+def moe():
+    cfg = smoke_config("qwen3-moe-235b-a22b").replace(remat="none")
+    model = build_model(cfg)
+    return model, model.init(jax.random.PRNGKey(1))
+
+
+def _prompts(vocab):
+    # two identical prompts (prefix-cache sharing), one long (chunked
+    # prefill), one short — the standard parity workload
+    return [np.arange(1, 20, dtype=np.int32) % vocab,
+            np.arange(1, 20, dtype=np.int32) % vocab,
+            np.arange(5, 40, dtype=np.int32) % vocab,
+            np.arange(2, 9, dtype=np.int32) % vocab]
+
+
+def _streams(engine, prompts, max_new=8, **submit_kw):
+    for p in prompts:
+        engine.submit(p, max_new_tokens=max_new, **submit_kw)
+    finished = engine.run_until_drained()
+    engine.close()
+    assert len(finished) == len(prompts)
+    return {r.rid: list(r.output) for r in finished}
+
+
+KW = dict(max_slots=3, max_len=64, page_size=8, num_pages=24,
+          prefill_chunk=16)
+
+
+@pytest.mark.parametrize("prefix_cache", [False, True])
+@pytest.mark.parametrize("kv_quant", [None, "int8"])
+def test_disagg_matches_monolithic_dense(dense, prefix_cache, kv_quant):
+    model, params = dense
+    mono = _streams(ServeEngine(model, params, prefix_cache=prefix_cache,
+                                kv_quant=kv_quant, **KW),
+                    _prompts(model.cfg.vocab))
+    dis = _streams(DisaggServeEngine(model, params,
+                                     prefix_cache=prefix_cache,
+                                     kv_quant=kv_quant, **KW),
+                   _prompts(model.cfg.vocab))
+    assert mono == dis
+
+
+@pytest.mark.parametrize("prefix_cache", [False, True])
+@pytest.mark.parametrize("kv_quant", [None, "int8"])
+def test_disagg_matches_monolithic_moe(moe, prefix_cache, kv_quant):
+    model, params = moe
+    mono = _streams(ServeEngine(model, params, prefix_cache=prefix_cache,
+                                kv_quant=kv_quant, **KW),
+                    _prompts(model.cfg.vocab))
+    dis = _streams(DisaggServeEngine(model, params,
+                                     prefix_cache=prefix_cache,
+                                     kv_quant=kv_quant, **KW),
+                   _prompts(model.cfg.vocab))
+    assert mono == dis
+
+
+def test_disagg_under_forced_preemption(dense):
+    """A decode pool too small for every injected request forces
+    preemption on the decoder; recompute-style re-prefill must preserve
+    the streams, so parity with the monolithic engine (given the same
+    tight pool) still holds bit-for-bit."""
+    model, params = dense
+    tight = dict(max_slots=3, max_len=32, page_size=4, num_pages=8,
+                 prefill_chunk=8)
+    prompts = [np.arange(1, 8, dtype=np.int32) % model.cfg.vocab,
+               np.arange(3, 12, dtype=np.int32) % model.cfg.vocab,
+               np.arange(7, 13, dtype=np.int32) % model.cfg.vocab]
+    mono_eng = ServeEngine(model, params, **tight)
+    mono = _streams(mono_eng, prompts, max_new=12)
+    dis_eng = DisaggServeEngine(model, params, prefill_pages=16, **tight)
+    dis = _streams(dis_eng, prompts, max_new=12)
+    assert mono == dis
+    assert dis_eng.decoder.stats["preemptions"] > 0, \
+        "the tight pool was meant to force decoder preemption"
+
+
+def test_disagg_thread_executor_parity(dense):
+    """The prefill and decode stages genuinely overlapping on farm threads
+    may interleave ticks differently, but never change a token."""
+    model, params = dense
+    mono = _streams(ServeEngine(model, params, **KW),
+                    _prompts(model.cfg.vocab))
+    dis = _streams(DisaggServeEngine(model, params, executor="thread", **KW),
+                   _prompts(model.cfg.vocab))
+    assert mono == dis
+
+
+def test_disagg_seeded_sampling_parity(dense):
+    """Seeded per-request sampling folds (seed, len(output)) — independent
+    of which engine's tick draws — so sampled streams transfer too."""
+    model, params = dense
+    prompts = _prompts(model.cfg.vocab)
+    mono = {}
+    eng = ServeEngine(model, params, **KW)
+    for i, p in enumerate(prompts):
+        eng.submit(p, max_new_tokens=8, seed=i)
+    mono = {r.rid: list(r.output) for r in eng.run_until_drained()}
+    eng.close()
+    eng = DisaggServeEngine(model, params, **KW)
+    for i, p in enumerate(prompts):
+        eng.submit(p, max_new_tokens=8, seed=i)
+    dis = {r.rid: list(r.output) for r in eng.run_until_drained()}
+    eng.close()
+    assert mono == dis
+
+
+def test_disagg_instant_finish_stays_on_prefiller(dense):
+    """A one-token budget finishes at the first token: the request retires
+    on the prefiller and no handoff packet is ever created for it."""
+    model, params = dense
+    eng = DisaggServeEngine(model, params, **KW)
+    eng.submit(np.arange(1, 9, dtype=np.int32) % model.cfg.vocab,
+               max_new_tokens=1)
+    finished = eng.run_until_drained()
+    assert len(finished) == 1 and len(finished[0].output) == 1
+    assert eng.prefiller.stats["kv_handoffs"] == 0
+    assert eng.decoder.stats["kv_injections"] == 0
+    assert finished[0] in eng.prefiller.finished
+    eng.close()
+
+
+def test_disagg_error_requests_retire_on_prefiller(dense):
+    """An unprefillable request (empty prompt) errors out on the prefiller
+    without disturbing healthy requests on either side."""
+    model, params = dense
+    eng = DisaggServeEngine(model, params, **KW)
+    ok = eng.submit(np.arange(1, 9, dtype=np.int32) % model.cfg.vocab,
+                    max_new_tokens=4)
+    bad = eng.submit(np.asarray([], np.int32), max_new_tokens=4)
+    finished = {r.rid: r for r in eng.run_until_drained()}
+    assert finished[bad].error is not None and not finished[bad].output
+    assert finished[ok].error is None and len(finished[ok].output) == 4
+    eng.close()
+
+
+def test_disagg_handoff_accounting_and_clean_pools(dense):
+    """Every handoff is injected exactly once, and after draining both
+    pools hold zero in-use pages (everything free or parked in the prefix
+    cache) — the engine-level face of the conservation property."""
+    model, params = dense
+    eng = DisaggServeEngine(model, params, **KW)
+    _streams(eng, _prompts(model.cfg.vocab))
+    assert eng.prefiller.stats["kv_handoffs"] == 4
+    assert eng.decoder.stats["kv_injections"] == 4
+    assert not eng._pending and not eng.prefiller.handoffs
+    for pool in (eng.prefiller.pool, eng.decoder.pool):
+        assert pool.pages_in_use == 0
+        assert pool.pages_free + pool.pages_cached == pool.num_pages
+
+
+def test_disagg_backpressure_with_tiny_prefill_pool(dense):
+    """In-flight packets pin prefiller pages, so a tiny prefill pool
+    stalls admission until the decoder drains — but the run still
+    completes with parity."""
+    model, params = dense
+    small = dict(max_slots=2, max_len=32, page_size=4, num_pages=8,
+                 prefill_chunk=8)
+    prompts = [np.arange(1, 8, dtype=np.int32) % model.cfg.vocab,
+               np.arange(2, 12, dtype=np.int32) % model.cfg.vocab,
+               np.arange(3, 10, dtype=np.int32) % model.cfg.vocab]
+    mono = _streams(ServeEngine(model, params, **small), prompts, max_new=6)
+    dis = _streams(DisaggServeEngine(model, params, prefill_pages=8,
+                                     **small), prompts, max_new=6)
+    assert mono == dis
+
+
+def test_prefill_only_flag_validation(dense):
+    model, params = dense
+    with pytest.raises(ValueError, match="prefill_only requires the paged"):
+        ServeEngine(model, params, paged=False, prefill_only=True)
+    with pytest.raises(ValueError, match="spec_decode on a prefill_only"):
+        ServeEngine(model, params, prefill_only=True, spec_decode="ngram",
+                    **KW)
+    eng = ServeEngine(model, params, paged=False)
+    with pytest.raises(ValueError, match="requires the paged KV engine"):
+        eng.inject_prefilled(None)
+    eng.close()

@@ -29,7 +29,7 @@ import numpy as np
 import jax.numpy as jnp
 from hypothesis import given, settings, strategies as st
 
-from repro.serve.pages import PagePool, PagedLeafSpec
+from repro.serve.pages import KVHandoff, PagePool, PagedLeafSpec
 from repro.serve.scheduler import FREE, LIVE, Scheduler
 
 NUM_PAGES, PAGE_SIZE, SLOTS, MAX_LEN = 8, 4, 3, 32
@@ -56,15 +56,21 @@ def _make(prefix_cache=False):
     return pool, sched
 
 
-def _check_invariants(pool, s):
+def _check_invariants(pool, s, extra=None):
+    """``extra`` (a Counter of page -> refs) accounts references held
+    OUTSIDE the slot tables — in-flight KV handoff packets; such pages are
+    part of the *held* partition (their refcount pins them) even though no
+    slot's table points at them."""
     refs = [pool.ref(p) for p in range(pool.num_pages)]
-    # every refcount is accounted for by a page-table reference
+    # every refcount is accounted for by a page-table or handoff reference
     cnt = Counter(int(p) for slot in range(s.max_slots)
                   for p in s.table[slot, :int(s.n_pages[slot])])
+    extra = extra or Counter()
+    cnt.update(extra)
     for p in range(pool.num_pages):
         assert cnt.get(p, 0) == refs[p], \
-            f"page {p}: {cnt.get(p, 0)} table refs vs refcount {refs[p]}"
-    assert s.held_pages() == sum(refs)
+            f"page {p}: {cnt.get(p, 0)} table+handoff refs vs refcount {refs[p]}"
+    assert s.held_pages() + sum(extra.values()) == sum(refs)
     # free / cached-unreferenced / held partition the pool exactly
     free = {int(p) for p in pool._free}
     cached = {p for p in range(pool.num_pages)
@@ -164,6 +170,90 @@ def _drive(actions, plens, prefix_cache=False):
     return first_admits, pool, s
 
 
+def _drive_disagg(actions, plens, prefix_cache=False):
+    """Two-pool drive modelling disaggregated prefill/decode: the prefiller
+    scheduler hands completed prefills off as :class:`KVHandoff` packets
+    (one in-flight reference per source page), the decoder scheduler binds
+    them via ``bind_prefilled`` into freshly allocated pages.  Checks page
+    conservation on BOTH pools after every step — with packet references
+    counted into the prefiller's held partition — and deliberately
+    double-releases every delivered packet to pin release idempotence (the
+    no-double-free-under-racing-preemption property)."""
+    pool_p, sp = _make(prefix_cache)            # prefiller side
+    pool_d, sd = _make(prefix_cache)            # decoder side
+    pending: list[KVHandoff] = []
+    rid = iter(range(1_000_000))
+    for n in plens:
+        sp.submit(_Req(next(rid), n))
+    n_late = 0
+
+    def check():
+        inflight = Counter(p for pkt in pending if not pkt.released
+                           for p in pkt.pages)
+        _check_invariants(pool_p, sp, extra=inflight)
+        _check_invariants(pool_d, sd)
+
+    for a in actions:
+        if a == 0:                      # admit on the prefiller
+            sp.admit()
+        elif a == 1:                    # prefill chunks; completions hand off
+            for job in sp.next_chunks():
+                sp.chunk_done(job)
+                if job.is_last:
+                    slot = job.slot
+                    total = int(sp.lengths[slot])
+                    n_kv = -(-total // sp.page_size)
+                    pages = [int(p) for p in sp.table[slot, :n_kv]]
+                    pool_p.incref(pages)        # the in-flight references
+                    sp.release(slot)
+                    pending.append(KVHandoff(req=job.req, length=total,
+                                             kv=None, pages=pages,
+                                             pool=pool_p))
+        elif a == 2:                    # deliver the oldest packet (FIFO)
+            if pending:
+                pkt = pending[0]
+                slot = next((x for x in range(sd.max_slots)
+                             if sd.status[x] == FREE), None)
+                if slot is not None:
+                    ps = sd.page_size
+                    pages = pool_d.alloc((pkt.length + ps) // ps)
+                    if pages is not None:       # else: retry a later step
+                        sd.bind_prefilled(slot, pkt.req, pages, pkt.length)
+                        pkt.release()
+                        pkt.release()   # deliberate: must be a no-op
+                        pending.pop(0)
+        elif a == 3:                    # decode tick on the decoder
+            for slot in sd.live_slots():
+                if int(sd.lengths[slot]) < sd.max_len - 1:
+                    sd.lengths[slot] += 1
+            try:
+                sd.ensure_decode_pages()
+            except RuntimeError:
+                pass                    # single-resident pool exhaustion
+            else:
+                _check_write_safety(pool_d, sd)
+        elif a == 4:                    # retire the oldest live on the decoder
+            live = sd.live_slots()
+            if live:
+                sd.release(min(live, key=lambda sl: sd.admitted_at[sl]))
+        elif a == 5:                    # preempt on the PREFILLER: a victim
+            resident = [sl for sl in range(sp.max_slots)  # may share pages
+                        if sp.status[sl] != FREE]         # with in-flight
+            if resident:                                  # packets
+                sp.preempt(max(resident, key=lambda sl: sp.admitted_at[sl]))
+        elif a == 6:                    # preempt + re-admit on the decoder
+            resident = [sl for sl in range(sd.max_slots)
+                        if sd.status[sl] != FREE]
+            if resident:
+                sd.preempt(max(resident, key=lambda sl: sd.admitted_at[sl]))
+            sd.admit()                  # re-admission may match handoff-
+        else:                           # registered pages (a == 7: late sub)
+            n_late += 1
+            sp.submit(_Req(next(rid), 1 + (n_late * 7) % (MAX_LEN // 2)))
+        check()
+    return pending, (pool_p, sp), (pool_d, sd)
+
+
 @settings(max_examples=20, deadline=None)
 @given(st.lists(st.integers(0, 6), min_size=1, max_size=60),
        st.lists(st.integers(1, 20), min_size=1, max_size=8))
@@ -216,3 +306,37 @@ def test_scheduler_drain_returns_every_page(actions, plens, prefix_cache):
     assert pool.pages_free + pool.pages_cached == pool.num_pages
     pool.flush_cache()
     assert pool.pages_free == pool.num_pages and pool.pages_cached == 0
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.lists(st.integers(0, 7), min_size=1, max_size=60),
+       st.lists(st.integers(1, 20), min_size=1, max_size=8),
+       st.booleans())
+def test_handoff_page_conservation(actions, plens, prefix_cache):
+    """Random prefill / handoff / deliver / decode / preempt interleavings
+    conserve pages on both pools, with in-flight packet references counted
+    as held on the prefiller — and double-releasing a delivered packet is
+    always a no-op (checked inside the drive)."""
+    _drive_disagg(actions, plens, prefix_cache)
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.lists(st.integers(0, 7), min_size=10, max_size=60),
+       st.lists(st.integers(1, 20), min_size=2, max_size=8),
+       st.booleans())
+def test_handoff_drain_returns_every_page(actions, plens, prefix_cache):
+    """After releasing every in-flight packet (twice — idempotence) and
+    every resident slot on both sides, both pools are whole again."""
+    pending, (pool_p, sp), (pool_d, sd) = _drive_disagg(
+        actions, plens, prefix_cache)
+    for pkt in pending:
+        pkt.release()
+        pkt.release()                   # idempotent by contract
+    for pool, s in ((pool_p, sp), (pool_d, sd)):
+        for slot in range(s.max_slots):
+            if s.status[slot] != FREE:
+                s.release(slot)
+        assert s.held_pages() == 0
+        assert pool.pages_free + pool.pages_cached == pool.num_pages
+        pool.flush_cache()
+        assert pool.pages_free == pool.num_pages and pool.pages_cached == 0

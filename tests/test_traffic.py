@@ -1,0 +1,207 @@
+"""Traffic harness tests: seeded determinism, arrival-process statistics,
+metric arithmetic, and trace-replay round-trips.
+
+The statistical tests run under hypothesis (the real package in CI's props
+job; the deterministic stub elsewhere) over random (rate, seed) draws —
+the Poisson process must look Poisson for EVERY seed, not one golden one.
+Engine-level tests pin the property the CI perf gate depends on: under
+the virtual clock, the whole run — request schedule, event log, token
+streams, metric report — is a deterministic function of the seed.
+"""
+import math
+
+import jax
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import smoke_config
+from repro.models.api import build_model
+from repro.serve import DisaggServeEngine, ServeEngine
+from repro.serve.metrics import compute_report, nearest_rank
+from repro.serve.traffic import (bursty_arrivals, make_workload,
+                                 poisson_arrivals, record_trace, run_traffic,
+                                 workload_from_trace)
+
+
+@pytest.fixture(scope="module")
+def dense():
+    cfg = smoke_config("qwen2-7b").replace(remat="none")
+    model = build_model(cfg)
+    return model, model.init(jax.random.PRNGKey(0))
+
+
+ENGINE_KW = dict(max_slots=3, max_len=64, page_size=8, num_pages=24,
+                 prefill_chunk=16)
+WL_KW = dict(n_requests=8, rate=0.5, seed=3, max_new_tokens=6,
+             shared_prefix_len=8, n_sessions=2)
+
+
+# ---------------------------------------------------------------------------
+# workload generation
+# ---------------------------------------------------------------------------
+
+def test_same_seed_same_workload():
+    a = make_workload(kind="poisson", vocab=491, **WL_KW)
+    b = make_workload(kind="poisson", vocab=491, **WL_KW)
+    assert len(a) == len(b) == WL_KW["n_requests"]
+    for ra, rb in zip(a, b):
+        assert ra.arrival == rb.arrival and ra.session == rb.session
+        assert np.array_equal(ra.prompt, rb.prompt)
+    c = make_workload(kind="poisson", vocab=491,
+                      **{**WL_KW, "seed": WL_KW["seed"] + 1})
+    assert any(not np.array_equal(ra.prompt, rc.prompt)
+               or ra.arrival != rc.arrival for ra, rc in zip(a, c))
+
+
+def test_shared_prefixes_are_per_session():
+    wl = make_workload(kind="poisson", vocab=491, **WL_KW)
+    by_session = {}
+    for r in wl:
+        assert r.session >= 0
+        pre = tuple(r.prompt[:8])
+        by_session.setdefault(r.session, pre)
+        assert by_session[r.session] == pre, \
+            "requests in one session must share its prefix"
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.floats(0.2, 4.0), st.integers(0, 2 ** 31 - 1))
+def test_poisson_interarrival_statistics(rate, seed):
+    """Exponential inter-arrivals: mean 1/rate, coefficient of variation 1,
+    memoryless tail P(X > 2/rate) = e^-2 — for every seed."""
+    rng = np.random.default_rng(seed)
+    arr = poisson_arrivals(4000, rate, rng)
+    assert np.all(np.diff(arr) >= 0)
+    gaps = np.diff(np.concatenate([[0.0], arr]))
+    mean = gaps.mean()
+    assert abs(mean - 1.0 / rate) < 0.1 / rate
+    cv = gaps.std() / mean
+    assert abs(cv - 1.0) < 0.12
+    tail = (gaps > 2.0 / rate).mean()
+    assert abs(tail - math.exp(-2)) < 0.04
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.floats(0.2, 4.0), st.integers(0, 2 ** 31 - 1))
+def test_bursty_arrivals_rate_and_shape(rate, seed):
+    """Bursts of 4 share one arrival instant; the long-run rate matches."""
+    rng = np.random.default_rng(seed)
+    arr = bursty_arrivals(4000, rate, rng, burst=4)
+    assert len(arr) == 4000
+    for i in range(0, 4000, 4):
+        assert np.all(arr[i:i + 4] == arr[i])
+    assert abs(arr[-1] / 4000 - 1.0 / rate) < 0.15 / rate
+
+
+def test_mixed_lengths_stay_in_bands():
+    wl = make_workload(kind="poisson", n_requests=200, rate=1.0, vocab=491,
+                       seed=0, shared_prefix_len=0, n_sessions=0,
+                       len_mix=((1.0, 4, 8), (1.0, 30, 40)))
+    lens = [len(r.prompt) for r in wl]
+    assert all(4 <= n <= 8 or 30 <= n <= 40 for n in lens)
+    assert any(n <= 8 for n in lens) and any(n >= 30 for n in lens)
+
+
+# ---------------------------------------------------------------------------
+# metric arithmetic (hand-checked)
+# ---------------------------------------------------------------------------
+
+def test_nearest_rank_percentiles():
+    xs = [5.0, 1.0, 3.0, 2.0, 4.0]
+    assert nearest_rank(xs, 50) == 3.0
+    assert nearest_rank(xs, 95) == 5.0
+    assert nearest_rank(xs, 99) == 5.0
+    assert nearest_rank([7.0], 50) == 7.0
+    assert nearest_rank([], 50) is None
+
+
+def test_compute_report_hand_checked():
+    events = [
+        {"t": 0.0, "rid": 0, "kind": "submit"},
+        {"t": 1.0, "rid": 1, "kind": "submit"},
+        {"t": 2.0, "rid": 2, "kind": "submit"},
+        {"t": 2.0, "rid": 0, "kind": "tokens", "n": 1},
+        {"t": 3.0, "rid": 0, "kind": "tokens", "n": 2},
+        {"t": 3.0, "rid": 0, "kind": "done", "error": False},
+        {"t": 5.0, "rid": 1, "kind": "tokens", "n": 1},
+        {"t": 6.0, "rid": 1, "kind": "done", "error": False},
+        {"t": 7.0, "rid": 2, "kind": "done", "error": True},
+    ]
+    rep = compute_report(events, slo={"ttft": 3.0})
+    assert rep["n_requests"] == 3 and rep["n_measured"] == 2
+    assert rep["n_errors"] == 1
+    # rid 0: ttft 2, tok_times [2, 3, 3] -> gaps [1, 0], e2e 3, 3 tokens
+    # rid 1: ttft 4, no gaps, e2e 5, 1 token;  span = 7 - 0
+    assert rep["tokens"] == 4 and rep["span"] == 7.0
+    assert rep["ttft"] == {"p50": 2.0, "p95": 4.0, "p99": 4.0, "n": 2}
+    assert rep["itl"] == {"p50": 0.0, "p95": 1.0, "p99": 1.0, "n": 2}
+    assert rep["e2e"] == {"p50": 3.0, "p95": 5.0, "p99": 5.0, "n": 2}
+    assert rep["tok_per_s"] == pytest.approx(4 / 7)
+    # only rid 0 meets ttft <= 3; the errored request is never compliant
+    assert rep["goodput"]["tok_per_s"] == pytest.approx(3 / 7)
+    assert rep["goodput"]["req_per_s"] == pytest.approx(1 / 7)
+    assert rep["goodput"]["slo_attainment"] == pytest.approx(0.5)
+
+
+def test_goodput_equals_throughput_without_slo():
+    events = [
+        {"t": 0.0, "rid": 0, "kind": "submit"},
+        {"t": 4.0, "rid": 0, "kind": "tokens", "n": 3},
+        {"t": 4.0, "rid": 0, "kind": "done", "error": False},
+    ]
+    rep = compute_report(events)
+    assert rep["goodput"]["tok_per_s"] == rep["tok_per_s"]
+    assert rep["goodput"]["slo_attainment"] == 1.0
+
+
+# ---------------------------------------------------------------------------
+# end-to-end determinism and trace replay
+# ---------------------------------------------------------------------------
+
+def _run(model, params, workload, engine_cls=ServeEngine, **ekw):
+    eng = engine_cls(model, params, **{**ENGINE_KW, **ekw})
+    res = run_traffic(eng, workload, slo={"ttft": 24.0, "e2e": 96.0})
+    eng.close()
+    return res
+
+
+def test_harness_deterministic_under_virtual_clock(dense):
+    """Same seed, fresh engines: identical event log, token streams, and
+    metric report — the property CI's perf gate leans on."""
+    model, params = dense
+    wl = make_workload(kind="poisson", vocab=model.cfg.vocab, **WL_KW)
+    a = _run(model, params, wl)
+    b = _run(model, params, wl)
+    assert a["events"] == b["events"]
+    assert a["outputs"] == b["outputs"]
+    assert a["report"] == b["report"]
+
+
+def test_trace_replay_round_trip(dense):
+    """Record a run, rebuild the workload from the trace, replay on a
+    fresh engine: bit-identical token streams AND event log."""
+    model, params = dense
+    wl = make_workload(kind="bursty", vocab=model.cfg.vocab, **WL_KW)
+    first = _run(model, params, wl)
+    trace = record_trace(wl, first["events"], first["outputs"])
+    replayed_wl = workload_from_trace(trace)
+    for orig, re in zip(wl, replayed_wl):
+        assert np.array_equal(orig.prompt, re.prompt)
+        assert orig.arrival == re.arrival
+    second = _run(model, params, replayed_wl)
+    assert second["events"] == trace["events"]
+    assert {str(k): v for k, v in second["outputs"].items()} \
+        == trace["outputs"]
+
+
+def test_disagg_engine_under_traffic_matches_monolithic_streams(dense):
+    """The harness drives both engine shapes; queueing changes WHEN tokens
+    appear (disagg pays an injection tick) but never WHICH tokens."""
+    model, params = dense
+    wl = make_workload(kind="poisson", vocab=model.cfg.vocab, **WL_KW)
+    mono = _run(model, params, wl)
+    dis = _run(model, params, wl, engine_cls=DisaggServeEngine)
+    assert mono["outputs"] == dis["outputs"]
+    assert dis["report"]["n_errors"] == 0
+    assert dis["report"]["tokens"] == mono["report"]["tokens"]
