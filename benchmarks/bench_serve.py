@@ -33,6 +33,16 @@ Seven comparisons on the smoke models:
    tokens-per-verify-window times the verify/decode cost ratio, so it
    rises with acceptance.
 
+8. **Expert-parallel MoE decode + load-aware placement** (subprocess with
+   8 forced host devices): the same scaled MoE config decoded by the
+   serial engine vs the ep=2 ("expert", "model") engine (all-to-all
+   dispatch/combine), with and without in-band re-placement.  Plan quality
+   rides along as deterministic integer math: the max/mean rank-imbalance
+   reduction ``plan_placement`` achieves on the engine's own measured
+   routing window and on two synthetic hot-expert windows (adjacent-hot
+   and dominant-with-zeros, the replication/eviction regime) — seeded, so
+   the perf gate can hold the gains to a tight tolerance.
+
 ``run`` returns a machine-readable payload that ``benchmarks.run`` writes
 to ``results/BENCH_serve.json`` so the perf trajectory is tracked across
 PRs.
@@ -103,14 +113,97 @@ print(json.dumps({"tp1": tp1, "tp8": tp8, "speedup_x": speedup,
 """
 
 
-def _tp_scaling() -> dict:
+def _forced_devices(script: str, what: str) -> dict:
     env = dict(os.environ)
     env.pop("XLA_FLAGS", None)
-    out = subprocess.run([sys.executable, "-c", _TP_SCRIPT],
+    out = subprocess.run([sys.executable, "-c", script],
                          capture_output=True, text=True, timeout=900,
                          env=env)
-    assert out.returncode == 0, f"tp bench failed:\n{out.stderr[-2000:]}"
+    assert out.returncode == 0, f"{what} bench failed:\n{out.stderr[-2000:]}"
     return json.loads(out.stdout.strip().splitlines()[-1])
+
+
+def _tp_scaling() -> dict:
+    return _forced_devices(_TP_SCRIPT, "tp")
+
+
+# expert-parallel decode + load-aware placement, same scaled MoE config and
+# forced-device protocol as the tp bench above
+_EP_SCRIPT = """
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import warnings; warnings.filterwarnings("ignore")
+import json, time
+import jax, numpy as np
+from repro.configs import smoke_config
+from repro.models.api import build_model
+from repro.serve import ServeEngine, identity_plan, imbalance, plan_placement
+
+cfg = smoke_config("qwen3-moe-235b-a22b").replace(
+    remat="none", d_model=256, n_heads=8, n_kv_heads=8, head_dim=32,
+    expert_d_ff=1024)
+model = build_model(cfg)
+params = model.init(jax.random.PRNGKey(0))
+
+def decode_tput(mesh, **kw):
+    eng = ServeEngine(model, params, max_slots=8, max_len=128, paged=True,
+                      page_size=16, prefill_chunk=64, mesh=mesh, **kw)
+    rng = np.random.default_rng(0)
+    eng.submit(rng.integers(0, cfg.vocab, 8), max_new_tokens=2)
+    eng.run_until_drained()                    # warm: compile both paths
+    eng.finished.clear()
+    warm_ticks = eng.stats["ticks"]
+    for _ in range(8):
+        eng.submit(rng.integers(0, cfg.vocab, 8), max_new_tokens=32)
+    t0 = time.perf_counter()
+    done = eng.run_until_drained()
+    dt = time.perf_counter() - t0
+    toks = sum(len(r.output) for r in done)
+    s = dict(eng.stats)
+    eng.close()
+    return {"tok_per_s": toks / dt, "tokens": toks,
+            "ticks": s["ticks"] - warm_ticks,
+            "moe_tokens_routed": s["moe_tokens_routed"],
+            "moe_dropped_tokens": s["moe_dropped_tokens"],
+            "expert_tokens": s["expert_tokens"],
+            "expert_imbalance": s["expert_imbalance"],
+            "placement_updates": s["placement_updates"]}
+
+serial = decode_tput(None)
+mesh = jax.make_mesh((2, 1), ("expert", "model"))
+ep2 = decode_tput(mesh)
+ep2_placed = decode_tput(mesh, placement_interval=4)
+
+def plan_gain(window, ep):
+    # deterministic integer math: identity layout vs plan_placement on one
+    # measured routing window, scored as max/mean per-rank token load
+    window = np.asarray(window)
+    plan = plan_placement(window, ep)
+    before = imbalance(identity_plan(window.size, ep).rank_loads(window))
+    after = imbalance(plan.rank_loads(window))
+    return {"identity_imbalance": before, "planned_imbalance": after,
+            "imbalance_gain": before / after,
+            "replicated_experts": int((plan.split_q > 0).sum()),
+            "evicted_experts": int((plan.slot_a < 0).sum())}
+
+out = {"serial": serial, "ep2": ep2, "ep2_placed": ep2_placed,
+       "ep2_vs_serial_x": ep2["tok_per_s"] / serial["tok_per_s"],
+       "placement_overhead_x": ep2["tok_per_s"] / ep2_placed["tok_per_s"],
+       # streams must be mesh- and placement-invariant, so routed/dropped
+       # totals agree across all three engines; record the check's verdict
+       "telemetry_invariant": (
+           serial["expert_tokens"] == ep2["expert_tokens"]
+           == ep2_placed["expert_tokens"]),
+       "measured": plan_gain(ep2["expert_tokens"], 2),
+       "skewed": plan_gain([1000, 900, 10, 10, 10, 10, 10, 10], 2),
+       "dominant": plan_gain([5000, 0, 10, 10, 0, 10, 10, 10], 2),
+       "host_cores": os.cpu_count()}
+print(json.dumps(out))
+"""
+
+
+def _moe_ep_bench() -> dict:
+    return _forced_devices(_EP_SCRIPT, "moe ep")
 
 
 def _drain_tracking_peak(eng):
@@ -519,6 +612,16 @@ def run(csv_rows: list):
         f"tp1={tp['tp1']['tok_per_s']:.1f};"
         f"speedup={tp['speedup_x']:.2f}x_on_{os.cpu_count()}cores")
 
+    ep = _moe_ep_bench()
+    csv_rows.append(
+        f"serve_moe_ep2_decode,{1e6/ep['ep2']['tok_per_s']:.0f},"
+        f"tok_per_s={ep['ep2']['tok_per_s']:.1f};"
+        f"serial={ep['serial']['tok_per_s']:.1f};"
+        f"placed={ep['ep2_placed']['tok_per_s']:.1f};"
+        f"skew_gain={ep['skewed']['imbalance_gain']:.2f}x;"
+        f"dominant_gain={ep['dominant']['imbalance_gain']:.2f}x;"
+        f"dropped={ep['ep2']['moe_dropped_tokens']}")
+
     return {
         "sequential": seq, "continuous4": cb,
         "dense_equal_budget": dense, "paged_equal_budget": paged,
@@ -540,4 +643,5 @@ def run(csv_rows: list):
         "traffic": traffic,
         "paged_kernel": pk,
         "tp_scaling": tp,
+        "moe_ep": ep,
     }

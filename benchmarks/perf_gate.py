@@ -47,6 +47,13 @@ METRICS = [
     ("traffic.poisson_high.goodput.tok_per_s", "higher"),
     ("traffic.bursty_high.ttft.p99", "lower"),
     ("traffic.bursty_high.goodput.tok_per_s", "higher"),
+    # expert-parallel MoE decode: ep=2 tok/s must not cliff, and the
+    # placement gains on the synthetic skewed windows are deterministic
+    # integer math (seeded), so a drop means the rebalancer itself changed
+    ("moe_ep.ep2.tok_per_s", "higher"),
+    ("moe_ep.ep2_placed.tok_per_s", "higher"),
+    ("moe_ep.skewed.imbalance_gain", "higher"),
+    ("moe_ep.dominant.imbalance_gain", "higher"),
 ]
 
 

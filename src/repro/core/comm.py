@@ -65,6 +65,13 @@ class Comm:
         return jax.lax.pmin(x, self.axis)
 
     def all_to_all(self, x, *, split_axis: int, concat_axis: int, tiled: bool = True):
+        """Paper's ``redistribute_work`` exchange as one collective: rank r
+        keeps chunk r of ``split_axis`` and receives everyone else's,
+        stacked along ``concat_axis``.  This is the MoE expert-parallel
+        dispatch/combine primitive (``moe_apply_expert_parallel``): the
+        (E, C, d) capacity buffer splits over experts going out and over
+        source ranks coming back.  SerialComm's twin is the identity, so
+        the same block runs unchanged on one device."""
         return jax.lax.all_to_all(x, self.axis, split_axis=split_axis,
                                   concat_axis=concat_axis, tiled=tiled)
 

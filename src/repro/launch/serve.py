@@ -5,12 +5,15 @@
 
 Tensor-parallel serving over a device mesh (shards attention heads, MLP ff,
 experts, the vocab and the paged-KV head axis over ``tp`` devices; the
-scheduler and page tables stay on the host).  On CPU, prefix with
+scheduler and page tables stay on the host).  MoE families can ALSO
+partition whole experts over an ``ep``-sized "expert" axis (all-to-all
+dispatch/combine, per-expert token telemetry, optional load-aware
+re-placement with ``--expert-placement N``).  On CPU, prefix with
 ``XLA_FLAGS=--xla_force_host_platform_device_count=8`` to fake the devices:
 
     XLA_FLAGS=--xla_force_host_platform_device_count=8 \
     PYTHONPATH=src python -m repro.launch.serve --arch qwen3-moe-235b-a22b \
-        --smoke --mesh tp=8 --requests 8 --max-new 16
+        --smoke --mesh tp=2,ep=4 --requests 8 --max-new 16
 """
 from __future__ import annotations
 
@@ -28,19 +31,32 @@ from repro.serve import DisaggServeEngine, ServeEngine, make_workload, \
 
 
 def parse_mesh(spec: str | None):
-    """``"tp=N"`` -> a 1-D ("model",) mesh of N devices (None -> no mesh)."""
+    """``"tp=N[,ep=M]"`` -> serving mesh (None -> no mesh).
+
+    ``tp=N`` alone keeps the legacy 1-D ("model",) mesh; any spec naming
+    ``ep`` builds the 2-D ("expert", "model") mesh of ep x tp devices
+    (``ep=M`` alone means tp=1) — MoE experts partition over "expert",
+    everything Megatron-ish over "model"."""
     if not spec:
         return None
-    key, _, val = spec.partition("=")
-    if key != "tp" or not val.isdigit() or int(val) < 1:
-        raise SystemExit(f"--mesh expects tp=N (N >= 1), got {spec!r}")
-    tp = int(val)
+    vals: dict[str, int] = {}
+    for part in spec.split(","):
+        key, _, val = part.partition("=")
+        if key not in ("tp", "ep") or key in vals \
+                or not val.isdigit() or int(val) < 1:
+            raise SystemExit(
+                f"--mesh expects tp=N[,ep=M] (each >= 1), got {spec!r}")
+        vals[key] = int(val)
+    tp, ep = vals.get("tp", 1), vals.get("ep")
+    need = tp * (ep or 1)
     n = len(jax.devices())
-    if tp > n:
-        raise SystemExit(f"--mesh tp={tp} but only {n} devices visible "
-                         "(set XLA_FLAGS=--xla_force_host_platform_"
+    if need > n:
+        raise SystemExit(f"--mesh {spec} needs {need} devices but only {n} "
+                         "visible (set XLA_FLAGS=--xla_force_host_platform_"
                          "device_count=N on CPU)")
-    return jax.make_mesh((tp,), ("model",))
+    if ep is None:
+        return jax.make_mesh((tp,), ("model",))
+    return jax.make_mesh((ep, tp), ("expert", "model"))
 
 
 def run_traffic_demo(eng, cfg, args) -> None:
@@ -114,9 +130,15 @@ def main():
                     "prompt-lookup, 'self-2' = first-2-layer self-draft)")
     ap.add_argument("--spec-k", type=int, default=4,
                     help="max draft tokens per verify window")
-    ap.add_argument("--mesh", default=None, metavar="tp=N",
+    ap.add_argument("--mesh", default=None, metavar="tp=N[,ep=M]",
                     help="serve tensor-parallel over an N-device "
-                    "('model',) mesh")
+                    "('model',) mesh; add ep=M for a 2-D "
+                    "('expert', 'model') mesh partitioning whole MoE "
+                    "experts over M devices (all-to-all dispatch/combine)")
+    ap.add_argument("--expert-placement", type=int, default=0, metavar="N",
+                    help="re-place experts every N ticks from measured "
+                    "per-expert token counts (load_balance-driven, "
+                    "hot-expert replication; 0 = off)")
     ap.add_argument("--pallas-attention", action="store_true",
                     help="route paged decode/verify/prefill attention "
                     "through the fused multi-query Pallas kernel "
@@ -174,7 +196,8 @@ def main():
               use_pallas_attention=args.pallas_attention,
               kv_quant=None if args.kv_quant == "off" else args.kv_quant,
               weight_quant=None if args.weight_quant == "off"
-              else args.weight_quant)
+              else args.weight_quant,
+              placement_interval=args.expert_placement)
     if args.disagg:
         eng = DisaggServeEngine(model, params, executor=args.executor, **kw)
     else:
@@ -219,7 +242,7 @@ def main():
     if eng.drafter is not None:
         mode += f" spec={args.spec_decode}(k={eng.spec_k})"
     if mesh is not None:
-        mode += f" tp={eng.tp}"
+        mode += f" tp={eng.tp}" + (f" ep={eng.ep}" if eng.ep > 1 else "")
     print(f"[serve] {len(done)} requests, {toks} tokens in {dt:.2f}s "
           f"({toks/dt:.1f} tok/s); ticks={eng.stats['ticks']} "
           f"chunks={eng.stats['chunk_prefills']} "
@@ -235,6 +258,14 @@ def main():
             print(f"[serve] spec decode: proposed={s['draft_proposed']} "
                   f"accepted={s['draft_accepted']} "
                   f"acceptance_rate={s['acceptance_rate']:.2f}")
+        if cfg.n_experts:
+            # dropped = capacity-factor + placement-eviction losses, which
+            # are silent in the token streams (the drop rule zeroes the
+            # expert's contribution) — surface them here
+            print(f"[serve] moe: routed={s['moe_tokens_routed']} "
+                  f"dropped={s['moe_dropped_tokens']} "
+                  f"rank_imbalance={s['expert_imbalance']:.2f} "
+                  f"placements={s['placement_updates']}")
 
 
 if __name__ == "__main__":

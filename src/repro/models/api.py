@@ -163,19 +163,22 @@ class Model:
 
     def paged_prefill_chunk(self, params, storage, table_row, pages_chunk,
                             start, tokens, rules, *,
-                            use_pallas: bool = False, comm=None, quant=None):
+                            use_pallas: bool = False, comm=None, quant=None,
+                            ep_comm=None, placement=None):
         """Prefill tokens (1, C) at positions [start, start+C) into pages."""
         raise NotImplementedError(f"{self.cfg.family} has no paged KV cache")
 
     def paged_decode_step(self, params, storage, tables, lengths, tokens,
                           write_pages, write_offs, rules, *,
-                          use_pallas: bool = False, comm=None, quant=None):
-        """tokens (B,1) -> (new_storage, logits (B,1,V)) through the pool."""
+                          use_pallas: bool = False, comm=None, quant=None,
+                          ep_comm=None, placement=None):
+        """tokens (B,1) -> (new_storage, logits (B,1,V), moe telemetry)."""
         raise NotImplementedError(f"{self.cfg.family} has no paged KV cache")
 
     def paged_verify(self, params, storage, tables, lengths, tokens,
                      write_pages, write_offs, rules, *,
-                     use_pallas: bool = False, comm=None, quant=None):
+                     use_pallas: bool = False, comm=None, quant=None,
+                     ep_comm=None, placement=None):
         """Speculative-decode verify: score a (B, C) window of candidate
         tokens per slot in one batched forward (position 0 = the next
         input, 1..C-1 = drafts).  ``write_pages``/``write_offs`` are
@@ -187,12 +190,14 @@ class Model:
 
     # -- serving-mesh sharding rules -----------------------------------------
 
-    def serve_param_specs(self):
-        """Pytree of mesh ``PartitionSpec`` (1-D ("model",) mesh) for the
-        params during tensor-parallel PAGED serving — part of the paged
-        protocol, like :meth:`paged_leaf_specs`.  Families without a paged
-        KV cache never need this: the engine's slot-parallel fallback
-        replicates params directly from the array tree."""
+    def serve_param_specs(self, ep: int = 1):
+        """Pytree of mesh ``PartitionSpec`` for the params during
+        tensor-parallel PAGED serving — part of the paged protocol, like
+        :meth:`paged_leaf_specs`.  ``ep > 1`` targets a 2-D ("expert",
+        "model") mesh: expert-stacked weights shard over BOTH axes (expert
+        major).  Families without a paged KV cache never need this: the
+        engine's slot-parallel fallback replicates params directly from the
+        array tree."""
         raise NotImplementedError(
             f"{self.cfg.family} has no TP serving specs (engine "
             "slot-parallel mode replicates params instead)")
@@ -223,24 +228,45 @@ class Model:
             leaf, self.paged_leaf_specs(quant),
             is_leaf=lambda x: isinstance(x, PG.PagedLeafSpec))
 
-    def validate_serve_tp(self, tp: int) -> None:
-        """Raise with every dimension that does not divide by ``tp``."""
-        if tp <= 1:
-            return
+    def validate_serve_mesh(self, tp: int = 1, ep: int = 1) -> None:
+        """Raise with EVERY indivisible dimension named for a (tp, ep)
+        serving mesh.  ``tp`` shards heads / ff / vocab (and, combined with
+        ``ep``, the expert stack); ``ep`` partitions whole experts, so a
+        dense family with ep > 1 is refused outright."""
         cfg = self.cfg
+        if ep > 1 and not cfg.n_experts:
+            raise ValueError(
+                f"{cfg.name} ({cfg.family}) is a dense family with no "
+                f"experts: expert-parallel ep={ep} cannot apply — drop the "
+                "expert axis (--mesh tp=N)")
+        if tp <= 1 and ep <= 1:
+            return
         bad = []
         if self.supports_paged_decode():
-            dims = {"padded_q_heads": cfg.padded_q_heads,
-                    "padded_kv_heads": cfg.padded_kv_heads,
-                    "padded_vocab": cfg.padded_vocab}
-            if cfg.n_experts:
-                dims["n_experts"] = cfg.n_experts
-            if not cfg.n_experts or cfg.dense_residual:
-                dims["d_ff"] = cfg.d_ff
-            bad = [f"{k}={v}" for k, v in dims.items() if v % tp]
+            if tp > 1:
+                dims = {"padded_q_heads": cfg.padded_q_heads,
+                        "padded_kv_heads": cfg.padded_kv_heads,
+                        "padded_vocab": cfg.padded_vocab}
+                if not cfg.n_experts or cfg.dense_residual:
+                    dims["d_ff"] = cfg.d_ff
+                bad += [f"{k}={v} (tp={tp})" for k, v in dims.items()
+                        if v % tp]
+            if cfg.n_experts and cfg.n_experts % (ep * tp):
+                # experts shard over BOTH axes (tp slices expert rows even
+                # on a 1-D mesh), so the product must divide the stack
+                shards = (f"ep*tp={ep * tp}" if ep > 1 else f"tp={tp}")
+                bad.append(f"n_experts={cfg.n_experts} ({shards})")
+        elif ep > 1:
+            bad.append(f"family={cfg.family} has no paged expert path "
+                       f"(ep={ep})")
         if bad:
             raise ValueError(
-                f"{cfg.name}: tp={tp} does not divide " + ", ".join(bad))
+                f"{cfg.name}: serving mesh (tp={tp}, ep={ep}) does not "
+                "divide " + ", ".join(bad))
+
+    def validate_serve_tp(self, tp: int) -> None:
+        """Back-compat alias for :meth:`validate_serve_mesh` (1-D mesh)."""
+        self.validate_serve_mesh(tp=tp)
 
     def lm_head(self, params, hidden, rules):
         return T.lm_logits(params, hidden, self.cfg, rules)
@@ -314,34 +340,46 @@ class DecoderLM(Model):
 
     def paged_prefill_chunk(self, params, storage, table_row, pages_chunk,
                             start, tokens, rules, *,
-                            use_pallas: bool = False, comm=None, quant=None):
+                            use_pallas: bool = False, comm=None, quant=None,
+                            ep_comm=None, placement=None):
         return T.paged_prefill_chunk(params, self.cfg, rules, storage,
                                      table_row, pages_chunk, start, tokens,
                                      use_pallas=use_pallas, comm=comm,
-                                     quant=quant)
+                                     quant=quant, ep_comm=ep_comm,
+                                     placement=placement)
 
     def paged_decode_step(self, params, storage, tables, lengths, tokens,
                           write_pages, write_offs, rules, *,
-                          use_pallas: bool = False, comm=None, quant=None):
+                          use_pallas: bool = False, comm=None, quant=None,
+                          ep_comm=None, placement=None):
         return T.paged_decode_step(params, self.cfg, rules, storage, tables,
                                    lengths, tokens, write_pages, write_offs,
                                    use_pallas=use_pallas, comm=comm,
-                                   quant=quant)
+                                   quant=quant, ep_comm=ep_comm,
+                                   placement=placement)
 
     def paged_verify(self, params, storage, tables, lengths, tokens,
                      write_pages, write_offs, rules, *,
-                     use_pallas: bool = False, comm=None, quant=None):
+                     use_pallas: bool = False, comm=None, quant=None,
+                     ep_comm=None, placement=None):
         return T.paged_verify_chunk(params, self.cfg, rules, storage, tables,
                                     lengths, tokens, write_pages, write_offs,
                                     use_pallas=use_pallas, comm=comm,
-                                    quant=quant)
+                                    quant=quant, ep_comm=ep_comm,
+                                    placement=placement)
 
-    def serve_param_specs(self):
-        """Megatron TP over the 1-D serving mesh: attention heads, MLP ff,
+    def serve_param_specs(self, ep: int = 1):
+        """Megatron TP over the serving mesh: attention heads, MLP ff,
         experts and the unembed vocab shard over "model"; norms, router and
-        the embedding table (gathered row lookup) stay replicated."""
+        the embedding table (gathered row lookup) stay replicated.  With
+        ``ep > 1`` the mesh is 2-D ("expert", "model") and the expert stack
+        shards over both axes, expert-major — each rank holds
+        E/(ep*tp) whole experts' weight rows."""
+        table = dict(SERVE_TP_AXES)
+        if ep > 1:
+            table["experts"] = ("expert", "model")
         specs = jax.tree_util.tree_map(
-            lambda p: _map_param_spec(p.spec, SERVE_TP_AXES),
+            lambda p: _map_param_spec(p.spec, table),
             self.param_defs(), is_leaf=_is_param)
         specs["embed"]["table"] = P(None, None)
         return specs

@@ -23,12 +23,19 @@ from functools import partial
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.sharding import PartitionSpec as P
 
 from repro.core.comm import Comm, SerialComm
 from repro.core.comm import shard_map as _comm_shard_map
 from repro.mesh.axes import AxisRules, logical_to_mesh
 from repro.models.module import Param
+
+# placement split fractions are q8 fixed-point: a dispatch map entry of
+# ``split_q`` sends the first ``split_q * C // PLACE_Q`` capacity positions
+# of an expert to its first physical slot and the rest to its second —
+# integer math, so the split is deterministic at every capacity C
+PLACE_Q = 256
 
 
 def moe_def(cfg) -> dict:
@@ -44,13 +51,32 @@ def moe_def(cfg) -> dict:
 def capacity(tokens_local: int, top_k: int, n_experts: int, cf: float) -> int:
     """Per-shard, per-expert slot budget — ``find_optimal_workload`` with
     uniform timings becomes the balanced ±1 split scaled by the capacity
-    factor."""
+    factor.  ``cf < 1`` deliberately under-provisions (tokens beyond the
+    budget are dropped and counted); ``top_k > n_experts`` can never route
+    and is refused outright."""
+    if top_k > n_experts:
+        raise ValueError(
+            f"top_k={top_k} > n_experts={n_experts}: every token would need "
+            "more distinct experts than exist")
     c = math.ceil(tokens_local * top_k / n_experts * cf)
     return max(4, ((c + 3) // 4) * 4)
 
 
+def identity_placement(n_experts: int) -> np.ndarray:
+    """The (3, E) int32 dispatch map that reproduces the unplaced layout
+    (expert e in physical slot e, no replicas): rows are [slot_a, slot_b,
+    split_q] — see ``placement`` in :func:`_dispatch_compute_combine`."""
+    e = np.arange(n_experts, dtype=np.int32)
+    return np.stack([e, e, np.zeros(n_experts, np.int32)])
+
+
+def empty_expert_stats(n_experts: int) -> dict:
+    z = jnp.zeros((n_experts,), jnp.int32)
+    return {"tokens": z, "dropped": z}
+
+
 def _dispatch_compute_combine(x2d, wr, wg, wu, wd, cfg, comm, tp_comm=None,
-                              shard_comm=None):
+                              shard_comm=None, placement=None):
     """Core routed computation on one shard.  x2d: (T_l, d).
 
     ``tp_comm``: expert-TP mode — the expert ff dim is sharded over this
@@ -62,7 +88,21 @@ def _dispatch_compute_combine(x2d, wr, wg, wu, wd, cfg, comm, tp_comm=None,
     GEMMs are sharded: each rank computes its expert slice of the
     (replicated) dispatch buffer and one ``all_gather`` restores the full
     buffer, so each per-expert contraction happens on exactly one rank and
-    the result is bitwise equal to the serial dispatch."""
+    the result is bitwise equal to the serial dispatch.
+
+    ``placement``: (3, E) int32 device array [slot_a, slot_b, split_q] from
+    ``serve.placement`` — logical expert e's first ``split_q[e] * C //
+    PLACE_Q`` capacity positions go to physical slot ``slot_a[e]``, the rest
+    to ``slot_b[e]``; a slot of -1 means the expert holds no weights (its
+    tokens are dropped and counted).  The weight leaves must already be
+    permuted to match (``placement.apply_placement``).  ``None`` and the
+    identity map produce the exact integer slot indices of the unplaced
+    path, so streams are bitwise unchanged.
+
+    Returns ``(y, aux, stats)`` with int32 per-logical-expert telemetry
+    ``stats = {"tokens": routed assignments (top_k multiplicity), "dropped":
+    assignments lost to capacity or eviction}`` — local to this shard's
+    tokens (replicated = global in serving)."""
     T_l, d = x2d.shape
     E, k = cfg.n_experts, cfg.top_k
     ep = comm.size()
@@ -94,10 +134,24 @@ def _dispatch_compute_combine(x2d, wr, wg, wu, wd, cfg, comm, tp_comm=None,
     oh = jax.nn.one_hot(sorted_e, E, dtype=jnp.int32)
     pos_in_e = (jnp.cumsum(oh, axis=0) * oh).sum(-1) - 1             # rank in expert
     keep = pos_in_e < C
-    slot = jnp.where(keep, sorted_e * C + pos_in_e, E * C)           # drop -> OOB
+    if placement is None:
+        slot_e, pos = sorted_e, pos_in_e
+    else:
+        slot_a, slot_b, split_q = placement[0], placement[1], placement[2]
+        sp = (split_q[sorted_e] * C) // PLACE_Q          # per-assignment split
+        use_b = pos_in_e >= sp
+        slot_e = jnp.where(use_b, slot_b[sorted_e], slot_a[sorted_e])
+        pos = jnp.where(use_b, pos_in_e - sp, pos_in_e)
+        keep = keep & (slot_e >= 0)                      # evicted -> dropped
+    slot = jnp.where(keep, slot_e * C + pos, E * C)      # drop -> OOB
     buf = jnp.zeros((E * C + 1, d), x2d.dtype).at[slot].set(
         x2d[sorted_tok], mode="drop")
     buf = buf[:-1].reshape(E, C, d)
+
+    # --- telemetry: per-logical-expert routed / dropped assignments ---------
+    routed = jnp.zeros((E,), jnp.int32).at[flat_e].add(1)
+    kept = jnp.zeros((E,), jnp.int32).at[sorted_e].add(keep.astype(jnp.int32))
+    stats = {"tokens": routed, "dropped": routed - kept}
 
     # --- EP exchange: redistribute_work on the torus ------------------------
     buf = comm.all_to_all(buf, split_axis=0, concat_axis=1)          # (E_loc, C*ep, d)
@@ -127,10 +181,40 @@ def _dispatch_compute_combine(x2d, wr, wg, wu, wd, cfg, comm, tp_comm=None,
     w_sorted = top_p.reshape(-1)[order]
     contrib = gathered * w_sorted[:, None].astype(gathered.dtype)
     y = jnp.zeros((T_l, d), x2d.dtype).at[sorted_tok].add(contrib)
-    return y, aux
+    return y, aux, stats
 
 
-def moe_apply_serve_tp(params, x, cfg, shard_comm: Comm):
+def moe_apply_expert_parallel(params, x, cfg, ep_comm: Comm,
+                              shard_comm: Comm | None = None, placement=None):
+    """MoE block with experts PARTITIONED over ``ep_comm``'s mesh axis.
+
+    Serving-mode expert parallelism: activations (and therefore routing,
+    the capacity drop rule and the combine) are replicated over every mesh
+    axis; the (E, C, d) dispatch buffer is exchanged through
+    ``ep_comm.all_to_all`` so each rank holds the capacity rows of its own
+    E/ep experts, runs the expert GEMMs against its local expert weights,
+    and the reverse ``all_to_all`` hands every rank back the full combined
+    buffer.  Because the buffer is replicated before the exchange, each
+    per-expert contraction happens with bit-identical inputs and weights to
+    the serial path, on exactly one rank — so greedy token streams are
+    bitwise equal to ``SerialComm`` / tp=1.
+
+    Composes with Megatron serving TP as a 2-D ``(expert, model)`` mesh:
+    pass the model-axis ``Comm`` as ``shard_comm`` and the per-rank expert
+    weights arrive (E/(ep*tp), ...).  ``SerialComm()`` as ``ep_comm``
+    recovers the single-device / pure-TP path.
+
+    Returns ``(y, aux, stats)`` — see :func:`_dispatch_compute_combine` for
+    ``placement`` and the telemetry dict.
+    """
+    y2d, aux, stats = _dispatch_compute_combine(
+        x.reshape(-1, x.shape[-1]), params["router"], params["gate"],
+        params["up"], params["down"], cfg, ep_comm,
+        shard_comm=shard_comm, placement=placement)
+    return y2d.reshape(x.shape), aux, stats
+
+
+def moe_apply_serve_tp(params, x, cfg, shard_comm: Comm, placement=None):
     """MoE block INSIDE a serving-TP ``shard_map`` body.
 
     Activations are replicated over the ``model`` axis and the expert
@@ -139,13 +223,11 @@ def moe_apply_serve_tp(params, x, cfg, shard_comm: Comm):
     replicate the serial ``moe_apply`` math exactly; only the expert GEMMs
     run sharded (see ``shard_comm`` in :func:`_dispatch_compute_combine`),
     which keeps greedy token streams bit-identical to the tp=1 engine while
-    cutting per-rank expert FLOPs by tp.
+    cutting per-rank expert FLOPs by tp.  Returns ``(y, aux, stats)``.
     """
-    y2d, aux = _dispatch_compute_combine(
-        x.reshape(-1, x.shape[-1]), params["router"], params["gate"],
-        params["up"], params["down"], cfg, SerialComm(),
-        shard_comm=shard_comm)
-    return y2d.reshape(x.shape), aux
+    return moe_apply_expert_parallel(params, x, cfg, SerialComm(),
+                                     shard_comm=shard_comm,
+                                     placement=placement)
 
 
 def moe_apply(params, x, cfg, rules: AxisRules | None):
@@ -154,7 +236,7 @@ def moe_apply(params, x, cfg, rules: AxisRules | None):
                       params["down"])
 
     if rules is None or rules.mesh is None:
-        y2d, aux = _dispatch_compute_combine(
+        y2d, aux, _ = _dispatch_compute_combine(
             x.reshape(-1, x.shape[-1]), wr, wg, wu, wd, cfg, SerialComm())
         return y2d.reshape(x.shape), aux
 
@@ -191,7 +273,7 @@ def moe_apply(params, x, cfg, rules: AxisRules | None):
             wg_l = _fsdp_gather(fs, wg_l, 1)          # (E_loc, d, eff)
             wu_l = _fsdp_gather(fs, wu_l, 1)
             wd_l = _fsdp_gather(fs, wd_l, 2)          # (E_loc, eff, d)
-            y, aux = _dispatch_compute_combine(
+            y, aux, _ = _dispatch_compute_combine(
                 x2d, wr_l, wg_l, wu_l, wd_l, cfg, comm_ep)
         elif tp_axes is not None:
             # DECODE mode (weight-stationary expert TP): the token batch is
@@ -201,11 +283,11 @@ def moe_apply(params, x, cfg, rules: AxisRules | None):
             tpc = Comm(tp_axes)
             T_l = x2d.shape[0]
             x_all = tpc.all_gather(x2d, tiled=True)   # (T_l * n_tp, d)
-            y_all, aux = _dispatch_compute_combine(
+            y_all, aux, _ = _dispatch_compute_combine(
                 x_all, wr_l, wg_l, wu_l, wd_l, cfg, comm_ep, tp_comm=tpc)
             y = jax.lax.dynamic_slice_in_dim(y_all, tpc.rank() * T_l, T_l, 0)
         else:
-            y, aux = _dispatch_compute_combine(
+            y, aux, _ = _dispatch_compute_combine(
                 x2d, wr_l, wg_l, wu_l, wd_l, cfg, comm_ep)
         aux = Comm(mesh.axis_names).all_reduce_sum(aux) / mesh.size
         return y.reshape(B_l, S_l, d), aux

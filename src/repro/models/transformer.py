@@ -354,7 +354,8 @@ def _write_kv(kv, k, v, quant, scatter):
 
 
 def _paged_block(p, x, cfg, rules, *, positions, kv, tables,
-                 q_offset, write, use_pallas=False, comm=_SERIAL):
+                 q_offset, write, use_pallas=False, comm=_SERIAL,
+                 ep_comm=None, placement=None):
     """One decoder block against paged KV storage (per-layer page slices).
 
     ``kv`` is this layer's slice of the pool storage tree — ``{"k", "v"}``
@@ -375,6 +376,14 @@ def _paged_block(p, x, cfg, rules, *, positions, kv, tables,
     local heads, and reassembles the residual stream with one ``psum`` after
     each of the two projections back to d_model.  The serial transport makes
     both psums the identity, so this is one code path for both worlds.
+
+    ``ep_comm`` is the expert-parallel transport: expert weights arrive
+    partitioned E/ep per rank over that axis and the MoE block exchanges
+    its dispatch buffer through ``all_to_all`` (see
+    :func:`repro.models.moe.moe_apply_expert_parallel`); ``placement`` is
+    the (3, E) expert→slot dispatch map.  Returns ``(x, kv, moe_stats)``
+    where ``moe_stats`` is the per-expert token/drop telemetry (zeros for
+    dense blocks).
     """
     h = L.rmsnorm(p["ln1"], x, use_pallas=cfg.use_pallas)
     q, k, v = A.qkv_project(p["attn"], h, cfg, positions, rules=rules)
@@ -386,22 +395,28 @@ def _paged_block(p, x, cfg, rules, *, positions, kv, tables,
     x = x + comm.all_reduce_sum(A.out_project(p["attn"], o))
 
     h = L.rmsnorm(p["ln2"], x, use_pallas=cfg.use_pallas)
+    moe_stats = M.empty_expert_stats(cfg.n_experts)
     if cfg.n_experts:
-        if comm.axis is not None:
-            # expert-sharded, replicated activations; output already combined
-            y, _ = M.moe_apply_serve_tp(p["moe"], h, cfg, comm)
-        else:
+        if comm.axis is None and ep_comm is None and rules is not None:
+            # training-style rules path: moe_apply owns its own shard_map
             y, _ = M.moe_apply(p["moe"], h, cfg, rules)
+        else:
+            # serving: expert-sharded (ep axis) and/or GEMM-sharded (tp
+            # axis), replicated activations; output already combined
+            y, _, moe_stats = M.moe_apply_expert_parallel(
+                p["moe"], h, cfg, _SERIAL if ep_comm is None else ep_comm,
+                shard_comm=comm if comm.axis is not None else None,
+                placement=placement)
         if cfg.dense_residual:
             y = y + comm.all_reduce_sum(L.mlp(p["mlp"], h))
     else:
         y = comm.all_reduce_sum(L.mlp(p["mlp"], h))
-    return x + y, kv
+    return x + y, kv, moe_stats
 
 
 def paged_prefill_chunk(params, cfg, rules, storage, table_row, pages_chunk,
                         start, tokens, use_pallas=False, comm=None,
-                        quant=None):
+                        quant=None, ep_comm=None, placement=None):
     """Prefill one page-aligned prompt chunk into paged storage.
 
     storage: {"k","v"} of (L, N, page_size, Hkv, D) — plus per-row
@@ -410,7 +425,9 @@ def paged_prefill_chunk(params, cfg, rules, storage, table_row, pages_chunk,
     (C // page_size,) pages covering positions [start, start + C);
     tokens: (1, C) (right-padded — the validity length masks pad garbage,
     exactly like bucketed dense prefill).  Returns (storage, hidden
-    (1, C, d)).  Chunks attend causally to every previously prefilled
+    (1, C, d), telemetry) where telemetry is the layer-summed per-expert
+    ``{"expert_tokens", "expert_dropped"}`` int32 counts ((0,)-shaped for
+    dense models).  Chunks attend causally to every previously prefilled
     page, which is what lets long prompts prefill incrementally between
     decode ticks.  ``use_pallas`` routes attention through the fused
     multi-query kernel (W = C window, per-row causal offsets) instead of
@@ -439,29 +456,34 @@ def paged_prefill_chunk(params, cfg, rules, storage, table_row, pages_chunk,
             lambda st, val: PG.scatter_chunk(st, pages_chunk, val,
                                              page_size=page_size))
 
-    def body(x, xs):
+    def body(carry, xs):
+        x, tok, drp = carry
         p, kv = xs
-        x, kv = _paged_block(p, x, cfg, rules, positions=positions,
-                             kv=kv, tables=tables,
-                             q_offset=start, write=write,
-                             use_pallas=use_pallas, comm=comm)
-        return x, kv
+        x, kv, ms = _paged_block(p, x, cfg, rules, positions=positions,
+                                 kv=kv, tables=tables,
+                                 q_offset=start, write=write,
+                                 use_pallas=use_pallas, comm=comm,
+                                 ep_comm=ep_comm, placement=placement)
+        return (x, tok + ms["tokens"], drp + ms["dropped"]), kv
 
-    x, storage = jax.lax.scan(body, x, (params["blocks"], storage))
+    z = jnp.zeros((cfg.n_experts,), jnp.int32)
+    (x, tok, drp), storage = jax.lax.scan(body, (x, z, z),
+                                          (params["blocks"], storage))
     x = L.rmsnorm(params["final_norm"], x, use_pallas=cfg.use_pallas)
-    return storage, x
+    return storage, x, {"expert_tokens": tok, "expert_dropped": drp}
 
 
 def paged_decode_step(params, cfg, rules, storage, tables, lengths, tokens,
                       write_pages, write_offs, use_pallas=False,
-                      comm=None, quant=None):
+                      comm=None, quant=None, ep_comm=None, placement=None):
     """One token for every slot against paged storage.
 
     tokens: (B, 1);  tables: (B, P);  lengths: (B,) tokens already cached
     (= the current token's position);  write_pages/write_offs: (B,) where
     each slot's new K/V lands (dead slots point at the pool's trash page).
-    Returns (storage, logits (B, 1, V)).  ``quant`` quantizes each token's
-    K/V on write (scales land in the storage's scale leaves).
+    Returns (storage, logits (B, 1, V), telemetry) — telemetry as in
+    :func:`paged_prefill_chunk`.  ``quant`` quantizes each token's K/V on
+    write (scales land in the storage's scale leaves).
 
     With a mesh ``comm`` (inside ``shard_map``) the unembed arrives
     vocab-sharded and the local logits are reassembled with a single tiled
@@ -479,24 +501,28 @@ def paged_decode_step(params, cfg, rules, storage, tables, lengths, tokens,
             lambda st, val: PG.scatter_token(st, write_pages, write_offs,
                                              val))
 
-    def body(x, xs):
+    def body(carry, xs):
+        x, tok, drp = carry
         p, kv = xs
-        x, kv = _paged_block(p, x, cfg, rules, positions=positions,
-                             kv=kv, tables=tables,
-                             q_offset=lengths, write=write,
-                             use_pallas=use_pallas, comm=comm)
-        return x, kv
+        x, kv, ms = _paged_block(p, x, cfg, rules, positions=positions,
+                                 kv=kv, tables=tables,
+                                 q_offset=lengths, write=write,
+                                 use_pallas=use_pallas, comm=comm,
+                                 ep_comm=ep_comm, placement=placement)
+        return (x, tok + ms["tokens"], drp + ms["dropped"]), kv
 
-    x, storage = jax.lax.scan(body, x, (params["blocks"], storage))
+    z = jnp.zeros((cfg.n_experts,), jnp.int32)
+    (x, tok, drp), storage = jax.lax.scan(body, (x, z, z),
+                                          (params["blocks"], storage))
     x = L.rmsnorm(params["final_norm"], x, use_pallas=cfg.use_pallas)
     logits = comm.all_gather(lm_logits(params, x, cfg, rules),
                              axis=-1, tiled=True)
-    return storage, logits
+    return storage, logits, {"expert_tokens": tok, "expert_dropped": drp}
 
 
 def paged_verify_chunk(params, cfg, rules, storage, tables, lengths, tokens,
                        write_pages, write_offs, use_pallas=False, comm=None,
-                       quant=None):
+                       quant=None, ep_comm=None, placement=None):
     """Score a per-slot window of candidate tokens in ONE batched forward —
     the speculative-decode verify step.
 
@@ -509,7 +535,8 @@ def paged_verify_chunk(params, cfg, rules, storage, tables, lengths, tokens,
     keeps static shapes while rejected/padded K/V never lands in a live
     page it wasn't meant for.
 
-    Returns (storage, logits (B, C, V)): logits[:, i] is the target
+    Returns (storage, logits (B, C, V), telemetry — as in
+    :func:`paged_prefill_chunk`): logits[:, i] is the target
     distribution for the token FOLLOWING tokens[:, i] — what the
     speculative acceptance rule scores draft i+1 against (and the
     correction/bonus is sampled from).  C == 1 is exactly a decode step.
@@ -539,19 +566,23 @@ def paged_verify_chunk(params, cfg, rules, storage, tables, lengths, tokens,
             lambda st, val: PG.scatter_window(st, write_pages, write_offs,
                                               val))
 
-    def body(x, xs):
+    def body(carry, xs):
+        x, tok, drp = carry
         p, kv = xs
-        x, kv = _paged_block(p, x, cfg, rules, positions=positions,
-                             kv=kv, tables=tables,
-                             q_offset=lengths, write=write,
-                             use_pallas=use_pallas, comm=comm)
-        return x, kv
+        x, kv, ms = _paged_block(p, x, cfg, rules, positions=positions,
+                                 kv=kv, tables=tables,
+                                 q_offset=lengths, write=write,
+                                 use_pallas=use_pallas, comm=comm,
+                                 ep_comm=ep_comm, placement=placement)
+        return (x, tok + ms["tokens"], drp + ms["dropped"]), kv
 
-    x, storage = jax.lax.scan(body, x, (params["blocks"], storage))
+    z = jnp.zeros((cfg.n_experts,), jnp.int32)
+    (x, tok, drp), storage = jax.lax.scan(body, (x, z, z),
+                                          (params["blocks"], storage))
     x = L.rmsnorm(params["final_norm"], x, use_pallas=cfg.use_pallas)
     logits = comm.all_gather(lm_logits(params, x, cfg, rules),
                              axis=-1, tiled=True)
-    return storage, logits
+    return storage, logits, {"expert_tokens": tok, "expert_dropped": drp}
 
 
 def _window_decode_step(params, cfg, rules, cache, tokens, pos):

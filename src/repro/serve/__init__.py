@@ -6,6 +6,8 @@ from repro.serve.sampling import (greedy, sample_temperature, sample_top_k,
 from repro.serve.quant import (Int8KVQuant, dequantize_params,
                                kv_bytes_per_token, make_kv_quant,
                                quantize_leaf_specs, quantize_params)
+from repro.serve.placement import (PlacementPlan, apply_placement,
+                                   identity_plan, imbalance, plan_placement)
 from repro.serve.scheduler import Scheduler
 from repro.serve.spec import (Drafter, NgramDrafter, TruncatedSelfDrafter,
                               make_drafter)

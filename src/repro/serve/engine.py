@@ -110,7 +110,7 @@ class ServeEngine:
                  spec_temperature: float = 0.0,
                  strict: bool = False, use_pallas_attention: bool = False,
                  mesh=None, kv_quant=None, weight_quant=None,
-                 prefill_only: bool = False):
+                 prefill_only: bool = False, placement_interval: int = 0):
         self.model, self.params, self.rules = model, params, rules
         self.max_slots, self.max_len = max_slots, max_len
         self.strict = strict
@@ -223,15 +223,18 @@ class ServeEngine:
         self.params = params
         kvq = self.kv_quant
 
-        # -- device mesh (tensor-parallel serving) ---------------------------
+        # -- device mesh (tensor/expert-parallel serving) --------------------
         # ``mesh=None`` keeps every code path byte-identical to the
         # single-device engine.  With a 1-D ("model",) mesh, paged families
         # run head-sharded TP under shard_map (params + KV pages partitioned
         # per ``model.serve_param_specs()`` / ``paged_storage_specs()``);
-        # dense-state families run slot-parallel (params replicated, decode
-        # batch sharded).  The scheduler and page tables stay host-side and
-        # replicated either way.
+        # a 2-D ("expert", "model") mesh additionally PARTITIONS whole
+        # experts over the "expert" axis (all-to-all dispatch/combine, see
+        # moe_apply_expert_parallel);  dense-state families run
+        # slot-parallel (params replicated, decode batch sharded).  The
+        # scheduler and page tables stay host-side and replicated either way.
         self.mesh = mesh
+        self._param_shardings = None
         if mesh is not None:
             if rules is not None:
                 raise ValueError(
@@ -240,26 +243,53 @@ class ServeEngine:
                 raise ValueError(
                     f"serving mesh needs a 'model' axis, got {mesh.axis_names}")
             self.tp = int(mesh.shape["model"])
+            self.ep = int(mesh.shape["expert"]) \
+                if "expert" in mesh.axis_names else 1
             if self.paged:
-                # head-sharded TP: the family's Megatron specs
-                model.validate_serve_tp(self.tp)
-                pspecs = model.serve_param_specs()
+                # head-sharded TP (+ expert-partitioned EP): family specs
+                model.validate_serve_mesh(tp=self.tp, ep=self.ep)
+                pspecs = model.serve_param_specs(ep=self.ep)
                 if self.weight_quant:
                     # int8 payload keeps the weight's spec; scalar scales
                     # replicate — dequant commutes with sharding, so tp=N
                     # streams stay equal to tp=1
                     pspecs = QZ.quantize_param_specs(pspecs, wq_src)
             else:
+                if self.ep > 1:
+                    raise ValueError(
+                        f"expert-parallel serving needs the paged MoE path: "
+                        f"{model.cfg.name} ({model.cfg.family}) is serving "
+                        "non-paged (slot-parallel); drop the expert axis")
                 # slot-parallel: the step fn runs unchanged per shard, so
                 # params must be REPLICATED whatever the family's TP specs
                 # would say (a dense-forced DecoderLM included)
                 pspecs = jax.tree_util.tree_map(
                     lambda a: P(*([None] * jnp.ndim(a))), params)
-            self.params = params = jax.device_put(
-                params, jax.tree_util.tree_map(
-                    lambda s: NamedSharding(mesh, s), pspecs))
+            self._param_shardings = jax.tree_util.tree_map(
+                lambda s: NamedSharding(mesh, s), pspecs)
+            self.params = params = jax.device_put(params,
+                                                  self._param_shardings)
         else:
             self.tp = 1
+            self.ep = 1
+
+        # -- load-aware expert placement -------------------------------------
+        # Dispatch goes through a (3, E) expert->physical-slot map passed as
+        # a TRACED argument to every jitted step (re-placement never
+        # recompiles); weights are permuted host-side to match.  The
+        # identity map reproduces the unplaced integer slot indices exactly.
+        from repro.serve import placement as PL
+        n_exp = model.cfg.n_experts if (self.paged and model.cfg.n_experts) \
+            else 0
+        self.placement = None                   # PlacementPlan once updated
+        self.placement_interval = int(placement_interval)
+        self._params_unplaced = self.params     # pristine expert order
+        self._id_plan = PL.identity_plan(n_exp, self.ep) if n_exp else None
+        self._place_arr = jnp.asarray(
+            self._id_plan.dispatch_arrays() if n_exp
+            else np.zeros((3, 0), np.int32))
+        self._expert_tokens = np.zeros(n_exp, np.int64)   # lifetime
+        self._expert_window = np.zeros(n_exp, np.int64)   # since re-place
 
         self._prefill_farm = ThreadFarmExecutor(
             num_workers=max(1, prefill_workers))
@@ -305,7 +335,10 @@ class ServeEngine:
                       else "off",
                       "weight_quant": self.weight_quant or "off",
                       "kv_bytes_per_token": QZ.kv_bytes_per_token(
-                          model.paged_leaf_specs(kvq)) if self.paged else 0}
+                          model.paged_leaf_specs(kvq)) if self.paged else 0,
+                      "moe_tokens_routed": 0, "moe_dropped_tokens": 0,
+                      "expert_tokens": [0] * n_exp,
+                      "expert_imbalance": 0.0, "placement_updates": 0}
 
         # donate the state/storage argument so XLA updates the KV buffers in
         # place (no full-pool copy per tick); CPU has no donation support
@@ -325,19 +358,24 @@ class ServeEngine:
                                                    s, d),
                     donate_argnums=cow_donate)
                 self._decode_paged = jax.jit(
-                    lambda p, st, tb, ln, t, wp, wo: model.paged_decode_step(
+                    lambda p, st, tb, ln, t, wp, wo, pl:
+                    model.paged_decode_step(
                         deq(p), st, tb, ln, t, wp, wo, rules,
-                        use_pallas=use_pallas_attention, quant=kvq),
+                        use_pallas=use_pallas_attention, quant=kvq,
+                        placement=pl),
                     donate_argnums=donate)
                 self._prefill_chunk = jax.jit(
-                    lambda p, st, row, pg, s0, t: model.paged_prefill_chunk(
+                    lambda p, st, row, pg, s0, t, pl:
+                    model.paged_prefill_chunk(
                         deq(p), st, row, pg, s0, t, rules,
-                        use_pallas=use_pallas_attention, quant=kvq),
+                        use_pallas=use_pallas_attention, quant=kvq,
+                        placement=pl),
                     donate_argnums=donate)
                 self._verify_paged = jax.jit(
-                    lambda p, st, tb, ln, t, wp, wo: model.paged_verify(
+                    lambda p, st, tb, ln, t, wp, wo, pl: model.paged_verify(
                         deq(p), st, tb, ln, t, wp, wo, rules,
-                        use_pallas=use_pallas_attention, quant=kvq),
+                        use_pallas=use_pallas_attention, quant=kvq,
+                        placement=pl),
                     donate_argnums=donate)
             else:
                 sspecs = model.paged_storage_specs(kvq)
@@ -349,6 +387,8 @@ class ServeEngine:
                         is_leaf=lambda x: isinstance(x, P)),
                     prefix_cache=self.prefix_cache)
                 comm = Comm("model")
+                ep_comm = Comm("expert") if "expert" in mesh.axis_names \
+                    else None
                 # COW copies move whole pages along the (replicated) page
                 # axis — each shard copies its local heads independently
                 self._cow_copy = jax.jit(CC.shard_map(
@@ -358,31 +398,33 @@ class ServeEngine:
                     out_specs=sspecs, check_vma=False),
                     donate_argnums=cow_donate)
                 self._decode_paged = jax.jit(CC.shard_map(
-                    lambda p, st, tb, ln, t, wp, wo: model.paged_decode_step(
+                    lambda p, st, tb, ln, t, wp, wo, pl:
+                    model.paged_decode_step(
                         deq(p), st, tb, ln, t, wp, wo, None,
                         use_pallas=use_pallas_attention, comm=comm,
-                        quant=kvq),
+                        quant=kvq, ep_comm=ep_comm, placement=pl),
                     mesh=mesh,
-                    in_specs=(pspecs, sspecs, rep, rep, rep, rep, rep),
-                    out_specs=(sspecs, rep), check_vma=False),
+                    in_specs=(pspecs, sspecs, rep, rep, rep, rep, rep, rep),
+                    out_specs=(sspecs, rep, rep), check_vma=False),
                     donate_argnums=donate)
                 self._prefill_chunk = jax.jit(CC.shard_map(
-                    lambda p, st, row, pg, s0, t: model.paged_prefill_chunk(
+                    lambda p, st, row, pg, s0, t, pl:
+                    model.paged_prefill_chunk(
                         deq(p), st, row, pg, s0, t, None,
                         use_pallas=use_pallas_attention, comm=comm,
-                        quant=kvq),
-                    mesh=mesh,
-                    in_specs=(pspecs, sspecs, rep, rep, rep, rep),
-                    out_specs=(sspecs, rep), check_vma=False),
-                    donate_argnums=donate)
-                self._verify_paged = jax.jit(CC.shard_map(
-                    lambda p, st, tb, ln, t, wp, wo: model.paged_verify(
-                        deq(p), st, tb, ln, t, wp, wo, None,
-                        use_pallas=use_pallas_attention, comm=comm,
-                        quant=kvq),
+                        quant=kvq, ep_comm=ep_comm, placement=pl),
                     mesh=mesh,
                     in_specs=(pspecs, sspecs, rep, rep, rep, rep, rep),
-                    out_specs=(sspecs, rep), check_vma=False),
+                    out_specs=(sspecs, rep, rep), check_vma=False),
+                    donate_argnums=donate)
+                self._verify_paged = jax.jit(CC.shard_map(
+                    lambda p, st, tb, ln, t, wp, wo, pl: model.paged_verify(
+                        deq(p), st, tb, ln, t, wp, wo, None,
+                        use_pallas=use_pallas_attention, comm=comm,
+                        quant=kvq, ep_comm=ep_comm, placement=pl),
+                    mesh=mesh,
+                    in_specs=(pspecs, sspecs, rep, rep, rep, rep, rep, rep),
+                    out_specs=(sspecs, rep, rep), check_vma=False),
                     donate_argnums=donate)
             self.sched = Scheduler(max_slots=max_slots, max_len=max_len,
                                    pool=self.pool,
@@ -704,12 +746,13 @@ class ServeEngine:
             # own sampler — must hand every reserved page back to the pool
             # (release) instead of aborting the tick holding them
             try:
-                storage, hidden = self._prefill_chunk(
+                storage, hidden, tel = self._prefill_chunk(
                     self.params, self.pool.storage,
                     jnp.asarray(self.sched.table[job.slot]),
                     jnp.asarray(job.pages), np.int32(job.start),
-                    jnp.asarray(job.tokens[None]))
+                    jnp.asarray(job.tokens[None]), self._place_arr)
                 self.pool.storage = storage
+                self._account_moe(tel)
                 self.sched.chunk_done(job)
                 self.stats["chunk_prefills"] += 1
                 if job.is_last:
@@ -782,18 +825,20 @@ class ServeEngine:
                         jnp.asarray([a for _, a, _ in cow], jnp.int32),
                         jnp.asarray([b for _, _, b in cow], jnp.int32))
                 if drafts or spec_sampled:
-                    self.pool.storage, logits = self._verify_paged(
+                    self.pool.storage, logits, tel = self._verify_paged(
                         self.params, self.pool.storage,
                         jnp.asarray(self.sched.table), jnp.asarray(lens),
                         jnp.asarray(toks), jnp.asarray(wpages),
-                        jnp.asarray(woffs))
+                        jnp.asarray(woffs), self._place_arr)
+                    self._account_moe(tel)
                     errors += self._commit_verify(live, drafts, logits)
                 else:
-                    self.pool.storage, logits = self._decode_paged(
+                    self.pool.storage, logits, tel = self._decode_paged(
                         self.params, self.pool.storage,
                         jnp.asarray(self.sched.table), jnp.asarray(lens),
                         jnp.asarray(toks), jnp.asarray(wpages[:, 0]),
-                        jnp.asarray(woffs[:, 0]))
+                        jnp.asarray(woffs[:, 0]), self._place_arr)
+                    self._account_moe(tel)
                     errors += self._commit_decode(live, logits)
             except BaseException:
                 # a decode/commit failure still raises (engine-level, not
@@ -816,8 +861,61 @@ class ServeEngine:
         proposed = self.stats["draft_proposed"]
         self.stats["acceptance_rate"] = (
             self.stats["draft_accepted"] / proposed if proposed else 0.0)
+        if (self.placement_interval and self._expert_tokens.size
+                and self.stats["ticks"] % self.placement_interval == 0
+                and self._expert_window.sum()):
+            self.update_placement()
         self._raise_or_record(errors)
         return bool(live) or self.sched.has_work()
+
+    # -- expert telemetry + load-aware placement -----------------------------
+
+    def _account_moe(self, tel) -> None:
+        """Fold one step's per-expert telemetry into engine stats (counts
+        are replicated across the mesh, so any shard's copy is global)."""
+        if self._expert_tokens.size == 0:
+            return
+        t = np.asarray(jax.device_get(tel["expert_tokens"]), np.int64)
+        d = np.asarray(jax.device_get(tel["expert_dropped"]), np.int64)
+        self._expert_tokens += t
+        self._expert_window += t
+        self.stats["moe_tokens_routed"] += int(t.sum())
+        self.stats["moe_dropped_tokens"] += int(d.sum())
+        self.stats["expert_tokens"] = self._expert_tokens.tolist()
+        if self._expert_window.sum():
+            from repro.serve import placement as PL
+            plan = self.placement or self._id_plan
+            self.stats["expert_imbalance"] = PL.imbalance(
+                plan.rank_loads(self._expert_window))
+
+    def update_placement(self, plan=None):
+        """Re-place experts between ticks from the measured token window.
+
+        ``plan=None`` computes one with
+        :func:`repro.serve.placement.plan_placement` (hot-expert
+        replication on); an explicit :class:`PlacementPlan` is applied
+        as-is.  The expert-stacked weight leaves are permuted from the
+        PRISTINE (identity-order) params — plans never compose — and the
+        dispatch map swaps in as a traced argument, so no recompile.
+        Returns the active plan (``None`` when the window was empty)."""
+        from repro.serve import placement as PL
+        if self._expert_tokens.size == 0:
+            raise ValueError(
+                f"{self.model.cfg.name}: expert placement needs a paged "
+                "MoE model")
+        if plan is None:
+            if not self._expert_window.sum():
+                return None
+            plan = PL.plan_placement(self._expert_window, self.ep)
+        params = PL.apply_placement(self._params_unplaced, plan)
+        if self._param_shardings is not None:
+            params = jax.device_put(params, self._param_shardings)
+        self.params = params
+        self.placement = plan
+        self._place_arr = jnp.asarray(plan.dispatch_arrays())
+        self._expert_window[:] = 0
+        self.stats["placement_updates"] += 1
+        return plan
 
     # -- speculative decode --------------------------------------------------
 
