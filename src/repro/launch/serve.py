@@ -59,6 +59,23 @@ def parse_mesh(spec: str | None):
     return jax.make_mesh((ep, tp), ("expert", "model"))
 
 
+def encoder_workload_kwargs(cfg, args) -> dict:
+    """--image/--audio -> the multimodal band of :func:`make_workload`
+    (empty dict when both flags are off, keeping the text schedule
+    byte-identical)."""
+    if getattr(args, "image", False):
+        return dict(encoder="image",
+                    encoder_shape=(cfg.n_image_tokens, cfg.d_model),
+                    encoder_frac=args.encoder_frac, n_encoder_inputs=2)
+    if getattr(args, "audio", False):
+        # enc-dec rejects text-only submissions (nothing to cross-attend
+        # into), so every request carries a clip
+        return dict(encoder="audio",
+                    encoder_shape=(cfg.n_audio_frames, cfg.d_model),
+                    encoder_frac=1.0, n_encoder_inputs=2)
+    return {}
+
+
 def run_traffic_demo(eng, cfg, args) -> None:
     """Open-loop traffic run: seeded workload, event log, metric report."""
     slo = {}
@@ -66,14 +83,18 @@ def run_traffic_demo(eng, cfg, args) -> None:
         slo["ttft"] = args.slo_ttft
     if args.slo_e2e is not None:
         slo["e2e"] = args.slo_e2e
-    # cap prompt bands so prefix + tail + generation fit in max_len
-    hi = max(5, args.max_len - args.shared_prefix - args.max_new - 1)
+    # cap prompt bands so prefix + tail + generation (and a VLM's image
+    # pseudo-token prefix) fit in max_len
+    enc_extra = cfg.n_image_tokens if args.image else 0
+    hi = max(5, args.max_len - args.shared_prefix - args.max_new - 1
+             - enc_extra)
     len_mix = ((3.0, 4, min(24, hi)), (1.0, min(32, hi), hi))
     wl = make_workload(kind=args.traffic, n_requests=args.requests,
                        rate=args.rate, vocab=cfg.vocab, seed=0,
                        max_new_tokens=args.max_new,
                        shared_prefix_len=args.shared_prefix, n_sessions=2,
-                       len_mix=len_mix)
+                       len_mix=len_mix,
+                       **encoder_workload_kwargs(cfg, args))
     t0 = time.perf_counter()
     res = run_traffic(eng, wl, clock=args.clock, slo=slo or None)
     dt = time.perf_counter() - t0
@@ -175,6 +196,17 @@ def main():
                     "(clock units)")
     ap.add_argument("--metrics-out", default=None, metavar="PATH",
                     help="write the traffic metric report as JSON")
+    ap.add_argument("--image", action="store_true",
+                    help="multimodal serving: attach precomputed image-patch "
+                    "embeddings to a fraction of requests (VLM families; "
+                    "the image prefix pages share through the prefix cache)")
+    ap.add_argument("--audio", action="store_true",
+                    help="multimodal serving: attach audio frames to every "
+                    "request (enc-dec families; streaming chunked encode "
+                    "into read-only cross-KV pages)")
+    ap.add_argument("--encoder-frac", type=float, default=0.5,
+                    help="fraction of requests carrying an image with "
+                    "--image (audio is always 1.0 — enc-dec needs a clip)")
     args = ap.parse_args()
     if args.disagg and args.dense:
         raise SystemExit("--disagg needs the paged KV engine; drop --dense")
@@ -183,6 +215,19 @@ def main():
     if cfg.family in ("hybrid",):
         raise SystemExit("engine demo targets KV-cache families; "
                          "zamba uses aligned decode (see tests)")
+    if args.image and cfg.family != "vlm":
+        raise SystemExit(f"--image needs a VLM arch (family 'vlm'); "
+                         f"{args.arch} is '{cfg.family}'")
+    if args.audio and cfg.family != "audio":
+        raise SystemExit(f"--audio needs an enc-dec arch (family 'audio'); "
+                         f"{args.arch} is '{cfg.family}'")
+    if args.audio and (args.disagg or args.dense):
+        raise SystemExit("--audio serves monolithic and paged only (cross-KV "
+                         "pages have no handoff or dense twin); drop "
+                         "--disagg/--dense")
+    if (args.image or args.audio) and args.disagg:
+        raise SystemExit("--image/--audio are wired through the monolithic "
+                         "engine; drop --disagg")
     model = build_model(cfg)
     params = model.init(jax.random.PRNGKey(0))
     mesh = parse_mesh(args.mesh)
@@ -210,11 +255,19 @@ def main():
 
     rng = np.random.default_rng(0)
     shared = rng.integers(0, cfg.vocab, args.shared_prefix)
+    enc_pool = []
+    if args.image or args.audio:
+        n = cfg.n_image_tokens if args.image else cfg.n_audio_frames
+        # two distinct payloads, alternated: repeated-image requests share
+        # prefix pages, distinct images never alias
+        enc_pool = [rng.standard_normal((n, cfg.d_model)).astype(np.float32)
+                    for _ in range(2)]
     t0 = time.perf_counter()
     for i in range(args.requests):
         plen = int(rng.integers(4, 48))
         prompt = np.concatenate([shared, rng.integers(0, cfg.vocab, plen)])
-        eng.submit(prompt, max_new_tokens=args.max_new)
+        kw = {"encoder_input": enc_pool[i % 2]} if enc_pool else {}
+        eng.submit(prompt, max_new_tokens=args.max_new, **kw)
     done = eng.run_until_drained()
     dt = time.perf_counter() - t0
     toks = sum(len(r.output) for r in done)
@@ -234,7 +287,7 @@ def main():
     mode = "dense" if not eng.paged else (
         f"paged(ps={eng.pool.page_size}, "
         f"hw={eng.stats['pages_high_water']}/{eng.pool.num_pages} pages, "
-        f"prefix-cache {args.prefix_cache})")
+        f"prefix-cache {'on' if eng.prefix_cache else 'off'})")
     if eng.kv_quant is not None or eng.weight_quant:
         mode += (f" quant(kv={eng.stats['kv_quant']}, "
                  f"w={eng.stats['weight_quant']}, "
@@ -254,6 +307,10 @@ def main():
               f"hit_tokens={s['prefix_hit_tokens']} "
               f"cow_copies={s['cow_copies']} evictions={s['evictions']} "
               f"cached_now={eng.pool.pages_cached} pages")
+        if getattr(eng, "cross_pool", None) is not None:
+            print(f"[serve] cross-KV: encode_chunks={s['encode_chunks']} "
+                  f"pages_in_use={eng.cross_pool.pages_in_use}/"
+                  f"{eng.cross_pool.num_pages}")
         if eng.drafter is not None:
             print(f"[serve] spec decode: proposed={s['draft_proposed']} "
                   f"accepted={s['draft_accepted']} "

@@ -15,7 +15,12 @@ Batch conventions per family (assignment brief: modality frontends are stubs,
   hybrid/ssm: {tokens (B,S) i32, labels (B,S) i32}
   audio:      {frames (B,F,d) act-dtype, tokens (B,S) i32, labels (B,S) i32}
 """
+
 from __future__ import annotations
+
+__all__ = ["ArraySpec", "DecoderLM", "HybridLM",
+           "Model", "RwkvLM", "VLM",
+           "Whisper", "build_model"]
 
 import dataclasses
 from typing import Any, Callable, Optional
@@ -41,6 +46,7 @@ class ArraySpec:
     spec: P
 
     def abstract(self, mesh=None, rules: AxisRules | None = None):
+        """The matching ShapeDtypeStruct (sharded when ``mesh`` given)."""
         if mesh is None:
             return jax.ShapeDtypeStruct(self.shape, self.dtype)
         return jax.ShapeDtypeStruct(
@@ -89,15 +95,20 @@ class Model:
 
     # -- parameters ----------------------------------------------------------
     def param_defs(self) -> dict:
+        """Pytree of (shape, logical partition) pairs for every weight."""
         raise NotImplementedError
 
     def init(self, key, dtype=jnp.float32):
+        """Random weights matching :meth:`param_defs` (host-local)."""
         return init_params(self.param_defs(), key, dtype=dtype)
 
     def abstract_params(self, mesh, rules, dtype=jnp.float32):
+        """ShapeDtypeStructs with shardings — for eval_shape / checkpoint
+        restore without materialising weights."""
         return abstract_params(self.param_defs(), mesh, rules, dtype=dtype)
 
     def n_params(self) -> int:
+        """Total scalar parameter count."""
         return param_count(self.param_defs())
 
     def n_active_params(self) -> int:
@@ -106,13 +117,16 @@ class Model:
 
     # -- training ------------------------------------------------------------
     def loss(self, params, batch: dict, rules) -> tuple[jax.Array, dict]:
+        """Mean next-token loss on ``batch`` -> (scalar, metrics dict)."""
         raise NotImplementedError
 
     def train_batch_specs(self, shape: ShapeConfig) -> dict[str, ArraySpec]:
+        """:class:`ArraySpec` per training-batch key (tokens, labels, …)."""
         raise NotImplementedError
 
     # -- serving -------------------------------------------------------------
     def prefill_batch_specs(self, shape: ShapeConfig) -> dict[str, ArraySpec]:
+        """The training specs minus ``labels`` — what prefill consumes."""
         specs = dict(self.train_batch_specs(shape))
         specs.pop("labels")
         return specs
@@ -122,6 +136,7 @@ class Model:
         raise NotImplementedError
 
     def init_decode_state(self, batch: int, max_len: int):
+        """Fresh (empty) per-slot decode state for a dense batch."""
         raise NotImplementedError
 
     def decode_state_specs(self, batch: int, max_len: int) -> Any:
@@ -137,6 +152,7 @@ class Model:
     # per-slot state path: there is no per-token KV to page.
 
     def supports_paged_decode(self) -> bool:
+        """Whether the family has a per-token KV cache that can page."""
         return False
 
     def paged_leaf_specs(self, quant=None):
@@ -164,21 +180,28 @@ class Model:
     def paged_prefill_chunk(self, params, storage, table_row, pages_chunk,
                             start, tokens, rules, *,
                             use_pallas: bool = False, comm=None, quant=None,
-                            ep_comm=None, placement=None):
-        """Prefill tokens (1, C) at positions [start, start+C) into pages."""
+                            ep_comm=None, placement=None, embeds=None,
+                            cross=None):
+        """Prefill tokens (1, C) at positions [start, start+C) into pages.
+
+        ``embeds``: optional (1, C, d) precomputed embeddings spliced in at
+        negative-token positions (the VLM image-prefix path); ``cross``:
+        optional ``{"storage", "tables", "frames_len"}`` read-only
+        cross-attention pages (the enc-dec path).  Both default to None and
+        change NOTHING for text-only families."""
         raise NotImplementedError(f"{self.cfg.family} has no paged KV cache")
 
     def paged_decode_step(self, params, storage, tables, lengths, tokens,
                           write_pages, write_offs, rules, *,
                           use_pallas: bool = False, comm=None, quant=None,
-                          ep_comm=None, placement=None):
+                          ep_comm=None, placement=None, cross=None):
         """tokens (B,1) -> (new_storage, logits (B,1,V), moe telemetry)."""
         raise NotImplementedError(f"{self.cfg.family} has no paged KV cache")
 
     def paged_verify(self, params, storage, tables, lengths, tokens,
                      write_pages, write_offs, rules, *,
                      use_pallas: bool = False, comm=None, quant=None,
-                     ep_comm=None, placement=None):
+                     ep_comm=None, placement=None, cross=None):
         """Speculative-decode verify: score a (B, C) window of candidate
         tokens per slot in one batched forward (position 0 = the next
         input, 1..C-1 = drafts).  ``write_pages``/``write_offs`` are
@@ -268,7 +291,16 @@ class Model:
         """Back-compat alias for :meth:`validate_serve_mesh` (1-D mesh)."""
         self.validate_serve_mesh(tp=tp)
 
+    def validate_serve_encoder(self, *, page_size: int, max_len: int,
+                               prefix_cache: bool = False) -> None:
+        """Raise (with the fix spelled out) when the family's encoder
+        geometry cannot serve under the given paged layout — the
+        construction-time twin of :meth:`validate_serve_mesh` for the
+        encoder-attached families (VLM image prefixes, whisper audio
+        frames).  Text-only families have no encoder: no-op."""
+
     def lm_head(self, params, hidden, rules):
+        """Project final hidden states to vocab logits."""
         return T.lm_logits(params, hidden, self.cfg, rules)
 
 
@@ -277,6 +309,9 @@ class Model:
 # ---------------------------------------------------------------------------
 
 class DecoderLM(Model):
+    """Decoder-only transformer LM (dense or MoE): the full paged-serving
+    protocol — prefill chunks, single-token decode, spec-decode verify."""
+
     def param_defs(self):
         return T.transformer_defs(self.cfg)
 
@@ -341,17 +376,20 @@ class DecoderLM(Model):
     def paged_prefill_chunk(self, params, storage, table_row, pages_chunk,
                             start, tokens, rules, *,
                             use_pallas: bool = False, comm=None, quant=None,
-                            ep_comm=None, placement=None):
+                            ep_comm=None, placement=None, embeds=None,
+                            cross=None):
+        assert cross is None, "decoder-only families have no cross-KV pages"
         return T.paged_prefill_chunk(params, self.cfg, rules, storage,
                                      table_row, pages_chunk, start, tokens,
                                      use_pallas=use_pallas, comm=comm,
                                      quant=quant, ep_comm=ep_comm,
-                                     placement=placement)
+                                     placement=placement, embeds=embeds)
 
     def paged_decode_step(self, params, storage, tables, lengths, tokens,
                           write_pages, write_offs, rules, *,
                           use_pallas: bool = False, comm=None, quant=None,
-                          ep_comm=None, placement=None):
+                          ep_comm=None, placement=None, cross=None):
+        assert cross is None, "decoder-only families have no cross-KV pages"
         return T.paged_decode_step(params, self.cfg, rules, storage, tables,
                                    lengths, tokens, write_pages, write_offs,
                                    use_pallas=use_pallas, comm=comm,
@@ -361,7 +399,8 @@ class DecoderLM(Model):
     def paged_verify(self, params, storage, tables, lengths, tokens,
                      write_pages, write_offs, rules, *,
                      use_pallas: bool = False, comm=None, quant=None,
-                     ep_comm=None, placement=None):
+                     ep_comm=None, placement=None, cross=None):
+        assert cross is None, "decoder-only families have no cross-KV pages"
         return T.paged_verify_chunk(params, self.cfg, rules, storage, tables,
                                     lengths, tokens, write_pages, write_offs,
                                     use_pallas=use_pallas, comm=comm,
@@ -416,12 +455,40 @@ class VLM(DecoderLM):
         return T.prefill(params, self.cfg, rules, inputs_embeds=x,
                          max_len=max_len)
 
+    def validate_serve_encoder(self, *, page_size: int, max_len: int,
+                               prefix_cache: bool = False) -> None:
+        """The image prefix occupies ``n_image_tokens`` leading positions of
+        every image request, so it must (a) leave room for text + at least
+        one generated token inside ``max_len`` and (b) — when the prefix
+        cache shares image pages between requests — tile exactly into
+        pages, or the boundary page would mix image and per-request text
+        content and never be sharable."""
+        cfg = self.cfg
+        I = cfg.n_image_tokens
+        if I + 1 >= max_len:
+            raise ValueError(
+                f"{cfg.name}: n_image_tokens={I} leaves no room inside "
+                f"max_len={max_len} for a text prompt plus one generated "
+                f"token; raise max_len to at least {I + 2} (--max-len)")
+        if prefix_cache and I % page_size:
+            fix = max(d for d in range(1, page_size + 1) if I % d == 0)
+            raise ValueError(
+                f"{cfg.name}: n_image_tokens={I} is not a multiple of "
+                f"page_size={page_size}, so image-prefix pages can never be "
+                "shared through the prefix cache (the boundary page would "
+                "mix image and text content).  Fix: pass a page size that "
+                f"divides {I} — e.g. --page-size {fix} — or disable "
+                "--prefix-cache")
+
 
 # ---------------------------------------------------------------------------
 # Hybrid (zamba2), SSM (rwkv6), audio (whisper)
 # ---------------------------------------------------------------------------
 
 class HybridLM(Model):
+    """Mamba/attention hybrid (zamba-style): recurrent per-slot state, so
+    it serves on the dense path only (no per-token KV to page)."""
+
     def param_defs(self):
         return Z.zamba_defs(self.cfg)
 
@@ -475,6 +542,9 @@ class HybridLM(Model):
 
 
 class RwkvLM(Model):
+    """RWKV-style linear-attention LM: O(1) recurrent decode state, dense
+    serving path only."""
+
     def param_defs(self):
         return RW.rwkv_lm_defs(self.cfg)
 
@@ -507,6 +577,12 @@ class RwkvLM(Model):
 
 
 class Whisper(Model):
+    """Encoder-decoder audio model: bidirectional frame encoder + causal
+    token decoder with cross-attention.  Serves paged-only — the decoder's
+    self-KV pages normally while cross-K/V (computed once per clip via
+    :meth:`encode_chunk` / :meth:`cross_kv_chunk`) lives in a read-only
+    :class:`repro.serve.pages.CrossKVPool`."""
+
     def param_defs(self):
         return W.whisper_defs(self.cfg)
 
@@ -551,6 +627,109 @@ class Whisper(Model):
     def lm_head(self, params, hidden, rules):
         return T.lm_logits(params, hidden, self.cfg, rules)
 
+    # -- paged serving (enc-dec: self-KV pages + read-only cross-KV pages) ---
+    # The decoder's self-attention cache pages exactly like a decoder-only
+    # LM's; the cross-attention K/V (one linear map of the encoder output
+    # per layer, computed once) lives in a separate read-only
+    # :class:`repro.serve.pages.CrossKVPool` and every paged call takes a
+    # ``cross={"storage", "tables", "frames_len"}`` bundle.
+
+    def supports_paged_decode(self) -> bool:
+        return True
+
+    def paged_leaf_specs(self, quant=None):
+        from repro.serve.pages import PagedLeafSpec
+        from repro.serve.quant import quantize_leaf_specs
+        cfg = self.cfg
+        leaf = PagedLeafSpec((cfg.decoder_layers,),
+                             (cfg.n_heads, cfg.head_dim),
+                             jnp.dtype(cfg.dtype))
+        return quantize_leaf_specs({"k": leaf, "v": leaf}, quant)
+
+    def cross_leaf_specs(self, quant=None):
+        """Leaf specs for the cross-KV pool (pages over audio-frame rows
+        instead of token rows; otherwise identical machinery — int8 scale
+        leaves ride along the same way)."""
+        from repro.serve.pages import PagedLeafSpec
+        from repro.serve.quant import quantize_leaf_specs
+        cfg = self.cfg
+        leaf = PagedLeafSpec((cfg.decoder_layers,),
+                             (cfg.n_heads, cfg.head_dim),
+                             jnp.dtype(cfg.dtype))
+        return quantize_leaf_specs({"cross_k": leaf, "cross_v": leaf}, quant)
+
+    def encode_chunk(self, params, frames, start, n_valid, rules):
+        """Run the bidirectional encoder over ONE audio chunk (streaming
+        chunked encode; see :func:`repro.models.whisper.encode_chunk`)."""
+        return W.encode_chunk(params, self.cfg, rules, frames, start, n_valid)
+
+    def cross_kv_chunk(self, params, enc_chunk):
+        """Encoder-output chunk (1, Cf, d) -> cross K/V (Ld, Cf, h, hd)."""
+        return W.cross_kv_chunk(params, self.cfg, enc_chunk)
+
+    def scatter_cross(self, storage, pages, k, v, *, page_size: int,
+                      quant=None):
+        """Write one chunk's cross K/V into its pages (quantize-on-write)."""
+        return W.scatter_cross(storage, pages, k, v, page_size=page_size,
+                               quant=quant)
+
+    def paged_prefill_chunk(self, params, storage, table_row, pages_chunk,
+                            start, tokens, rules, *,
+                            use_pallas: bool = False, comm=None, quant=None,
+                            ep_comm=None, placement=None, embeds=None,
+                            cross=None):
+        assert embeds is None, "whisper prompts are token-only"
+        assert cross is not None, "enc-dec prefill needs cross-KV pages"
+        return W.paged_prefill_chunk(
+            params, self.cfg, rules, storage, table_row, pages_chunk, start,
+            tokens, cross["storage"], cross["tables"], cross["frames_len"],
+            use_pallas=use_pallas, quant=quant)
+
+    def paged_decode_step(self, params, storage, tables, lengths, tokens,
+                          write_pages, write_offs, rules, *,
+                          use_pallas: bool = False, comm=None, quant=None,
+                          ep_comm=None, placement=None, cross=None):
+        assert cross is not None, "enc-dec decode needs cross-KV pages"
+        return W.paged_decode_step(
+            params, self.cfg, rules, storage, tables, lengths, tokens,
+            write_pages, write_offs, cross["storage"], cross["tables"],
+            cross["frames_len"], use_pallas=use_pallas, quant=quant)
+
+    def paged_verify(self, params, storage, tables, lengths, tokens,
+                     write_pages, write_offs, rules, *,
+                     use_pallas: bool = False, comm=None, quant=None,
+                     ep_comm=None, placement=None, cross=None):
+        assert cross is not None, "enc-dec verify needs cross-KV pages"
+        return W.paged_verify_chunk(
+            params, self.cfg, rules, storage, tables, lengths, tokens,
+            write_pages, write_offs, cross["storage"], cross["tables"],
+            cross["frames_len"], use_pallas=use_pallas, quant=quant)
+
+    def validate_serve_mesh(self, tp: int = 1, ep: int = 1) -> None:
+        if tp > 1 or ep > 1:
+            raise ValueError(
+                f"{self.cfg.name} (audio/enc-dec) serves single-device only "
+                f"in this release: mesh (tp={tp}, ep={ep}) is not wired for "
+                "the cross-KV pool (see ROADMAP item 5 follow-ups) — drop "
+                "--mesh")
+
+    def validate_serve_encoder(self, *, page_size: int, max_len: int,
+                               prefix_cache: bool = False) -> None:
+        """Audio frames must fit the cross-KV page layout: at least one
+        page of frames, and the decoder needs max_len >= 2 (prompt + one
+        generated token).  The prefix cache never applies — decoder self-KV
+        depends on the audio through cross-attention, so token-keyed
+        sharing would alias different clips (the engine disables it)."""
+        cfg = self.cfg
+        if cfg.n_audio_frames < 1:
+            raise ValueError(
+                f"{cfg.name}: n_audio_frames={cfg.n_audio_frames} — an "
+                "enc-dec request needs at least one audio frame")
+        if max_len < 2:
+            raise ValueError(
+                f"{cfg.name}: max_len={max_len} cannot hold a decoder "
+                "prompt plus one generated token; raise --max-len")
+
 
 _FAMILIES: dict[str, type[Model]] = {
     "dense": DecoderLM,
@@ -563,4 +742,5 @@ _FAMILIES: dict[str, type[Model]] = {
 
 
 def build_model(cfg: ModelConfig) -> Model:
+    """The family's :class:`Model` subclass bound to ``cfg``."""
     return _FAMILIES[cfg.family](cfg)

@@ -416,7 +416,8 @@ def _paged_block(p, x, cfg, rules, *, positions, kv, tables,
 
 def paged_prefill_chunk(params, cfg, rules, storage, table_row, pages_chunk,
                         start, tokens, use_pallas=False, comm=None,
-                        quant=None, ep_comm=None, placement=None):
+                        quant=None, ep_comm=None, placement=None,
+                        embeds=None):
     """Prefill one page-aligned prompt chunk into paged storage.
 
     storage: {"k","v"} of (L, N, page_size, Hkv, D) — plus per-row
@@ -440,12 +441,23 @@ def paged_prefill_chunk(params, cfg, rules, storage, table_row, pages_chunk,
 
     With a mesh ``comm`` (inside ``shard_map``): params/storage arrive
     head-sharded, hidden stays replicated (see :func:`_paged_block`).
+
+    ``embeds`` opens the encoder-attached (VLM) path: a (1, C, d) buffer of
+    precomputed embeddings spliced in wherever ``tokens`` is negative (the
+    scheduler's image pseudo-tokens).  Real token positions still read the
+    embedding table, so a chunk can mix image-prefix and text positions;
+    with ``embeds=None`` the function is byte-identical to the text-only
+    path — the zero-special-cases contract the multimodal tier rides on.
     """
     from repro.serve import pages as PG
     assert not uses_window_cache(cfg), "paged decode is global-attention only"
     comm = _SERIAL if comm is None else comm
     page_size = storage["k"].shape[2]
-    x = embed_tokens(params, tokens, cfg, rules)
+    if embeds is None:
+        x = embed_tokens(params, tokens, cfg, rules)
+    else:
+        x = embed_tokens(params, jnp.maximum(tokens, 0), cfg, rules)
+        x = jnp.where((tokens < 0)[..., None], embeds.astype(x.dtype), x)
     C = x.shape[1]
     positions = start + jnp.arange(C)
     tables = table_row[None]                                    # (1, P)

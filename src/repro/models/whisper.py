@@ -225,6 +225,245 @@ def prefill(params, cfg, rules, frames, tokens, max_len: int):
     return state, x
 
 
+def _pos_embed(positions, dim: int):
+    """Sinusoidal embeddings for batched position arrays: (B,) or (B, C)
+    -> positions.shape + (dim,).  Whisper has no rope — absolute positions
+    enter the decoder only through these additive embeddings, which is what
+    lets the paged path reuse the page-table machinery unchanged."""
+    flat = L.sinusoidal_pos(positions.reshape(-1), dim)
+    return flat.reshape(positions.shape + (dim,))
+
+
+def encode_chunk(params, cfg, rules, frames, start, n_valid):
+    """Encode ONE audio chunk — the streaming unit of chunked encode.
+
+    frames: (1, Cf, d) right-padded frame embeddings covering absolute
+    positions [start, start + Cf); ``n_valid`` masks the right-pad.
+    Attention is confined to the chunk (block-diagonal streaming
+    approximation — exact whenever the whole clip fits one chunk, which the
+    SMOKE configs guarantee and the parity tests rely on).  Returns the
+    encoder output for the chunk, (1, Cf, d), ready for
+    :func:`cross_kv_chunk`.
+    """
+    Cf = frames.shape[1]
+    pos = L.sinusoidal_pos(start + jnp.arange(Cf), cfg.d_model)
+    x = frames + pos.astype(frames.dtype)
+
+    def body(x, p):
+        h = L.layernorm(p["ln1"], x)
+        o, _, _ = _mha(p["attn"], h, h, cfg, causal=False,
+                       kv_valid_len=n_valid)
+        x = x + o
+        h = L.layernorm(p["ln2"], x)
+        return x + L.mlp_plain(p["mlp"], h), None
+
+    x, _ = jax.lax.scan(T._remat(body, cfg), x, params["enc_blocks"])
+    return L.layernorm(params["enc_norm"], x)
+
+
+def cross_kv_chunk(params, cfg, enc_chunk):
+    """Cross-attention K/V for one encoder-output chunk, all layers at once.
+
+    Cross K/V is a per-position linear map of the encoder output (wk, wv
+    only — whisper has no k bias), so chunk-wise computation is EXACT
+    regardless of chunking.  enc_chunk: (1, Cf, d) -> k, v: (Ld, Cf, h, hd)
+    — shaped for a page scatter with ``n_prefix=1``.
+    """
+    k, v = jax.vmap(lambda p: _cross_kv(p, enc_chunk))(
+        params["dec_blocks"]["cross_attn"])
+    return k[:, 0], v[:, 0]
+
+
+def scatter_cross(storage, pages, k, v, *, page_size: int, quant=None):
+    """Commit one chunk's cross K/V into its cross pages (write-once).
+
+    storage: {"cross_k","cross_v"} of (Ld, N, page_size, h, hd) — plus
+    per-row {"cross_k_scale","cross_v_scale"} leaves when ``quant`` is set;
+    pages: (n,) int32;  k/v: (Ld, n * page_size, h, hd) right-padded.
+    Quantize-on-write mirrors the self-attention pools, so int8 cross pages
+    compose with the same scale-leaf machinery.
+    """
+    from repro.serve import pages as PG
+
+    def sc(st, val):
+        return PG.scatter_chunk(st, pages, val, page_size=page_size,
+                                n_prefix=1)
+
+    if quant is None:
+        return dict(storage, cross_k=sc(storage["cross_k"], k),
+                    cross_v=sc(storage["cross_v"], v))
+    qk, sk = quant.quantize(k)
+    qv, sv = quant.quantize(v)
+    return dict(storage, cross_k=sc(storage["cross_k"], qk),
+                cross_v=sc(storage["cross_v"], qv),
+                cross_k_scale=sc(storage["cross_k_scale"], sk),
+                cross_v_scale=sc(storage["cross_v_scale"], sv))
+
+
+def _paged_dec_block(p, x, cfg, *, kv, tables, q_offset, write,
+                     cross_kv, cross_tables, frames_len, use_pallas=False):
+    """One whisper decoder block against paged storage.
+
+    Self-attention mirrors :func:`repro.models.transformer._paged_block`
+    (write fresh K/V through ``write``, attend through
+    :func:`paged_window_attention`); between it and the MLP sits the
+    cross-attention read: gather this layer's cross-KV pages (read-only —
+    written once by the encode path), dequantize scale leaves when present,
+    and run non-causal attention masked to each slot's ``frames_len``
+    (0 frames -> a zero contribution, which is what keeps dead decode slots
+    safe against the trash page).
+    """
+    from repro.optim.compress import int8_decompress
+    from repro.serve import pages as PG
+    dtype = x.dtype
+    h = L.layernorm(p["ln1"], x)
+    q, k, v = _project_qkv(p["self_attn"], h, h, dtype)
+    kv = write(kv, k, v)
+    o = A.paged_window_attention(q, kv["k"], kv["v"], tables, q_offset,
+                                 k_scale=kv.get("k_scale"),
+                                 v_scale=kv.get("v_scale"),
+                                 use_pallas=use_pallas)
+    x = x + _out(p["self_attn"], o)
+
+    h = L.layernorm(p["ln_x"], x)
+    cq = jnp.einsum("bsd,dhe->bshe", h,
+                    p["cross_attn"]["wq"].astype(dtype)) \
+        + p["cross_attn"]["bq"].astype(dtype)
+    ck = PG.gather_pages(cross_kv["cross_k"], cross_tables)
+    cv = PG.gather_pages(cross_kv["cross_v"], cross_tables)
+    if "cross_k_scale" in cross_kv:
+        ck = int8_decompress(ck, PG.gather_pages(cross_kv["cross_k_scale"],
+                                                 cross_tables),
+                             axis=-1, dtype=dtype)
+        cv = int8_decompress(cv, PG.gather_pages(cross_kv["cross_v_scale"],
+                                                 cross_tables),
+                             axis=-1, dtype=dtype)
+    o = A.gqa_attention(cq, ck, cv, causal=False, kv_valid_len=frames_len,
+                        kv_chunk=max(ck.shape[1], 1), use_pallas=False)
+    x = x + _out(p["cross_attn"], o)
+
+    h = L.layernorm(p["ln2"], x)
+    return x + L.mlp_plain(p["mlp"], h), kv
+
+
+def _no_moe():
+    return {"expert_tokens": jnp.zeros((0,), jnp.int32),
+            "expert_dropped": jnp.zeros((0,), jnp.int32)}
+
+
+def paged_prefill_chunk(params, cfg, rules, storage, table_row, pages_chunk,
+                        start, tokens, cross_storage, cross_row, frames_len,
+                        use_pallas=False, quant=None):
+    """Prefill one decoder-prompt chunk against paged self + cross storage.
+
+    Same contract as :func:`repro.models.transformer.paged_prefill_chunk`
+    (tokens (1, C) right-padded, pages_chunk covering [start, start + C)),
+    plus the read-only cross side: ``cross_storage`` {"cross_k","cross_v"}
+    pages, ``cross_row`` (Pc,) the slot's cross page table, ``frames_len``
+    scalar valid frames.  Positions are sinusoidal at absolute offsets (no
+    rope), so chunked prefill matches the dense decoder bit-for-bit.
+    Returns (self_storage, hidden (1, C, d), telemetry).
+    """
+    from repro.serve import pages as PG
+    page_size = storage["k"].shape[2]
+    x = L.embed(params["embed"], tokens).astype(jnp.dtype(cfg.dtype))
+    C = x.shape[1]
+    positions = start + jnp.arange(C)
+    x = x + L.sinusoidal_pos(positions, cfg.d_model).astype(x.dtype)
+    tables = table_row[None]                                    # (1, P)
+    cross_tables = cross_row[None]                              # (1, Pc)
+    flen = jnp.asarray(frames_len)[None]                        # (1,)
+
+    def write(kv, k, v):
+        return T._write_kv(
+            kv, k[0], v[0], quant,
+            lambda st, val: PG.scatter_chunk(st, pages_chunk, val,
+                                             page_size=page_size))
+
+    def body(x, xs):
+        p, kv, ckv = xs
+        x, kv = _paged_dec_block(p, x, cfg, kv=kv, tables=tables,
+                                 q_offset=start, write=write,
+                                 cross_kv=ckv, cross_tables=cross_tables,
+                                 frames_len=flen, use_pallas=use_pallas)
+        return x, kv
+
+    x, storage = jax.lax.scan(body, x, (params["dec_blocks"], storage,
+                                        cross_storage))
+    x = L.layernorm(params["dec_norm"], x)
+    return storage, x, _no_moe()
+
+
+def paged_decode_step(params, cfg, rules, storage, tables, lengths, tokens,
+                      write_pages, write_offs, cross_storage, cross_tables,
+                      frames_len, use_pallas=False, quant=None):
+    """One decode token per slot with a cross-attention read.
+
+    Self side matches :func:`repro.models.transformer.paged_decode_step`;
+    ``cross_tables`` (B, Pc) and ``frames_len`` (B,) add the per-slot cross
+    read (dead slots: trash page + 0 frames).  Returns (storage, logits
+    (B, 1, V), telemetry).
+    """
+    from repro.serve import pages as PG
+    x = L.embed(params["embed"], tokens).astype(jnp.dtype(cfg.dtype))
+    x = x + _pos_embed(lengths[:, None], cfg.d_model).astype(x.dtype)
+
+    def write(kv, k, v):
+        return T._write_kv(
+            kv, k[:, 0], v[:, 0], quant,
+            lambda st, val: PG.scatter_token(st, write_pages, write_offs,
+                                             val))
+
+    def body(x, xs):
+        p, kv, ckv = xs
+        x, kv = _paged_dec_block(p, x, cfg, kv=kv, tables=tables,
+                                 q_offset=lengths, write=write,
+                                 cross_kv=ckv, cross_tables=cross_tables,
+                                 frames_len=frames_len,
+                                 use_pallas=use_pallas)
+        return x, kv
+
+    x, storage = jax.lax.scan(body, x, (params["dec_blocks"], storage,
+                                        cross_storage))
+    x = L.layernorm(params["dec_norm"], x)
+    logits = T.lm_logits(params, x, cfg, rules)
+    return storage, logits, _no_moe()
+
+
+def paged_verify_chunk(params, cfg, rules, storage, tables, lengths, tokens,
+                       write_pages, write_offs, cross_storage, cross_tables,
+                       frames_len, use_pallas=False, quant=None):
+    """Score a (B, C) candidate window in one forward (speculative verify)
+    — :func:`repro.models.transformer.paged_verify_chunk` plus the cross
+    read.  C == 1 is exactly a decode step."""
+    from repro.serve import pages as PG
+    x = L.embed(params["embed"], tokens).astype(jnp.dtype(cfg.dtype))
+    C = x.shape[1]
+    positions = lengths[:, None] + jnp.arange(C)                # (B, C)
+    x = x + _pos_embed(positions, cfg.d_model).astype(x.dtype)
+
+    def write(kv, k, v):
+        return T._write_kv(
+            kv, k, v, quant,
+            lambda st, val: PG.scatter_window(st, write_pages, write_offs,
+                                              val))
+
+    def body(x, xs):
+        p, kv, ckv = xs
+        x, kv = _paged_dec_block(p, x, cfg, kv=kv, tables=tables,
+                                 q_offset=lengths, write=write,
+                                 cross_kv=ckv, cross_tables=cross_tables,
+                                 frames_len=frames_len,
+                                 use_pallas=use_pallas)
+        return x, kv
+
+    x, storage = jax.lax.scan(body, x, (params["dec_blocks"], storage,
+                                        cross_storage))
+    x = L.layernorm(params["dec_norm"], x)
+    logits = T.lm_logits(params, x, cfg, rules)
+    return storage, logits, _no_moe()
+
+
 def decode_step(params, cfg, rules, state, tokens, pos):
     """One new token against the self cache + fixed cross K/V."""
     x = L.embed(params["embed"], tokens).astype(jnp.dtype(cfg.dtype))

@@ -1,5 +1,26 @@
-from repro.serve.pages import (KVHandoff, PagePool, PagedLeafSpec,
-                               PrefixCache)
+"""The serving stack: paged-KV continuous batching and everything that
+rides on it.
+
+Layering, bottom to top (see ``docs/ARCHITECTURE.md`` for the full map):
+
+* :mod:`repro.serve.pages` — refcounted page pool, radix prefix cache,
+  read-only cross-KV pool, scatter/gather kernel entry points.
+* :mod:`repro.serve.quant` / :mod:`repro.serve.sampling` /
+  :mod:`repro.serve.spec` / :mod:`repro.serve.placement` — orthogonal
+  policies: int8 KV pages, token sampling, speculative drafting,
+  load-aware expert placement.
+* :mod:`repro.serve.scheduler` — admission, chunked prefill planning,
+  encode-chunk planning (enc-dec audio), preemption.
+* :mod:`repro.serve.engine` — the tick loop tying the above to a model's
+  paged decode/prefill/verify functions; multimodal ``encoder_input``
+  enters here.
+* :mod:`repro.serve.disagg` — disaggregated prefill/decode over a KV
+  handoff.
+* :mod:`repro.serve.traffic` / :mod:`repro.serve.metrics` — seeded
+  open-loop workloads (text + audio + image bands) and SLO reporting.
+"""
+from repro.serve.pages import (CrossKVPool, KVHandoff, PagePool,
+                               PagedLeafSpec, PrefixCache)
 from repro.serve.sampling import (greedy, sample_temperature, sample_top_k,
                                   sample_top_p, spec_rejection_sample,
                                   spec_verify_greedy)
@@ -11,10 +32,26 @@ from repro.serve.placement import (PlacementPlan, apply_placement,
 from repro.serve.scheduler import Scheduler
 from repro.serve.spec import (Drafter, NgramDrafter, TruncatedSelfDrafter,
                               make_drafter)
-from repro.serve.engine import ServeEngine, Request
+from repro.serve.engine import ServeEngine, Request, encoder_prefix_tokens
 from repro.serve.disagg import DisaggServeEngine
 from repro.serve.metrics import compute_report, nearest_rank, percentiles
 from repro.serve.traffic import (TrafficHarness, TrafficRequest,
                                  bursty_arrivals, make_workload,
                                  poisson_arrivals, record_trace, run_traffic,
                                  workload_from_trace)
+
+__all__ = ["CrossKVPool", "DisaggServeEngine", "Drafter",
+           "Int8KVQuant", "KVHandoff", "NgramDrafter",
+           "PagePool", "PagedLeafSpec", "PlacementPlan",
+           "PrefixCache", "Request", "Scheduler",
+           "ServeEngine", "TrafficHarness", "TrafficRequest",
+           "TruncatedSelfDrafter", "apply_placement", "bursty_arrivals",
+           "compute_report", "dequantize_params", "encoder_prefix_tokens",
+           "greedy", "identity_plan", "imbalance",
+           "kv_bytes_per_token", "make_drafter", "make_kv_quant",
+           "make_workload", "nearest_rank", "percentiles",
+           "plan_placement", "poisson_arrivals", "quantize_leaf_specs",
+           "quantize_params", "record_trace", "run_traffic",
+           "sample_temperature", "sample_top_k", "sample_top_p",
+           "spec_rejection_sample", "spec_verify_greedy",
+           "workload_from_trace"]

@@ -41,7 +41,10 @@ ignores the PRNG key and seeded requests fold ``len(output)`` into their
 own seed, so a token depends only on the model, the prompt, and the tokens
 before it — never on which engine's tick produced it.
 """
+
 from __future__ import annotations
+
+__all__ = ["DisaggServeEngine"]
 
 import threading
 from collections import deque
@@ -92,6 +95,7 @@ class DisaggServeEngine:
     # -- the monolithic engine's interface -----------------------------------
 
     def submit(self, prompt, **kwargs) -> int:
+        """Enqueue on the prefill role (same signature as ServeEngine)."""
         return self.prefiller.submit(prompt, **kwargs)
 
     @property
@@ -103,10 +107,12 @@ class DisaggServeEngine:
 
     @property
     def stats(self) -> dict:
+        """Per-role stats plus the count of in-flight KV handoffs."""
         return {"prefill": self.prefiller.stats, "decode": self.decoder.stats,
                 "pending_handoffs": len(self._pending)}
 
     def has_work(self) -> bool:
+        """True while either role or the handoff queue holds work."""
         return (self.prefiller.sched.has_work()
                 or self.decoder.sched.has_work()
                 or bool(self._pending))
@@ -136,11 +142,13 @@ class DisaggServeEngine:
         return self.decoder.tick()
 
     def tick(self) -> bool:
+        """One overlapped prefill+decode step; True if anything ran."""
         busy = run_stages(self.executor,
                           (self._prefill_stage, self._decode_stage))
         return bool(busy) or bool(self._pending)
 
     def run_until_drained(self, max_ticks: int = 10_000):
+        """Tick until both roles idle; returns the finished requests."""
         for _ in range(max_ticks):
             busy = self.tick()
             if not busy and not self.has_work():
@@ -150,6 +158,7 @@ class DisaggServeEngine:
     # -- lifecycle -----------------------------------------------------------
 
     def close(self):
+        """Shut down both engines and the stage executor."""
         self.prefiller.close()
         self.decoder.close()
         shutdown = getattr(self.executor, "shutdown", None)

@@ -47,7 +47,10 @@ A failed prefill retires its request with ``req.error`` set and never
 aborts the tick (pass ``strict=True`` to re-raise after the tick's healthy
 work is committed).
 """
+
 from __future__ import annotations
+
+__all__ = ["Request", "ServeEngine", "encoder_prefix_tokens"]
 
 import dataclasses
 import functools
@@ -69,11 +72,14 @@ from repro.serve import spec as SP
 from repro.serve.pages import PagePool
 from repro.serve.sampling import (greedy, spec_rejection_sample,
                                   spec_verify_greedy)
-from repro.serve.scheduler import FREE, Scheduler, prefill_tokens
+from repro.serve.scheduler import (EncodeJob, FREE, Scheduler,
+                                   prefill_tokens)
 
 
 @dataclasses.dataclass
 class Request:
+    """One generation request: identity, prompt, sampling policy, optional
+    encoder payload — plus the engine-side bookkeeping of its progress."""
     rid: int
     prompt: np.ndarray                     # (prompt_len,) int32
     max_new_tokens: int = 32
@@ -84,7 +90,17 @@ class Request:
     #                                        fold_in(PRNGKey(seed), i), so a
     #                                        sampled stream reproduces
     #                                        independent of admission order
+    encoder_input: Optional[np.ndarray] = None
+    #                                        precomputed encoder embeddings:
+    #                                        (n_image_tokens, d_model) patch
+    #                                        embeds for a VLM, (n_frames,
+    #                                        d_model) audio frames for enc-dec
     # filled by the engine:
+    encoder_tokens: Optional[np.ndarray] = None
+    #                                        VLM only: strictly-negative
+    #                                        pseudo-tokens hashing the image
+    #                                        content (see
+    #                                        encoder_prefix_tokens)
     output: list = dataclasses.field(default_factory=list)
     submitted_at: float = 0.0
     first_token_at: Optional[float] = None
@@ -99,7 +115,31 @@ def _bucket(n: int, buckets=(32, 64, 128, 256, 512, 1024, 2048, 4096)) -> int:
     return ((n + 4095) // 4096) * 4096
 
 
+def encoder_prefix_tokens(enc: np.ndarray) -> np.ndarray:
+    """Deterministic strictly-negative pseudo-tokens for an image prefix.
+
+    The prefix cache keys pages on token bytes, so an image prefix needs a
+    token sequence that (a) can never collide with real vocab ids — every
+    real token is >= 0, every pseudo-token strictly negative — and (b) is a
+    pure content hash of the embeddings: the same image always maps to the
+    same pseudo-tokens, so shared-image chats hit the radix index exactly
+    like shared text prompts, while distinct images collide with
+    probability ~2**-128 (blake2b seeds the token draw)."""
+    import hashlib
+    enc = np.ascontiguousarray(np.asarray(enc, np.float32))
+    digest = hashlib.blake2b(enc.tobytes(), digest_size=16).digest()
+    rng = np.random.default_rng(int.from_bytes(digest, "little"))
+    draw = rng.integers(0, 2**31 - 1, size=len(enc), dtype=np.int64)
+    return (-1 - draw).astype(np.int32)
+
+
 class ServeEngine:
+    """Continuous-batching engine: ``submit()`` requests, ``tick()`` the
+    serving loop (admission → encode/prefill chunks → batched decode or
+    spec-verify → retire), collect :attr:`finished`.  One instance per
+    role; see the module docstring for the layer map and
+    ``docs/ARCHITECTURE.md`` for the request lifecycle."""
+
     def __init__(self, model, params, *, max_slots: int = 8,
                  max_len: int = 512, rules=None, sampler: Callable = None,
                  prefill_workers: int = 4, paged: Optional[bool] = None,
@@ -122,6 +162,28 @@ class ServeEngine:
                 "cache; construct with paged=False")
         self.paged = bool(paged)
         self.prefix_cache = bool(prefix_cache) and self.paged
+        # -- encoder-attached serving (VLM image prefixes, enc-dec audio) ----
+        # An enc-dec family serves paged-only: the dense per-slot path has
+        # nowhere to hold the cross-attention K/V.  Prefix caching is
+        # silently DISABLED for enc-dec — decoder self-KV depends on the
+        # audio through cross-attention, so token-keyed page sharing would
+        # alias different clips (documented in docs/ARCHITECTURE.md).
+        if not self.paged and getattr(model.cfg, "is_encoder_decoder", False):
+            raise ValueError(
+                f"{model.cfg.name} ({model.cfg.family}) is encoder-decoder "
+                "and serves through the paged engine only (cross-KV pages); "
+                "drop paged=False")
+        self._enc_dec = self.paged and bool(
+            getattr(model.cfg, "is_encoder_decoder", False))
+        if self._enc_dec:
+            self.prefix_cache = False
+        self._n_image = int(getattr(model.cfg, "n_image_tokens", 0) or 0) \
+            if self.paged and model.cfg.family == "vlm" else 0
+        if self._enc_dec or self._n_image:
+            model.validate_serve_encoder(page_size=page_size,
+                                         max_len=max_len,
+                                         prefix_cache=self.prefix_cache)
+        self.cross_pool = None
 
         # -- flag validation (one place, construction time) ------------------
         # Every engine-level capability flag is checked here so misuse fails
@@ -170,6 +232,11 @@ class ServeEngine:
                 "spec_decode on a prefill_only engine would never run "
                 "(speculation happens at decode); configure the drafter on "
                 "the decoder side")
+        if self.prefill_only and self._enc_dec:
+            raise ValueError(
+                f"prefill_only on {model.cfg.name} (enc-dec) has no cross-KV "
+                "handoff: the decoder half could never read the audio pages; "
+                "serve enc-dec monolithic")
         # KV quantization (int8 pages + per-row scale leaves) is a property
         # of the PAGED storage layout; the dense per-slot path has no pool
         # to hold the scale leaves in.
@@ -331,6 +398,7 @@ class ServeEngine:
                       "draft_proposed": 0, "draft_accepted": 0,
                       "acceptance_rate": 0.0,
                       "kv_handoffs": 0, "kv_injections": 0,
+                      "encode_chunks": 0,
                       "kv_quant": self.kv_quant.name if self.kv_quant
                       else "off",
                       "weight_quant": self.weight_quant or "off",
@@ -377,6 +445,48 @@ class ServeEngine:
                         use_pallas=use_pallas_attention, quant=kvq,
                         placement=pl),
                     donate_argnums=donate)
+                if self._n_image:
+                    # separate jit so the embeds-free path stays byte-
+                    # identical to the text-only engine (same program)
+                    self._prefill_chunk_embeds = jax.jit(
+                        lambda p, st, row, pg, s0, t, em, pl:
+                        model.paged_prefill_chunk(
+                            deq(p), st, row, pg, s0, t, rules,
+                            use_pallas=use_pallas_attention, quant=kvq,
+                            placement=pl, embeds=em),
+                        donate_argnums=donate)
+                if self._enc_dec:
+                    # cross storage is READ-ONLY in these calls and not
+                    # returned, so it must NOT be donated (donation would
+                    # delete the live buffers); only the self-KV storage
+                    # (argnum 1) is donated as usual
+                    self._decode_paged = jax.jit(
+                        lambda p, st, tb, ln, t, wp, wo, pl, cst, ctb, fl:
+                        model.paged_decode_step(
+                            deq(p), st, tb, ln, t, wp, wo, rules,
+                            use_pallas=use_pallas_attention, quant=kvq,
+                            placement=pl,
+                            cross=dict(storage=cst, tables=ctb,
+                                       frames_len=fl)),
+                        donate_argnums=donate)
+                    self._prefill_chunk = jax.jit(
+                        lambda p, st, row, pg, s0, t, pl, cst, ctb, fl:
+                        model.paged_prefill_chunk(
+                            deq(p), st, row, pg, s0, t, rules,
+                            use_pallas=use_pallas_attention, quant=kvq,
+                            placement=pl,
+                            cross=dict(storage=cst, tables=ctb,
+                                       frames_len=fl)),
+                        donate_argnums=donate)
+                    self._verify_paged = jax.jit(
+                        lambda p, st, tb, ln, t, wp, wo, pl, cst, ctb, fl:
+                        model.paged_verify(
+                            deq(p), st, tb, ln, t, wp, wo, rules,
+                            use_pallas=use_pallas_attention, quant=kvq,
+                            placement=pl,
+                            cross=dict(storage=cst, tables=ctb,
+                                       frames_len=fl)),
+                        donate_argnums=donate)
             else:
                 sspecs = model.paged_storage_specs(kvq)
                 self.pool = PagePool(
@@ -426,10 +536,51 @@ class ServeEngine:
                     in_specs=(pspecs, sspecs, rep, rep, rep, rep, rep, rep),
                     out_specs=(sspecs, rep, rep), check_vma=False),
                     donate_argnums=donate)
+                if self._n_image:
+                    # image embeds replicate like the token chunk (the
+                    # prefix rides the replicated activation path; heads
+                    # shard inside the model as usual)
+                    self._prefill_chunk_embeds = jax.jit(CC.shard_map(
+                        lambda p, st, row, pg, s0, t, em, pl:
+                        model.paged_prefill_chunk(
+                            deq(p), st, row, pg, s0, t, None,
+                            use_pallas=use_pallas_attention, comm=comm,
+                            quant=kvq, ep_comm=ep_comm, placement=pl,
+                            embeds=em),
+                        mesh=mesh,
+                        in_specs=(pspecs, sspecs, rep, rep, rep, rep, rep,
+                                  rep),
+                        out_specs=(sspecs, rep, rep), check_vma=False),
+                        donate_argnums=donate)
+            cross_kw = {}
+            if self._enc_dec:
+                # one read-only cross-KV pool sized for every slot holding
+                # a full-length clip; per-request allocation is
+                # ceil(n_frames / page_size), so shorter clips leave slack
+                F = int(model.cfg.n_audio_frames)
+                self.cross_pool = PG.CrossKVPool(
+                    model.cross_leaf_specs(kvq),
+                    num_pages=max_slots * (-(-F // page_size)),
+                    page_size=page_size)
+                cross_kw = dict(cross_pool=self.cross_pool, max_frames=F)
+                # encoder + cross-KV projection: pure compute (no donated
+                # state), farmed over the ThreadFarmExecutor like dense
+                # prefills; the scatter into pool pages is applied
+                # serially afterwards (cross storage donated HERE only)
+                self._encode_chunk = jax.jit(
+                    lambda p, fr, s0, nv: model.cross_kv_chunk(
+                        deq(p),
+                        model.encode_chunk(deq(p), fr, s0, nv, rules)))
+                cdonate = () if jax.default_backend() == "cpu" else (0,)
+                self._scatter_cross = jax.jit(
+                    lambda st, pg, k, v: model.scatter_cross(
+                        st, pg, k, v, page_size=page_size, quant=kvq),
+                    donate_argnums=cdonate)
             self.sched = Scheduler(max_slots=max_slots, max_len=max_len,
                                    pool=self.pool,
                                    prefill_chunk=prefill_chunk,
-                                   chunks_per_tick=chunks_per_tick)
+                                   chunks_per_tick=chunks_per_tick,
+                                   **cross_kw)
         else:
             self.pool = None
             self.sched = Scheduler(max_slots=max_slots, max_len=max_len)
@@ -468,10 +619,12 @@ class ServeEngine:
 
     @property
     def queue(self) -> list:
+        """Requests admitted-but-waiting (scheduler FIFO view)."""
         return self.sched.queue
 
     @property
     def slot_req(self) -> list:
+        """Per-slot resident request (None for a free slot)."""
         return self.sched.slot_req
 
     @property
@@ -485,14 +638,64 @@ class ServeEngine:
     def submit(self, prompt, max_new_tokens: int = 32,
                eos_id: Optional[int] = None,
                sampler: Optional[Callable] = None,
-               seed: Optional[int] = None) -> int:
+               seed: Optional[int] = None,
+               encoder_input=None) -> int:
+        """Enqueue one request; returns its rid.
+
+        ``encoder_input`` attaches precomputed encoder embeddings: for a
+        VLM, the ``(n_image_tokens, d_model)`` image-patch embeddings
+        (served as a pseudo-token prefix — see
+        :func:`encoder_prefix_tokens`); for an enc-dec audio family, the
+        ``(n_frames, d_model)`` audio frames (``1 <= n_frames <=
+        n_audio_frames``), encoded in streaming chunks into read-only
+        cross-KV pages.  Text-only families reject it."""
         prompt = np.asarray(prompt, np.int32)
-        if len(prompt) >= self.max_len:
-            # reject at the source: an oversized prompt can never decode
+        enc_tok = None
+        if encoder_input is not None:
+            cfg = self.model.cfg
+            if not self.paged:
+                raise ValueError(
+                    "encoder_input requires the paged engine (the dense "
+                    "path prefills token batches only)")
+            encoder_input = np.asarray(encoder_input, np.float32)
+            if encoder_input.ndim != 2 \
+                    or encoder_input.shape[-1] != cfg.d_model:
+                raise ValueError(
+                    f"encoder_input must be (n, d_model={cfg.d_model}), "
+                    f"got {encoder_input.shape}")
+            if self._enc_dec:
+                F = int(cfg.n_audio_frames)
+                if not 1 <= len(encoder_input) <= F:
+                    raise ValueError(
+                        f"{cfg.name}: encoder_input carries "
+                        f"{len(encoder_input)} audio frames; want 1..{F} "
+                        "(n_audio_frames)")
+            elif self._n_image:
+                if len(encoder_input) != self._n_image:
+                    raise ValueError(
+                        f"{cfg.name}: encoder_input carries "
+                        f"{len(encoder_input)} image tokens; want exactly "
+                        f"n_image_tokens={self._n_image}")
+                enc_tok = encoder_prefix_tokens(encoder_input)
+            else:
+                raise ValueError(
+                    f"{cfg.name} ({cfg.family}) takes no encoder_input: "
+                    "only VLM and enc-dec audio families are "
+                    "encoder-attached")
+        elif self._enc_dec:
             raise ValueError(
-                f"prompt length {len(prompt)} >= max_len {self.max_len}")
+                f"{self.model.cfg.name} (enc-dec) requires encoder_input: "
+                "the decoder cross-attends into the audio's cross-KV pages")
+        total = len(prompt) + (0 if enc_tok is None else len(enc_tok))
+        if total >= self.max_len:
+            # reject at the source: an oversized prompt can never decode
+            what = "prompt length" if enc_tok is None \
+                else "image prefix + prompt length"
+            raise ValueError(
+                f"{what} {total} >= max_len {self.max_len}")
         req = Request(next(self._rid), prompt, max_new_tokens, eos_id,
-                      sampler, seed)
+                      sampler, seed, encoder_input=encoder_input)
+        req.encoder_tokens = enc_tok
         req.submitted_at = time.perf_counter()
         self.sched.submit(req)
         return req.rid
@@ -709,6 +912,16 @@ class ServeEngine:
         self._evict_residents()
         self.pool.reset_storage()
 
+    def _recover_donated_cross(self):
+        """Cross-KV twin of :meth:`_recover_donated_storage`: a raising
+        scatter may have consumed the donated cross storage.  Evicted
+        residents re-encode on re-admission (recompute flavor — same
+        contract as self-KV recovery)."""
+        if self.cross_pool is None or not self.cross_pool.storage_deleted():
+            return
+        self._evict_residents()
+        self.cross_pool.reset_storage()
+
     def _recover_donated_state(self):
         """Dense-path twin of :meth:`_recover_donated_storage`: a raising
         donated decode call may have consumed the per-slot state buffers."""
@@ -736,7 +949,43 @@ class ServeEngine:
         errors = self._reject_errors(rejects)
 
         failed = set()
-        for job in self.sched.next_chunks():
+        jobs = self.sched.next_chunks()
+        enc_jobs = [j for j in jobs if isinstance(j, EncodeJob)]
+        jobs = [j for j in jobs if not isinstance(j, EncodeJob)]
+        if enc_jobs:
+            # streaming chunked encode: the bidirectional encoder + cross-KV
+            # projection are pure compute with no donated state, so chunks
+            # for different requests overlap on the prefill farm (Executor
+            # protocol); the scatter into cross pages applies serially,
+            # BEFORE any decoder chunk of the same tick reads them
+            def enc_guarded(job):
+                try:
+                    return self._encode_chunk(
+                        self.params, jnp.asarray(job.frames[None]),
+                        np.int32(job.start), np.int32(job.n_valid))
+                except BaseException as e:                  # noqa: BLE001
+                    return e
+            results, _ = self._prefill_farm.map_callables(
+                [functools.partial(enc_guarded, j) for j in enc_jobs])
+            for job, res in zip(enc_jobs, results):
+                if job.slot in failed \
+                        or self.sched.slot_req[job.slot] is not job.req:
+                    continue
+                try:
+                    if isinstance(res, BaseException):
+                        raise res
+                    k, v = res
+                    self.cross_pool.storage = self._scatter_cross(
+                        self.cross_pool.storage, jnp.asarray(job.pages),
+                        k, v)
+                    self.sched.encode_done(job)
+                    self.stats["encode_chunks"] += 1
+                except BaseException as e:                  # noqa: BLE001
+                    failed.add(job.slot)
+                    self.sched.release(job.slot)
+                    errors.append((job.req, e))
+                    self._recover_donated_cross()
+        for job in jobs:
             # skip slots that failed earlier this tick — or whose request
             # was evicted by a storage recovery (slot freed or re-assigned)
             if job.slot in failed or self.sched.slot_req[job.slot] is not job.req:
@@ -746,11 +995,28 @@ class ServeEngine:
             # own sampler — must hand every reserved page back to the pool
             # (release) instead of aborting the tick holding them
             try:
-                storage, hidden, tel = self._prefill_chunk(
-                    self.params, self.pool.storage,
-                    jnp.asarray(self.sched.table[job.slot]),
-                    jnp.asarray(job.pages), np.int32(job.start),
-                    jnp.asarray(job.tokens[None]), self._place_arr)
+                if job.embeds is not None:
+                    storage, hidden, tel = self._prefill_chunk_embeds(
+                        self.params, self.pool.storage,
+                        jnp.asarray(self.sched.table[job.slot]),
+                        jnp.asarray(job.pages), np.int32(job.start),
+                        jnp.asarray(job.tokens[None]),
+                        jnp.asarray(job.embeds[None]), self._place_arr)
+                elif self._enc_dec:
+                    storage, hidden, tel = self._prefill_chunk(
+                        self.params, self.pool.storage,
+                        jnp.asarray(self.sched.table[job.slot]),
+                        jnp.asarray(job.pages), np.int32(job.start),
+                        jnp.asarray(job.tokens[None]), self._place_arr,
+                        self.cross_pool.storage,
+                        jnp.asarray(self.sched.cross_table[job.slot]),
+                        np.int32(self.sched.enc_total[job.slot]))
+                else:
+                    storage, hidden, tel = self._prefill_chunk(
+                        self.params, self.pool.storage,
+                        jnp.asarray(self.sched.table[job.slot]),
+                        jnp.asarray(job.pages), np.int32(job.start),
+                        jnp.asarray(job.tokens[None]), self._place_arr)
                 self.pool.storage = storage
                 self._account_moe(tel)
                 self.sched.chunk_done(job)
@@ -818,6 +1084,17 @@ class ServeEngine:
             # stream would mix greedy and temperature-sampled tokens
             spec_sampled = self.drafter is not None and \
                 self.spec_temperature > 0
+            cross_args = ()
+            if self._enc_dec:
+                # dead slots keep frames_len=0: every cross read is fully
+                # masked (attention renormalizes to zeros), so their stale
+                # table rows are never observable
+                cflens = np.zeros(B, np.int32)
+                for slot in live:
+                    cflens[slot] = self.sched.enc_total[slot]
+                cross_args = (self.cross_pool.storage,
+                              jnp.asarray(self.sched.cross_table),
+                              jnp.asarray(cflens))
             try:
                 if cow:         # copies strictly before this tick's writes
                     self.pool.storage = self._cow_copy(
@@ -829,7 +1106,7 @@ class ServeEngine:
                         self.params, self.pool.storage,
                         jnp.asarray(self.sched.table), jnp.asarray(lens),
                         jnp.asarray(toks), jnp.asarray(wpages),
-                        jnp.asarray(woffs), self._place_arr)
+                        jnp.asarray(woffs), self._place_arr, *cross_args)
                     self._account_moe(tel)
                     errors += self._commit_verify(live, drafts, logits)
                 else:
@@ -837,7 +1114,8 @@ class ServeEngine:
                         self.params, self.pool.storage,
                         jnp.asarray(self.sched.table), jnp.asarray(lens),
                         jnp.asarray(toks), jnp.asarray(wpages[:, 0]),
-                        jnp.asarray(woffs[:, 0]), self._place_arr)
+                        jnp.asarray(woffs[:, 0]), self._place_arr,
+                        *cross_args)
                     self._account_moe(tel)
                     errors += self._commit_decode(live, logits)
             except BaseException:
@@ -1081,9 +1359,11 @@ class ServeEngine:
     # -- the tick: one SPMD decode step for all live slots --------------------
 
     def tick(self) -> bool:
+        """One serving step; True while the engine still has work."""
         return self._tick_paged() if self.paged else self._tick_dense()
 
     def run_until_drained(self, max_ticks: int = 10_000):
+        """Tick until idle; returns the finished requests."""
         for _ in range(max_ticks):
             busy = self.tick()
             if not busy and not self.sched.has_work():

@@ -23,7 +23,10 @@ virtual clock, seconds for the wall clock):
   every threshold present in the ``slo`` dict holds: ``ttft``, ``e2e``,
   and ``itl`` (its *worst* gap).  Errored requests are never compliant.
 """
+
 from __future__ import annotations
+
+__all__ = ["compute_report", "nearest_rank", "percentiles"]
 
 import math
 from typing import Optional
@@ -39,6 +42,7 @@ def nearest_rank(xs, q: float) -> Optional[float]:
 
 
 def percentiles(xs) -> dict:
+    """p50/p95/p99 (nearest-rank) plus the sample count."""
     return {"p50": nearest_rank(xs, 50), "p95": nearest_rank(xs, 95),
             "p99": nearest_rank(xs, 99), "n": len(xs)}
 

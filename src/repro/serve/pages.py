@@ -35,7 +35,14 @@ Host-side bookkeeping (free list, refcounts, radix index, LRU clock) is
 deterministic: identical request streams produce identical page tables —
 which is what makes cache-on-vs-off token parity testable.
 """
+
 from __future__ import annotations
+
+__all__ = ["CrossKVPool", "KVHandoff", "N_TRASH",
+           "PagePool", "PagedLeafSpec", "PrefixCache",
+           "copy_pages", "gather_pages", "scatter_chunk",
+           "scatter_token", "scatter_window", "tree_deleted",
+           "write_slot"]
 
 import dataclasses
 import heapq
@@ -60,6 +67,7 @@ class PagedLeafSpec:
     dtype: Any
 
     def storage_shape(self, num_pages: int, page_size: int) -> tuple:
+        """prefix + (num_pages, page_size) + suffix — the pool array shape."""
         return tuple(self.prefix) + (num_pages, page_size) + tuple(self.suffix)
 
 
@@ -190,6 +198,7 @@ class PrefixCache:
         return True
 
     def touch(self, page: int) -> None:
+        """Refresh a cached page's LRU timestamp (prefix re-match)."""
         node = self._by_page.get(page)
         if node is not None:
             node.last_use = self._tick()
@@ -318,6 +327,7 @@ class PagePool:
 
     @property
     def pages_free(self) -> int:
+        """Pages on the free list (unreferenced, unregistered)."""
         return len(self._free)
 
     @property
@@ -336,6 +346,7 @@ class PagePool:
         return self._high_water
 
     def ref(self, page: int) -> int:
+        """Current refcount of one page."""
         return int(self._ref[page])
 
     def _free_push(self, page: int) -> None:
@@ -438,7 +449,43 @@ class PagePool:
             self._free_push(p)
 
     def tokens_capacity(self) -> int:
+        """Total token positions the pool can hold."""
         return self.num_pages * self.page_size
+
+
+class CrossKVPool(PagePool):
+    """Refcounted pages for encoder–decoder *cross-attention* K/V.
+
+    Whisper-style serving computes each request's cross K/V exactly once
+    (from the audio encoder's output) and then only ever *reads* it during
+    decode — so this pool is a deliberately narrowed :class:`PagePool`:
+
+    * **Read-only after prefill.** Pages are written once by the encode
+      path's scatter and never mutated, so copy-on-write never applies and
+      the pool refuses a prefix cache (cross K/V is keyed by audio content,
+      not by token prefixes — the radix index would never match it).
+    * **Refcounts still matter.** Release and preemption go through the
+      same ``alloc`` / ``decref`` / ``free`` lifecycle as self-attention
+      pages, so the conservation invariant ``pages_free + pages_in_use ==
+      num_pages`` holds under forced preemption (property-tested).
+    * **Quantization composes.** int8 cross pages carry per-(row, head)
+      scale leaves exactly like self-attention pages
+      (:func:`repro.serve.quant.quantize_leaf_specs`); the decode-time
+      gather dequantizes after the read.
+
+    The trash page exists here too: dead decode slots point their cross
+    page table at it (with ``frames_len = 0`` masking the whole read).
+    """
+
+    def __init__(self, leaf_specs, *, num_pages: int, page_size: int,
+                 shardings=None, prefix_cache: bool = False):
+        if prefix_cache:
+            raise ValueError(
+                "CrossKVPool does not support a prefix cache: cross K/V is "
+                "content-addressed by audio, not by token prefixes")
+        super().__init__(leaf_specs, num_pages=num_pages,
+                         page_size=page_size, shardings=shardings,
+                         prefix_cache=False)
 
 
 @dataclasses.dataclass
@@ -466,6 +513,7 @@ class KVHandoff:
     released: bool = False
 
     def release(self) -> None:
+        """Drop the handoff's page references (idempotent)."""
         if self.released:
             return
         self.released = True

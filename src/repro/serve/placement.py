@@ -28,7 +28,11 @@ dispatch map consumed inside the jitted step (a traced argument, so
 re-placement never recompiles).  The identity plan reproduces the unplaced
 integer slot indices exactly, keeping token streams bitwise unchanged.
 """
+
 from __future__ import annotations
+
+__all__ = ["PlacementPlan", "apply_placement", "identity_plan",
+           "imbalance", "plan_placement"]
 
 import dataclasses
 

@@ -35,7 +35,12 @@ full-precision stream on >= 95% of greedy tokens" (tests + bench), while
 quant-on streams stay BIT-identical across prefix-cache on/off, COW,
 preemption and tp — the pages hold the same int8 content either way.
 """
+
 from __future__ import annotations
+
+__all__ = ["Int8KVQuant", "SCALE_SUFFIX", "dequantize_params",
+           "kv_bytes_per_token", "make_kv_quant", "quantize_leaf_specs",
+           "quantize_param_specs", "quantize_params"]
 
 import jax
 import jax.numpy as jnp
@@ -68,6 +73,7 @@ class Int8KVQuant:
         return int8_compress(block, axis=-1)
 
     def dequantize(self, q, scale, dtype=jnp.float32):
+        """int8 rows + per-row scale -> ``dtype`` values."""
         return int8_decompress(q, scale, axis=-1, dtype=dtype)
 
 

@@ -1,6 +1,10 @@
 """Token sampling heads (jit-friendly, vocab-padding aware) and the
 speculative-decode acceptance rules (host-side, per slot)."""
+
 from __future__ import annotations
+
+__all__ = ["greedy", "sample_temperature", "sample_top_k",
+           "sample_top_p", "spec_rejection_sample", "spec_verify_greedy"]
 
 import jax
 import jax.numpy as jnp
@@ -21,6 +25,8 @@ def greedy(logits, *, true_vocab=None):
 
 def sample_top_k(key, logits, *, k: int = 40, temperature: float = 1.0,
                  true_vocab=None):
+    """Sample from the ``k`` highest logits at ``temperature`` (greedy
+    when temperature <= 0); pad-vocab rows are masked out first."""
     logits = _mask_pad(logits, true_vocab).astype(jnp.float32)
     if temperature <= 0:
         return greedy(logits)

@@ -41,7 +41,12 @@ Five mechanisms:
   *plus* tokens generated so far, usually re-matching its own parked
   pages, which preserves greedy token streams exactly).
 """
+
 from __future__ import annotations
+
+__all__ = ["FREE", "LIVE", "PREFILL",
+           "ChunkJob", "EncodeJob", "Scheduler",
+           "prefill_tokens"]
 
 import dataclasses
 from typing import Optional
@@ -55,8 +60,17 @@ FREE, PREFILL, LIVE = "free", "prefill", "live"
 
 def prefill_tokens(req) -> np.ndarray:
     """The token sequence a (possibly resumed) request must prefill:
-    prompt plus anything generated before a preemption."""
+    encoder pseudo-tokens (the VLM image prefix — negative ids hashed from
+    the embedding content, see
+    :func:`repro.serve.engine.encoder_prefix_tokens`), then the prompt,
+    then anything generated before a preemption.  Because the pseudo-tokens
+    ARE ordinary (negative) int32s, admission, prefix matching, page
+    registration, chunking, replay and release all treat an image prefix
+    exactly like text — zero special cases downstream."""
     toks = np.asarray(req.prompt, np.int32)
+    enc = getattr(req, "encoder_tokens", None)
+    if enc is not None:
+        toks = np.concatenate([np.asarray(enc, np.int32), toks])
     if req.output:
         toks = np.concatenate([toks, np.asarray(req.output, np.int32)])
     return toks
@@ -73,12 +87,36 @@ class ChunkJob:
     pages: Optional[np.ndarray]  # (C // page_size,) page ids; None = dense
     is_last: bool
     total: int                  # full prefill length of the request
+    embeds: Optional[np.ndarray] = None   # (C, d) rows for pseudo-tokens
+
+
+@dataclasses.dataclass
+class EncodeJob:
+    """One audio chunk for the streaming encoder (enc-dec slots only).
+
+    The engine runs the bidirectional encoder over ``frames`` through the
+    Executor protocol, projects cross K/V, and scatters it into ``pages``
+    of the cross pool; the slot's decoder prefill chunks are held back
+    until every encode job has committed."""
+    slot: int
+    req: object
+    frames: np.ndarray          # (Cf, d) f32, right-padded to the chunk
+    start: int                  # absolute frame position of frames[0]
+    n_valid: int                # real (non-pad) frames in this chunk
+    pages: np.ndarray           # (Cf // cross_page_size,) cross page ids
 
 
 class Scheduler:
+    """Serving policy, all host-side numpy: FIFO admission with all-or-
+    nothing page allocation (self-KV and, for enc-dec, cross-KV), prefix-
+    cache matching, per-tick encode/prefill chunk planning, decode-page
+    growth, and recompute-flavor preemption.  The engine executes the
+    jobs this class plans; it never touches device memory itself."""
+
     def __init__(self, *, max_slots: int, max_len: int,
                  pool: Optional[PagePool] = None, prefill_chunk: int = 64,
-                 chunks_per_tick: int = 2):
+                 chunks_per_tick: int = 2,
+                 cross_pool: Optional[PagePool] = None, max_frames: int = 0):
         self.max_slots, self.max_len = max_slots, max_len
         self.pool = pool
         self.queue: list = []
@@ -112,16 +150,38 @@ class Scheduler:
             self.prefill_chunk = prefill_chunk
             self.table = None
             self.n_pages = None
+        # enc-dec: a second, read-only page table per slot for cross-KV
+        self.cross_pool = cross_pool
+        if cross_pool is not None:
+            assert pool is not None, "cross-KV pages require a paged pool"
+            cps = cross_pool.page_size
+            self.cross_page_size = cps
+            self.encode_chunk = max(
+                cps, ((self.prefill_chunk + cps - 1) // cps) * cps)
+            self.cross_pages_per_slot = max(1, (max_frames + cps - 1) // cps)
+            if cross_pool.num_pages < self.cross_pages_per_slot:
+                raise ValueError(
+                    f"cross pool of {cross_pool.num_pages} pages cannot hold "
+                    f"one max_frames={max_frames} request "
+                    f"({self.cross_pages_per_slot} pages)")
+            self.cross_table = np.zeros(
+                (max_slots, self.cross_pages_per_slot), np.int32)
+            self.cross_n = np.zeros(max_slots, np.int64)
+            self.enc_total = np.zeros(max_slots, np.int64)
+            self.enc_done = np.zeros(max_slots, np.int64)
 
     # -- queries -------------------------------------------------------------
 
     def live_slots(self) -> list[int]:
+        """Slots currently decoding."""
         return [s for s in range(self.max_slots) if self.status[s] == LIVE]
 
     def prefilling_slots(self) -> list[int]:
+        """Slots still consuming prefill (or encode) chunks."""
         return [s for s in range(self.max_slots) if self.status[s] == PREFILL]
 
     def has_work(self) -> bool:
+        """True while anything is queued or resident."""
         return bool(self.queue) or any(s != FREE for s in self.status)
 
     def held_pages(self) -> int:
@@ -133,9 +193,17 @@ class Scheduler:
         point where control returns to the caller."""
         return int(self.n_pages.sum()) if self.pool is not None else 0
 
+    def held_cross_pages(self) -> int:
+        """Cross-KV page references held by slots.  Cross pages are never
+        shared (no prefix cache on the cross pool), so this equals
+        ``cross_pool.pages_in_use`` whenever control is with the caller —
+        the conservation check the preemption property tests assert."""
+        return int(self.cross_n.sum()) if self.cross_pool is not None else 0
+
     # -- admission -----------------------------------------------------------
 
     def submit(self, req) -> None:
+        """Append to the admission FIFO (no validation here)."""
         self.queue.append(req)
 
     def admit(self) -> tuple[list[tuple[int, object]], list[object]]:
@@ -172,6 +240,22 @@ class Scheduler:
                 if tail is None:
                     self.pool.decref(cached)    # back to parked / shared
                     break                       # queue head waits for pages
+                if self.cross_pool is not None:
+                    # all-or-nothing across BOTH pools: the cross pages for
+                    # every audio frame allocate with the self pages or the
+                    # whole admission rolls back
+                    frames = getattr(req, "encoder_input", None)
+                    n_frames = 0 if frames is None else len(frames)
+                    cps = self.cross_page_size
+                    cneed = (n_frames + cps - 1) // cps
+                    cross = self.cross_pool.alloc(cneed)
+                    if cross is None:
+                        self.pool.decref(cached + tail)
+                        break
+                    self.cross_table[slot, :cneed] = cross
+                    self.cross_n[slot] = cneed
+                    self.enc_total[slot] = n_frames
+                    self.enc_done[slot] = 0
                 self.table[slot, :need] = cached + tail
                 self.n_pages[slot] = need
                 self.replay[slot] = cached_tok == total
@@ -249,31 +333,81 @@ class Scheduler:
                                 self.pool.trash_page, np.int32)
             else:
                 pages = self.table[slot, start // ps:(start + C) // ps].copy()
+        # VLM image prefix: rows of the precomputed embeddings ride along
+        # with the chunk that covers their (negative pseudo-token) positions
+        embeds = None
+        enc_tok = getattr(req, "encoder_tokens", None)
+        enc_inp = getattr(req, "encoder_input", None)
+        if enc_tok is not None and enc_inp is not None \
+                and start < len(enc_tok):
+            enc_inp = np.asarray(enc_inp, np.float32)
+            buf = np.zeros((C, enc_inp.shape[-1]), np.float32)
+            take = min(C, len(enc_tok) - start)
+            buf[:take] = enc_inp[start:start + take]
+            embeds = buf
         return ChunkJob(slot=slot, req=req, tokens=toks, start=start,
                         n_valid=valid, pages=pages,
-                        is_last=start + C >= padded, total=total)
+                        is_last=start + C >= padded, total=total,
+                        embeds=embeds)
 
-    def next_chunks(self) -> list[ChunkJob]:
+    def _padded_enc_total(self, slot: int) -> int:
+        cps = self.cross_page_size
+        return (int(self.enc_total[slot]) + cps - 1) // cps * cps
+
+    def _make_encode_job(self, slot: int, start: int) -> EncodeJob:
+        req = self.slot_req[slot]
+        total = int(self.enc_total[slot])
+        padded = self._padded_enc_total(slot)
+        cps = self.cross_page_size
+        C = min(self.encode_chunk, padded - start)
+        frames = np.asarray(req.encoder_input, np.float32)
+        valid = max(0, min(C, total - start))
+        buf = np.zeros((C, frames.shape[-1]), np.float32)
+        buf[:valid] = frames[start:start + valid]
+        pages = self.cross_table[slot, start // cps:(start + C) // cps].copy()
+        return EncodeJob(slot=slot, req=req, frames=buf, start=start,
+                         n_valid=valid, pages=pages)
+
+    def next_chunks(self) -> list:
         """Plan this tick's prefill work.  Dense mode: every prefilling slot
         gets its whole prompt as one job (they run concurrently on the
         engine's farm).  Paged mode: up to ``chunks_per_tick`` page-aligned
-        chunks, round-robin across prefilling slots."""
+        chunks, round-robin across prefilling slots.  Enc-dec slots emit
+        their :class:`EncodeJob` audio chunks first (counted against the
+        same budget); decoder :class:`ChunkJob` chunks follow only once the
+        whole clip is planned — the engine commits encode jobs before
+        prompt chunks inside a tick, so cross-KV pages are always written
+        before the first decoder read."""
         slots = self.prefilling_slots()
         if not slots:
             return []
         if self.pool is None:
             return [self._make_job(s, 0) for s in slots]
-        jobs: list[ChunkJob] = []
+        jobs: list = []
         planned = {s: int(self.prefill_done[s]) for s in slots}
-        order = sorted(slots, key=lambda s: (s - self._rr) % self.max_slots)
+        enc_planned = {s: int(self.enc_done[s]) for s in slots} \
+            if self.cross_pool is not None else {}
         i = 0
+        order = sorted(slots, key=lambda s: (s - self._rr) % self.max_slots)
+
+        def pending(s):
+            if self.cross_pool is not None \
+                    and enc_planned[s] < self._padded_enc_total(s):
+                return True
+            return planned[s] < self._padded_total(s)
+
         while len(jobs) < self.chunks_per_tick:
-            ready = [s for s in order if planned[s] < self._padded_total(s)]
+            ready = [s for s in order if pending(s)]
             if not ready:
                 break
             slot = ready[i % len(ready)]
-            job = self._make_job(slot, planned[slot])
-            planned[slot] += len(job.tokens)
+            if self.cross_pool is not None \
+                    and enc_planned[slot] < self._padded_enc_total(slot):
+                job = self._make_encode_job(slot, enc_planned[slot])
+                enc_planned[slot] += len(job.frames)
+            else:
+                job = self._make_job(slot, planned[slot])
+                planned[slot] += len(job.tokens)
             jobs.append(job)
             i += 1
         if jobs:
@@ -297,7 +431,13 @@ class Scheduler:
                        min(valid, len(toks)) // self.page_size):
             pool.prefix.insert(toks, i, int(self.table[slot, i]))
 
+    def encode_done(self, job: EncodeJob) -> None:
+        """An audio chunk's cross K/V has been scattered into its pages."""
+        self.enc_done[job.slot] = job.start + len(job.frames)
+
     def chunk_done(self, job: ChunkJob) -> None:
+        """Commit one prefill chunk: advance progress, register now-full
+        clean pages for prefix sharing, flip the slot LIVE on the last."""
         slot = job.slot
         self.prefill_done[slot] = job.start + len(job.tokens)
         if self.pool is not None and not self.replay[slot]:
@@ -481,6 +621,14 @@ class Scheduler:
             self.table[slot, :n] = 0
             self.n_pages[slot] = 0
             self.replay[slot] = False
+        if self.cross_pool is not None and self.cross_n[slot]:
+            # cross pages are never registered/shared: decref -> free list
+            nc = int(self.cross_n[slot])
+            self.cross_pool.decref(self.cross_table[slot, :nc].tolist())
+            self.cross_table[slot, :nc] = 0
+            self.cross_n[slot] = 0
+            self.enc_total[slot] = 0
+            self.enc_done[slot] = 0
         self.status[slot] = FREE
         self.slot_req[slot] = None
         self.lengths[slot] = 0

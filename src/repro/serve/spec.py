@@ -28,7 +28,11 @@ are *proposals* — correctness never depends on them, so a drafter may be
 arbitrarily sloppy (wrong drafts are rejected by the verify rule and the
 stream continues bit-identically to non-speculative decode).
 """
+
 from __future__ import annotations
+
+__all__ = ["Drafter", "NgramDrafter", "TruncatedSelfDrafter",
+           "make_drafter"]
 
 import functools
 from typing import Protocol, runtime_checkable
@@ -51,7 +55,9 @@ class Drafter(Protocol):
     but determinism keeps acceptance counters reproducible run to run.
     """
 
-    def propose(self, tokens: np.ndarray, k: int) -> np.ndarray: ...
+    def propose(self, tokens: np.ndarray, k: int) -> np.ndarray:
+        """Up to ``k`` draft tokens continuing ``tokens`` (may be empty)."""
+        ...
 
 
 class NgramDrafter:
@@ -67,6 +73,7 @@ class NgramDrafter:
         self.max_n, self.min_n = max_n, min_n
 
     def propose(self, tokens: np.ndarray, k: int) -> np.ndarray:
+        """Tokens that followed the stream's own last n-gram, up to ``k``."""
         t = np.ascontiguousarray(tokens, np.int32)
         best = np.zeros(0, np.int32)
         if k <= 0:
@@ -139,6 +146,7 @@ class TruncatedSelfDrafter:
         self._next_logits = _next_logits
 
     def propose(self, tokens: np.ndarray, k: int) -> np.ndarray:
+        """Greedy rollout of the truncated model, one token at a time."""
         from repro.serve.sampling import greedy
         t = list(np.asarray(tokens, np.int32))
         out = []

@@ -29,7 +29,13 @@ story (the metric half is :mod:`repro.serve.metrics`):
   the workload from it, so a recorded run replays bit-identically under
   the virtual clock.
 """
+
 from __future__ import annotations
+
+__all__ = ["DEFAULT_LEN_MIX", "TrafficHarness", "TrafficRequest",
+           "VirtualClock", "WallClock", "bursty_arrivals",
+           "make_workload", "poisson_arrivals", "record_trace",
+           "run_traffic", "workload_from_trace"]
 
 import dataclasses
 import time
@@ -51,21 +57,38 @@ class TrafficRequest:
     max_new_tokens: int = 16
     session: int = -1               # -1: no shared prefix
     seed: Optional[int] = None      # per-request sampling seed (None: greedy)
+    encoder_input: Optional[np.ndarray] = None
+    #                                 (n, d_model) float32 encoder payload
+    #                                 (image-patch embeds / audio frames);
+    #                                 None keeps the request text-only
 
     def to_dict(self) -> dict:
-        return {"arrival": float(self.arrival),
-                "prompt": [int(t) for t in self.prompt],
-                "max_new_tokens": int(self.max_new_tokens),
-                "session": int(self.session),
-                "seed": None if self.seed is None else int(self.seed)}
+        """JSON-safe dict; float32 payloads survive the round trip exactly."""
+        d = {"arrival": float(self.arrival),
+             "prompt": [int(t) for t in self.prompt],
+             "max_new_tokens": int(self.max_new_tokens),
+             "session": int(self.session),
+             "seed": None if self.seed is None else int(self.seed)}
+        if self.encoder_input is not None:
+            # float32 -> Python float (double) -> JSON -> float32 is exact
+            # in both directions, so a replayed trace carries bit-identical
+            # payloads (and the prefix cache re-keys identically)
+            d["encoder_input"] = [
+                [float(x) for x in row]
+                for row in np.asarray(self.encoder_input, np.float32)]
+        return d
 
     @classmethod
     def from_dict(cls, d: dict) -> "TrafficRequest":
+        """Inverse of :meth:`to_dict`."""
+        enc = d.get("encoder_input")
         return cls(arrival=float(d["arrival"]),
                    prompt=np.asarray(d["prompt"], np.int32),
                    max_new_tokens=int(d["max_new_tokens"]),
                    session=int(d.get("session", -1)),
-                   seed=d.get("seed"))
+                   seed=d.get("seed"),
+                   encoder_input=None if enc is None
+                   else np.asarray(enc, np.float32))
 
 
 # -- arrival processes -------------------------------------------------------
@@ -97,10 +120,23 @@ def make_workload(*, kind: str = "poisson", n_requests: int, rate: float,
                   vocab: int, seed: int = 0, max_new_tokens: int = 16,
                   shared_prefix_len: int = 16, n_sessions: int = 4,
                   len_mix=DEFAULT_LEN_MIX, burst: int = 4,
-                  seeded_sampling: bool = False) -> list[TrafficRequest]:
+                  seeded_sampling: bool = False,
+                  encoder: Optional[str] = None,
+                  encoder_shape: Optional[tuple] = None,
+                  encoder_frac: float = 1.0,
+                  n_encoder_inputs: int = 4) -> list[TrafficRequest]:
     """A fully deterministic workload: every random draw comes from one
     ``np.random.default_rng(seed)`` in a fixed order, so the same
-    arguments always produce the identical request schedule."""
+    arguments always produce the identical request schedule.
+
+    ``encoder`` opens the multimodal band: ``"image"`` or ``"audio"``
+    attaches an ``(n, d_model)`` float32 payload of shape
+    ``encoder_shape`` to a fraction ``encoder_frac`` of requests, drawn
+    from a pool of ``n_encoder_inputs`` distinct payloads.  A session-
+    bound request always reuses its session's payload — the repeated-image
+    chat pattern VLM prefix caching exists for.  ``encoder=None`` (the
+    default) makes NO extra rng draws, so every pre-existing argument
+    combination keeps its exact request schedule."""
     rng = np.random.default_rng(seed)
     if kind == "poisson":
         arrivals = poisson_arrivals(n_requests, rate, rng)
@@ -115,16 +151,36 @@ def make_workload(*, kind: str = "poisson", n_requests: int, rate: float,
         prefixes = [rng.integers(0, vocab, size=shared_prefix_len)
                     for _ in range(n_sessions)]
     lengths = _mixed_lengths(n_requests, rng, len_mix)
+    enc_pool = []
+    if encoder is not None:
+        if encoder not in ("image", "audio"):
+            raise ValueError(
+                f"unknown encoder kind {encoder!r}; want 'image' or "
+                "'audio'")
+        if encoder_shape is None or len(encoder_shape) != 2:
+            raise ValueError(
+                "encoder workloads need encoder_shape=(n, d_model) — "
+                "n_image_tokens/n_audio_frames by the model's d_model")
+        enc_pool = [rng.standard_normal(encoder_shape).astype(np.float32)
+                    for _ in range(max(1, n_encoder_inputs))]
     out = []
     for i in range(n_requests):
         sess = int(rng.integers(0, n_sessions)) if prefixes else -1
         tail = rng.integers(0, vocab, size=int(lengths[i]))
         prompt = (np.concatenate([prefixes[sess], tail]) if sess >= 0
                   else tail).astype(np.int32)
+        enc = None
+        if enc_pool:
+            carry = bool(rng.random() < encoder_frac)
+            idx = (sess % len(enc_pool)) if sess >= 0 \
+                else int(rng.integers(0, len(enc_pool)))
+            if carry:
+                enc = enc_pool[idx]
         out.append(TrafficRequest(
             arrival=float(arrivals[i]), prompt=prompt,
             max_new_tokens=max_new_tokens, session=sess,
-            seed=i if seeded_sampling else None))
+            seed=i if seeded_sampling else None,
+            encoder_input=enc))
     return out
 
 
@@ -139,10 +195,12 @@ class VirtualClock:
         self.tick_time = tick_time
 
     def after_tick(self) -> float:
+        """Advance one tick; returns the new time."""
         self.now += self.tick_time
         return self.now
 
     def fast_forward(self, t: float) -> None:
+        """Jump ahead to ``t`` (never backwards)."""
         self.now = max(self.now, t)
 
 
@@ -154,12 +212,15 @@ class WallClock:
 
     @property
     def now(self) -> float:
+        """Seconds since construction."""
         return time.perf_counter() - self._t0
 
     def after_tick(self) -> float:
+        """Wall time advances on its own; just report it."""
         return self.now
 
     def fast_forward(self, t: float) -> None:
+        """Sleep (briefly) towards ``t``; the caller re-checks in a loop."""
         dt = t - self.now
         if dt > 0:
             time.sleep(min(dt, 0.05))       # re-checked by the caller's loop
@@ -197,6 +258,7 @@ class TrafficHarness:
         return self.engine.sched.has_work()
 
     def run(self, workload, *, max_ticks: int = 100_000) -> list[dict]:
+        """Drive the engine through the workload; returns the event log."""
         work = sorted(workload, key=lambda r: r.arrival)
         events = self.events = []
         track: dict[int, dict] = {}
@@ -209,16 +271,24 @@ class TrafficHarness:
                 self.clock.fast_forward(work[i].arrival)
             while i < len(work) and work[i].arrival <= self.clock.now:
                 tr = work[i]
+                # encoder payloads ride as an OPTIONAL kwarg so text-only
+                # submissions (and engines without the parameter, like the
+                # disaggregated pair) see the exact pre-multimodal call
+                kw = {} if tr.encoder_input is None \
+                    else {"encoder_input": tr.encoder_input}
                 rid = self.engine.submit(tr.prompt,
                                          max_new_tokens=tr.max_new_tokens,
-                                         seed=tr.seed)
+                                         seed=tr.seed, **kw)
                 req = self._submit_queue()[-1]
                 assert req.rid == rid
                 track[rid] = {"req": req, "seen": 0, "done": False}
-                events.append({"t": float(tr.arrival), "rid": rid,
-                               "kind": "submit",
-                               "prompt_len": int(len(tr.prompt)),
-                               "session": int(tr.session)})
+                ev = {"t": float(tr.arrival), "rid": rid,
+                      "kind": "submit",
+                      "prompt_len": int(len(tr.prompt)),
+                      "session": int(tr.session)}
+                if tr.encoder_input is not None:
+                    ev["encoder_len"] = int(len(tr.encoder_input))
+                events.append(ev)
                 i += 1
             self.engine.tick()
             now = self.clock.after_tick()
@@ -265,4 +335,5 @@ def record_trace(workload, events, outputs) -> dict:
 
 
 def workload_from_trace(trace: dict) -> list[TrafficRequest]:
+    """Rebuild the exact workload a :func:`record_trace` dict captured."""
     return [TrafficRequest.from_dict(d) for d in trace["workload"]]

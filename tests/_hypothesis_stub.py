@@ -46,8 +46,14 @@ def booleans():
     return _Strategy(lambda rng: bool(rng.getrandbits(1)), lambda: False)
 
 
+def tuples(*elements):
+    return _Strategy(lambda rng: tuple(e.sample(rng) for e in elements),
+                     lambda: tuple(e.minimal() for e in elements))
+
+
 strategies = types.SimpleNamespace(integers=integers, floats=floats,
-                                   lists=lists, booleans=booleans)
+                                   lists=lists, booleans=booleans,
+                                   tuples=tuples)
 
 
 def settings(max_examples: int = DEFAULT_MAX_EXAMPLES, deadline=None,

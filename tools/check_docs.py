@@ -1,0 +1,172 @@
+"""Docs gate: broken intra-repo markdown links and missing docstrings.
+
+Two checks, both enforced by CI (the ``docs`` job) and by
+``tests/test_docs.py`` in tier-1:
+
+* **links** — every relative link in a tracked ``*.md`` file must resolve
+  to a file or directory inside the repo.  External schemes
+  (``http(s)://``, ``mailto:``) and pure in-page anchors (``#...``) are
+  skipped; an intra-repo link's ``#fragment`` is stripped before the
+  existence check (heading anchors are not validated).
+* **docstrings** — every public module in the serving stack
+  (``src/repro/serve/*.py`` plus ``src/repro/models/api.py``) must carry a
+  module docstring and an ``__all__``, and every public module-level
+  ``def`` / ``class`` (and public method of a public class) must carry its
+  own docstring.  A method overriding a documented method of a base class
+  defined in the same module inherits that documentation (``help()`` walks
+  the MRO) and is not flagged.  One-line docstrings count.
+
+Run it directly::
+
+    python tools/check_docs.py            # check everything
+    python tools/check_docs.py --links    # markdown links only
+    python tools/check_docs.py --docstrings
+
+Exit status 0 = clean, 1 = findings (one per line on stdout).
+"""
+from __future__ import annotations
+
+import argparse
+import ast
+import re
+import sys
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parent.parent
+
+# [text](target) — target captured lazily so ")" inside text can't bleed in;
+# image links (![alt](target)) match the same way
+_LINK = re.compile(r"\[[^\]]*\]\(([^)\s]+)(?:\s+\"[^\"]*\")?\)")
+
+# modules whose public surface must be documented
+DOC_MODULES = ("src/repro/serve", "src/repro/models/api.py")
+
+
+def iter_markdown(repo: Path):
+    skip = {".git", ".venv", "node_modules", "__pycache__"}
+    for p in sorted(repo.rglob("*.md")):
+        if not any(part in skip for part in p.parts):
+            yield p
+
+
+def check_links(repo: Path) -> list[str]:
+    problems = []
+    for md in iter_markdown(repo):
+        text = md.read_text(encoding="utf-8")
+        # fenced code blocks hold example syntax, not real links
+        text = re.sub(r"```.*?```", "", text, flags=re.S)
+        for m in _LINK.finditer(text):
+            target = m.group(1)
+            if target.startswith(("http://", "https://", "mailto:")):
+                continue
+            if target.startswith("#"):         # in-page anchor
+                continue
+            path = target.split("#", 1)[0]
+            if not path:
+                continue
+            resolved = (md.parent / path).resolve()
+            if not resolved.exists():
+                problems.append(
+                    f"{md.relative_to(repo)}: broken link -> {target}")
+    return problems
+
+
+def _documented_methods(cls: ast.ClassDef, classes: dict) -> set[str]:
+    """Method names documented on ``cls`` or any same-module ancestor."""
+    out = set()
+    stack, seen = [cls], set()
+    while stack:
+        c = stack.pop()
+        if c.name in seen:
+            continue
+        seen.add(c.name)
+        for sub in c.body:
+            if isinstance(sub, (ast.FunctionDef, ast.AsyncFunctionDef)) \
+                    and ast.get_docstring(sub):
+                out.add(sub.name)
+        for base in c.bases:
+            if isinstance(base, ast.Name) and base.id in classes:
+                stack.append(classes[base.id])
+    return out
+
+
+def _missing_docstrings(tree: ast.Module, rel: str) -> list[str]:
+    problems = []
+    if not ast.get_docstring(tree):
+        problems.append(f"{rel}: missing module docstring")
+    has_all = any(
+        isinstance(n, ast.Assign) and any(
+            isinstance(t, ast.Name) and t.id == "__all__" for t in n.targets)
+        for n in tree.body)
+    if not has_all:
+        problems.append(f"{rel}: missing __all__")
+    classes = {n.name: n for n in tree.body if isinstance(n, ast.ClassDef)}
+    for node in tree.body:
+        if not isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                 ast.ClassDef)):
+            continue
+        if node.name.startswith("_"):
+            continue
+        if not ast.get_docstring(node):
+            problems.append(
+                f"{rel}:{node.lineno}: public "
+                f"{'class' if isinstance(node, ast.ClassDef) else 'function'}"
+                f" {node.name!r} has no docstring")
+        if isinstance(node, ast.ClassDef):
+            inherited = set()
+            for base in node.bases:
+                if isinstance(base, ast.Name) and base.id in classes:
+                    inherited |= _documented_methods(classes[base.id],
+                                                     classes)
+            for sub in node.body:
+                if isinstance(sub, (ast.FunctionDef, ast.AsyncFunctionDef)) \
+                        and not sub.name.startswith("_") \
+                        and not ast.get_docstring(sub) \
+                        and sub.name not in inherited:
+                    problems.append(
+                        f"{rel}:{sub.lineno}: public method "
+                        f"{node.name}.{sub.name} has no docstring")
+    return problems
+
+
+def check_docstrings(repo: Path) -> list[str]:
+    problems = []
+    for entry in DOC_MODULES:
+        root = repo / entry
+        if root.is_dir():
+            files = sorted(root.rglob("*.py"))
+        elif root.is_file():
+            files = [root]
+        else:
+            continue
+        for f in files:
+            rel = str(f.relative_to(repo))
+            tree = ast.parse(f.read_text(encoding="utf-8"), filename=rel)
+            problems.extend(_missing_docstrings(tree, rel))
+    return problems
+
+
+def main(argv=None) -> int:
+    """CLI entry point; returns the process exit status."""
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--links", action="store_true",
+                    help="markdown link check only")
+    ap.add_argument("--docstrings", action="store_true",
+                    help="docstring/__all__ check only")
+    ap.add_argument("--repo", type=Path, default=REPO)
+    args = ap.parse_args(argv)
+    run_all = not (args.links or args.docstrings)
+    problems = []
+    if args.links or run_all:
+        problems += check_links(args.repo)
+    if args.docstrings or run_all:
+        problems += check_docstrings(args.repo)
+    for p in problems:
+        print(p)
+    if problems:
+        print(f"\n{len(problems)} documentation problem(s)", file=sys.stderr)
+    return 1 if problems else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
